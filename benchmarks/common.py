@@ -1,0 +1,42 @@
+"""Shared helpers for the paper-table benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.affinity import affinity_matrix, estimate_k
+from repro.core.alid import ALIDConfig, detect_clusters
+from repro.core.peeling import ds_detect, iid_detect
+from repro.data import auto_lsh_params, make_blobs_with_noise
+from repro.utils import avg_f1_score
+
+
+def run_alid(spec, seed=0, seg_scale=8.0, a_cap=None, **cfg_kw):
+    sizes = np.bincount(spec.labels[spec.labels >= 0])
+    a_star = int(sizes.max()) if sizes.size else 64
+    cfg = ALIDConfig(
+        a_cap=a_cap or min(512, max(64, int(a_star * 1.5))), delta=128,
+        lsh=auto_lsh_params(spec.points, seg_scale=seg_scale),
+        seeds_per_round=32, max_rounds=64, **cfg_kw)
+    t0 = time.time()
+    res = detect_clusters(spec.points, cfg, jax.random.PRNGKey(seed))
+    dt = time.time() - t0
+    return avg_f1_score(spec.labels, res.labels), dt, res
+
+
+def run_full_matrix(spec, solver="iid"):
+    import jax.numpy as jnp
+    pts = jnp.asarray(spec.points)
+    k = float(estimate_k(pts))
+    t0 = time.time()
+    a = affinity_matrix(pts, k)
+    res = iid_detect(a) if solver == "iid" else ds_detect(a)
+    dt = time.time() - t0
+    return avg_f1_score(spec.labels, res.labels), dt, res
+
+
+def csv_line(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

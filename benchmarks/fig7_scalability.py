@@ -1,0 +1,46 @@
+"""Paper Fig. 7 / Table 1: empirical runtime-growth exponents for the three
+a* regimes. Under log-log axes the paper reports slopes ~2 (a*=wn),
+~1+eta (a*=n^eta), ~1 (a*<=P) for ALID, vs ~2 for all full-matrix baselines.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, run_alid, run_full_matrix
+from repro.data import make_regime_dataset
+
+
+def fit_slope(ns, ts):
+    return float(np.polyfit(np.log(ns), np.log(np.maximum(ts, 1e-3)), 1)[0])
+
+
+def main(quick: bool = True):
+    ns = [600, 1200, 2400] if quick else [600, 1200, 2400, 4800, 9600]
+    out = {}
+    for regime, kw in [("omega", dict(omega=0.8)), ("eta", dict(eta=0.9)),
+                       ("P", dict(P=400))]:
+        times, quals = [], []
+        for n in ns:
+            spec = make_regime_dataset(n, regime, d=16, seed=2, **kw)
+            f, dt, _ = run_alid(spec)
+            times.append(dt)
+            quals.append(f)
+        slope = fit_slope(ns, times)
+        out[regime] = (slope, quals[-1])
+        csv_line(f"fig7/alid_{regime}", times[-1] * 1e6,
+                 f"slope={slope:.2f};avgf_last={quals[-1]:.3f}")
+    # quadratic baseline reference on the omega regime (small n only)
+    bt = []
+    bns = ns[:2]
+    for n in bns:
+        spec = make_regime_dataset(n, "omega", d=16, seed=2, omega=0.8)
+        _, dt, _ = run_full_matrix(spec, "iid")
+        bt.append(dt)
+    csv_line("fig7/iid_omega", bt[-1] * 1e6,
+             f"slope={fit_slope(bns, bt):.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main(quick=False)

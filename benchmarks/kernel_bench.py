@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks. On this CPU container the production dispatch is
+the jnp reference path (what XLA lowers for the dry-run); Pallas interpret
+mode is a correctness vehicle, not a speed one — wall numbers here are the
+CPU ref path, per call, after jit warmup."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.kernels import ref
+
+
+def timeit(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def main(quick: bool = True):
+    rng = np.random.default_rng(0)
+
+    q = jnp.asarray(rng.normal(size=(1024, 64)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(4096, 64)), jnp.float32)
+    aff = jax.jit(lambda a, b: ref.affinity_ref(a, b, jnp.float32(0.2)))
+    us = timeit(aff, q, c)
+    csv_line("kernel/affinity_1kx4k_d64", us,
+             f"gflops={2*1024*4096*64/us/1e3:.1f}")
+
+    qq = jnp.asarray(rng.normal(size=(1, 8, 512, 64)), jnp.bfloat16)
+    kk = jnp.asarray(rng.normal(size=(1, 2, 512, 64)), jnp.bfloat16)
+    att = jax.jit(lambda a, b, v: ref.attention_ref(a, b, v, causal=True))
+    us = timeit(att, qq, kk, kk)
+    csv_line("kernel/flash_attn_ref_512", us,
+             f"gflops={4*8*512*512*64/us/1e3:.1f}")
+
+    msg = jnp.asarray(rng.normal(size=(20000, 64)), jnp.float32)
+    seg = jnp.asarray(np.sort(rng.integers(0, 2000, 20000)), jnp.int32)
+    sm = jax.jit(lambda m, s: ref.segment_matmul_ref(m, s, 2000))
+    us = timeit(sm, msg, seg)
+    csv_line("kernel/segment_sum_20k_d64", us, f"edges_per_us={20000/us:.1f}")
+
+    table = jnp.asarray(rng.normal(size=(100000, 32)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 100000, 8192), jnp.int32)
+    bags = jnp.asarray(np.sort(rng.integers(0, 1024, 8192)), jnp.int32)
+    eb = jax.jit(lambda t, i, b: ref.embedding_bag_ref(t, i, b, 1024))
+    us = timeit(eb, table, idx, bags)
+    csv_line("kernel/embedding_bag_8k", us, f"lookups_per_us={8192/us:.1f}")
+
+    x = jnp.asarray(rng.normal(size=(8192, 64)), jnp.float32)
+    proj = jnp.asarray(rng.normal(size=(4, 8, 64)), jnp.float32)
+    bias = jnp.asarray(rng.uniform(0, 1, size=(4, 8)), jnp.float32)
+    lh = jax.jit(lambda a, p, b: ref.lsh_hash_ref(a, p, b, 1.0))
+    us = timeit(lh, x, proj, bias)
+    csv_line("kernel/lsh_hash_8k_L4m8", us, f"points_per_us={8192/us:.1f}")
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,52 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark runner: every paper table/figure + kernel micro-benches + the
+roofline summary (reads dry-run artifacts if present).
+
+    PYTHONPATH=src python -m benchmarks.run          # quick (CI-sized)
+    PYTHONPATH=src python -m benchmarks.run --full
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    quick = not args.full
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+
+    from benchmarks import (fig6_sparsity, fig7_scalability, fig11_noise,
+                            kernel_bench, table2_speedup)
+    for name, mod in [("fig6", fig6_sparsity), ("fig7", fig7_scalability),
+                      ("table2", table2_speedup), ("fig11", fig11_noise),
+                      ("kernels", kernel_bench)]:
+        try:
+            mod.main(quick=quick)
+        except Exception as e:  # keep the suite running; report the failure
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
+            print(f"{name}/error,0,{type(e).__name__}")
+
+    # roofline summary (dominant-term counts) if dry-run artifacts exist
+    try:
+        from benchmarks.roofline import build_rows
+        rows = [r for r in build_rows("single") if r["status"] == "ok"]
+        if rows:
+            from collections import Counter
+            doms = Counter(r["dominant"] for r in rows)
+            best = max(rows, key=lambda r: r["roofline_frac"])
+            print(f"roofline/summary,0,cells={len(rows)};"
+                  + ";".join(f"{k}_bound={v}" for k, v in doms.items())
+                  + f";best_frac={best['roofline_frac']:.2f}({best['cell']})")
+    except Exception as e:
+        print(f"roofline/error,0,{type(e).__name__}")
+
+    print(f"total/wall,{(time.time()-t0)*1e6:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: detect dominant clusters in a noisy point cloud with ALID.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+The data mimics the paper's synthetic setup: Gaussian clusters buried in
+uniform background noise; ALID finds the clusters without knowing their
+number and leaves the noise unlabeled (-1).
+"""
+
+import jax
+import numpy as np
+
+from repro.core.alid import ALIDConfig, detect_clusters
+from repro.core.affinity import affinity_matrix, estimate_k
+from repro.core.peeling import iid_detect
+from repro.data import auto_lsh_params, make_blobs_with_noise
+from repro.utils import avg_f1_score
+
+
+def main():
+    spec = make_blobs_with_noise(n_clusters=8, cluster_size=50, n_noise=600,
+                                 d=24, seed=42)
+    print(f"data: {spec.points.shape[0]} points "
+          f"({8 * 50} in clusters, 600 noise), d={spec.points.shape[1]}")
+
+    cfg = ALIDConfig(a_cap=96, delta=96, lsh=auto_lsh_params(spec.points),
+                     seeds_per_round=16, max_rounds=40)
+    res = detect_clusters(spec.points, cfg, jax.random.PRNGKey(0))
+    print(f"ALID: {len(res.densities)} dominant clusters "
+          f"(densities {np.round(res.densities, 3).tolist()})")
+    print(f"ALID AVG-F = {avg_f1_score(spec.labels, res.labels):.3f}")
+
+    # reference: the O(n^2) full-matrix IID baseline the paper compares against
+    import jax.numpy as jnp
+    pts = jnp.asarray(spec.points)
+    ref = iid_detect(affinity_matrix(pts, float(estimate_k(pts))))
+    print(f"IID  AVG-F = {avg_f1_score(spec.labels, ref.labels):.3f} "
+          f"(full affinity matrix: {spec.points.shape[0]}^2 entries)")
+
+
+if __name__ == "__main__":
+    main()

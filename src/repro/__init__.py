@@ -1,0 +1,3 @@
+"""repro: ALID (Scalable Dominant Cluster Detection) as a multi-pod JAX framework."""
+
+__version__ = "0.1.0"

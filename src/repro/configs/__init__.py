@@ -1,0 +1,7 @@
+from repro.configs.registry import (  # noqa: F401
+    ARCH_IDS,
+    Cell,
+    get_arch,
+    all_cells,
+    get_cell,
+)

@@ -1,0 +1,28 @@
+"""deepseek-7b [arXiv:2401.02954; hf]: 30L d_model=4096 32H (GQA kv=32 = MHA)
+head_dim=128 d_ff=11008 vocab=102400 — llama architecture."""
+
+import jax.numpy as jnp
+
+from repro.configs.registry import Cell, make_lm_cell
+from repro.models.transformer import LMConfig
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+CONFIG = LMConfig(
+    name="deepseek-7b",
+    n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=11008, vocab=102_400,
+    pattern=("full",),
+    tie_embeddings=False, rope_theta=10_000.0, dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = LMConfig(
+    name="deepseek-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=160, vocab=512, pattern=("full",), tie_embeddings=False,
+    dtype=jnp.float32, remat=False,
+)
+
+
+def make_cell(shape: str) -> Cell:
+    return make_lm_cell("deepseek-7b", CONFIG, shape, full_attention_only=True)

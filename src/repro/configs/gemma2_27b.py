@@ -1,0 +1,36 @@
+"""gemma2-27b [arXiv:2408.00118; hf]: 46L d_model=4608 32H (GQA kv=16)
+head_dim=128 d_ff=36864 vocab=256000 — local(4096)+global alternating,
+attention softcap 50, final softcap 30, post-norms, sqrt(d) embed scaling."""
+
+import jax.numpy as jnp
+
+from repro.configs.registry import Cell, make_lm_cell
+from repro.models.transformer import LMConfig
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+CONFIG = LMConfig(
+    name="gemma2-27b",
+    n_layers=46, d_model=4608, n_heads=32, n_kv_heads=16, head_dim=128,
+    d_ff=36864, vocab=256_000,
+    pattern=("local", "full"), window=4096,
+    attn_softcap=50.0, final_softcap=30.0,
+    post_norms=True, embed_scale=True, tie_embeddings=True,
+    rope_theta=10_000.0, dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = LMConfig(
+    name="gemma2-smoke",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512,
+    pattern=("local", "full"), window=8,
+    attn_softcap=50.0, final_softcap=30.0,
+    post_norms=True, embed_scale=True, tie_embeddings=True,
+    dtype=jnp.float32, remat=False,
+)
+
+
+def make_cell(shape: str) -> Cell:
+    # alternating local/global: decode over 500k context is O(S) per token,
+    # local layers are windowed -> runs (DESIGN.md long_500k applicability)
+    return make_lm_cell("gemma2-27b", CONFIG, shape, full_attention_only=False)

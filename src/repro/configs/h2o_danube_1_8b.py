@@ -1,0 +1,30 @@
+"""h2o-danube-1.8b [arXiv:2401.16818; hf]: 24L d_model=2560 32H (GQA kv=8)
+head_dim=80 d_ff=6912 vocab=32000 — llama+mistral mix with sliding-window
+attention (4096) throughout."""
+
+import jax.numpy as jnp
+
+from repro.configs.registry import Cell, make_lm_cell
+from repro.models.transformer import LMConfig
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+CONFIG = LMConfig(
+    name="h2o-danube-1.8b",
+    n_layers=24, d_model=2560, n_heads=32, n_kv_heads=8, head_dim=80,
+    d_ff=6912, vocab=32_000,
+    pattern=("local",), window=4096,
+    tie_embeddings=False, rope_theta=10_000.0, dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = LMConfig(
+    name="danube-smoke",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, head_dim=8,
+    d_ff=128, vocab=512, pattern=("local",), window=8,
+    tie_embeddings=False, dtype=jnp.float32, remat=False,
+)
+
+
+def make_cell(shape: str) -> Cell:
+    # SWA everywhere -> sub-quadratic; long_500k runs
+    return make_lm_cell("h2o-danube-1.8b", CONFIG, shape, full_attention_only=False)

@@ -1,0 +1,42 @@
+"""llama4-scout-17b-16e [hf:meta-llama/Llama-4-Scout-17B-16E; unverified]:
+48L d_model=5120 40H (GQA kv=8) head_dim=128 d_ff=8192 vocab=202048,
+MoE 16 experts top-1 (sigmoid router) + 1 shared expert.
+
+iRoPE interleaving per the public Llama-4 description: 3 chunked-local
+attention layers (chunk 8192, RoPE) : 1 full-attention NoPE layer — the
+full-context layers carry long-range information, the chunked layers keep
+prefill sub-quadratic (long_500k applicability, DESIGN.md)."""
+
+import jax.numpy as jnp
+
+from repro.configs.registry import Cell, make_lm_cell
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+CONFIG = LMConfig(
+    name="llama4-scout-17b-16e",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=202_048,
+    pattern=("chunked", "chunked", "chunked", "full_nope"), chunk=8192,
+    moe=MoEConfig(n_experts=16, top_k=1, d_ff=8192, n_shared=1,
+                  router="sigmoid", norm_topk=False),
+    tie_embeddings=False, rope_theta=500_000.0, dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = LMConfig(
+    name="llama4-smoke",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=96, vocab=512,
+    pattern=("chunked", "chunked", "chunked", "full_nope"), chunk=8,
+    moe=MoEConfig(n_experts=4, top_k=1, d_ff=96, n_shared=1,
+                  router="sigmoid", norm_topk=False, capacity_factor=2.0),
+    tie_embeddings=False, dtype=jnp.float32, remat=False,
+)
+
+
+def make_cell(shape: str) -> Cell:
+    return make_lm_cell("llama4-scout-17b-16e", CONFIG, shape,
+                        full_attention_only=False,
+                        notes="iRoPE 3:1 chunked:full interleave")

@@ -1,0 +1,224 @@
+"""Architecture registry: 10 assigned archs x their shape sets = 40 cells.
+
+Every cell resolves to (model config, step kind, input ShapeDtypeStructs).
+`--arch <id> --shape <name>` on the launchers goes through here; the dry-run
+iterates all_cells().
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+ARCH_IDS = [
+    "gemma2-27b",
+    "deepseek-7b",
+    "h2o-danube-1.8b",
+    "llama4-scout-17b-16e",
+    "kimi-k2-1t-a32b",
+    "gin-tu",
+    "graphcast",
+    "meshgraphnet",
+    "graphsage-reddit",
+    "bst",
+]
+
+_MODULES = {
+    "gemma2-27b": "gemma2_27b",
+    "deepseek-7b": "deepseek_7b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "llama4-scout-17b-16e": "llama4_scout_17b_16e",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "gin-tu": "gin_tu",
+    "graphcast": "graphcast",
+    "meshgraphnet": "meshgraphnet",
+    "graphsage-reddit": "graphsage_reddit",
+    "bst": "bst",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    kind: str                     # lm | gnn | recsys
+    step: str                     # train | prefill | decode | serve | retrieval
+    model_cfg: Any
+    input_specs: Callable[[], dict]
+    loss_kind: Optional[str] = None          # gnn only
+    skip_reason: Optional[str] = None
+    notes: str = ""
+
+    @property
+    def cell_id(self) -> str:
+        return f"{self.arch}__{self.shape}"
+
+
+def get_arch(arch_id: str):
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod
+
+
+def get_cell(arch_id: str, shape: str) -> Cell:
+    return get_arch(arch_id).make_cell(shape)
+
+
+def all_cells() -> list[Cell]:
+    cells = []
+    for a in ARCH_IDS:
+        mod = get_arch(a)
+        for s in mod.SHAPES:
+            cells.append(mod.make_cell(s))
+    return cells
+
+
+# ------------------------------------------------------- shared LM shapes --
+LM_SHAPES = {
+    "train_4k": dict(step="train", seq=4096, batch=256),
+    "prefill_32k": dict(step="prefill", seq=32768, batch=32),
+    "decode_32k": dict(step="decode", seq=32768, batch=128),
+    "long_500k": dict(step="decode", seq=524288, batch=1),
+}
+
+
+def lm_input_specs(cfg, shape_name: str) -> Callable[[], dict]:
+    from repro.models import transformer as lm_m
+    spec = LM_SHAPES[shape_name]
+
+    def build():
+        b, s = spec["batch"], spec["seq"]
+        if spec["step"] == "train":
+            return {"tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32)}
+        if spec["step"] == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        cache = jax.eval_shape(lambda: lm_m.init_cache(cfg, b, s))
+        return {
+            "cache": cache,
+            "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    return build
+
+
+def make_lm_cell(arch: str, cfg, shape: str, *, full_attention_only: bool,
+                 notes: str = "") -> Cell:
+    spec = LM_SHAPES[shape]
+    skip = None
+    if shape == "long_500k" and full_attention_only:
+        skip = ("skipped(full-attention): pure full-attention arch; 500k "
+                "context requires sub-quadratic attention (DESIGN.md)")
+    return Cell(arch=arch, shape=shape, kind="lm", step=spec["step"],
+                model_cfg=cfg, input_specs=lm_input_specs(cfg, shape),
+                skip_reason=skip, notes=notes)
+
+
+# ------------------------------------------------------ shared GNN shapes --
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433),
+    "minibatch_lg": dict(n_nodes=232_965, n_edges=114_615_892, d_feat=602,
+                         batch_nodes=1024, fanout=(15, 10)),
+    "ogb_products": dict(n_nodes=2_449_029, n_edges=61_859_140, d_feat=100),
+    "molecule": dict(n_nodes=30, n_edges=64, batch=128, d_feat=16),
+}
+
+
+def pad_to(n: int, multiple: int = 512) -> int:
+    """Assigned graph sizes are exact (N=2708, E=61,859,140, ...) but pjit
+    input shardings need divisibility; -1 edges and masked pad nodes make the
+    padding semantically exact."""
+    return n + (-n) % multiple
+
+
+def gnn_input_specs(shape_name: str, loss_kind: str, n_out: int,
+                    with_edge_feat: bool) -> Callable[[], dict]:
+    spec = GNN_SHAPES[shape_name]
+
+    def build():
+        f32, i32 = jnp.float32, jnp.int32
+        if shape_name == "molecule":
+            n = spec["batch"] * spec["n_nodes"]
+            e = spec["batch"] * spec["n_edges"]
+            out = {
+                "node_feat": jax.ShapeDtypeStruct((n, spec["d_feat"]), f32),
+                "edge_src": jax.ShapeDtypeStruct((e,), i32),
+                "edge_dst": jax.ShapeDtypeStruct((e,), i32),
+                "graph_ids": jax.ShapeDtypeStruct((n,), i32),
+                "graph_targets": jax.ShapeDtypeStruct((spec["batch"],), i32),
+            }
+        elif shape_name == "minibatch_lg":
+            from repro.data.graphs import block_shapes
+            shp = block_shapes(spec["batch_nodes"], spec["fanout"], spec["d_feat"])
+            out = {k: jax.ShapeDtypeStruct(*v) for k, v in shp.items()}
+            if loss_kind == "node_mse":
+                n_total = shp["node_feat"][0][0]
+                out.pop("labels")
+                out["targets"] = jax.ShapeDtypeStruct((n_total, n_out), f32)
+                out["node_mask"] = jax.ShapeDtypeStruct((n_total,), f32)
+        else:
+            n, e = pad_to(spec["n_nodes"]), pad_to(spec["n_edges"])
+            out = {
+                "node_feat": jax.ShapeDtypeStruct((n, spec["d_feat"]), f32),
+                "edge_src": jax.ShapeDtypeStruct((e,), i32),
+                "edge_dst": jax.ShapeDtypeStruct((e,), i32),
+            }
+            if loss_kind == "node_ce":
+                out["labels"] = jax.ShapeDtypeStruct((n,), i32)
+            else:
+                out["targets"] = jax.ShapeDtypeStruct((n, n_out), f32)
+                out["node_mask"] = jax.ShapeDtypeStruct((n,), f32)
+        if with_edge_feat:
+            e = out["edge_src"].shape[0]
+            out["edge_feat"] = jax.ShapeDtypeStruct((e, 4), f32)
+        return out
+    return build
+
+
+def make_gnn_cell(arch: str, make_cfg, shape: str, loss_kind: str,
+                  n_out: int, notes: str = "") -> Cell:
+    spec = GNN_SHAPES[shape]
+    graph_level = shape == "molecule"
+    lk = "graph_ce" if graph_level else loss_kind
+    cfg = make_cfg(d_in=spec["d_feat"], n_out=n_out, graph_level=graph_level)
+    with_edge = cfg.kind in ("mgn", "graphcast")
+    return Cell(arch=arch, shape=shape, kind="gnn", step="train",
+                model_cfg=cfg, loss_kind=lk,
+                input_specs=gnn_input_specs(shape, lk, n_out, with_edge),
+                notes=notes)
+
+
+# --------------------------------------------------- shared recsys shapes --
+RECSYS_SHAPES = {
+    "train_batch": dict(step="train", batch=65_536),
+    "serve_p99": dict(step="serve", batch=512),
+    "serve_bulk": dict(step="serve", batch=262_144),
+    "retrieval_cand": dict(step="retrieval", batch=1, n_candidates=1_000_000),
+}
+
+
+def bst_input_specs(cfg, shape_name: str) -> Callable[[], dict]:
+    spec = RECSYS_SHAPES[shape_name]
+
+    def build():
+        i32, f32 = jnp.int32, jnp.float32
+        b = spec["batch"]
+        base = {
+            "seq_items": jax.ShapeDtypeStruct((b, cfg.seq_len), i32),
+            "seq_cats": jax.ShapeDtypeStruct((b, cfg.seq_len), i32),
+            "dense_feats": jax.ShapeDtypeStruct((b, cfg.n_dense), f32),
+            "multi_ids": jax.ShapeDtypeStruct((b, cfg.n_multi, cfg.multi_bag), i32),
+        }
+        if spec["step"] == "retrieval":
+            nc = spec["n_candidates"]
+            base["cand_items"] = jax.ShapeDtypeStruct((nc,), i32)
+            base["cand_cats"] = jax.ShapeDtypeStruct((nc,), i32)
+            return base
+        base["target_item"] = jax.ShapeDtypeStruct((b,), i32)
+        base["target_cat"] = jax.ShapeDtypeStruct((b,), i32)
+        if spec["step"] == "train":
+            base["labels"] = jax.ShapeDtypeStruct((b,), i32)
+        return base
+    return build

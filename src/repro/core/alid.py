@@ -1,0 +1,204 @@
+"""ALID — the complete algorithm (paper Alg. 2) plus the peeling driver
+(Sec. 4.4) and bucket-based seeding (Sec. 4.6).
+
+One ALID instance = iterate (LID -> ROI -> CIVS) from a seed vertex until the
+local dense subgraph is immune against everything the ROI can still add, or
+c > C. Instances are shape-static, so a whole batch of seeds runs under vmap —
+the single-machine analogue of the paper's PALID mappers (and the unit that
+shard_map distributes across devices in repro.core.palid).
+
+Peeling: claimed points are deactivated each round; overlapping claims are
+resolved to the maximum-density cluster exactly like the PALID reducer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.affinity import estimate_k
+from repro.core.civs import civs_update
+from repro.core.lid import LIDState, density, init_state, lid_solve
+from repro.core.roi import estimate_roi
+from repro.lsh.pstable import LSHParams, LSHTables, bucket_sizes, build_lsh
+
+
+class ALIDConfig(NamedTuple):
+    """Static algorithm configuration (hashable; safe as a jit static arg)."""
+    k: float | None = None        # Laplacian scale; None -> estimate_k at setup
+    p: float = 2.0                # norm (paper uses p=2 in all experiments)
+    a_cap: int = 64               # max support (cluster) size tracked
+    delta: int = 128              # paper's delta: max CIVS retrievals (they use 800)
+    t_lid: int = 256              # LID iteration cap (paper's T)
+    c_outer: int = 16             # ALID iteration cap (paper's C; they use 10)
+    tol: float = 1e-5
+    support_eps: float = 1e-6
+    density_min: float = 0.75     # paper: keep clusters with pi(x) >= 0.75
+    r0: float = 0.4               # paper: ROI radius for c == 1
+    stop_frac: float = 0.95       # declare global immunity once R >= frac*R_out
+    lsh: LSHParams = LSHParams()
+    seeds_per_round: int = 32
+    max_rounds: int = 128
+    min_bucket: int = 5           # paper: seed from buckets with > 5 items
+    exhaustive: bool = False      # peel until no active point remains
+
+    @property
+    def cap(self) -> int:
+        return self.a_cap + self.delta
+
+
+class SeedResult(NamedTuple):
+    member_idx: jax.Array   # (cap,) global indices of the final beta
+    member_w: jax.Array     # (cap,) weights (support = w > support_eps)
+    member_mask: jax.Array  # (cap,) validity & support
+    density: jax.Array      # () pi(x*)
+    n_outer: jax.Array      # () ALID iterations used
+    overflow: jax.Array     # () support hit a_cap
+
+
+class Clustering(NamedTuple):
+    labels: np.ndarray      # (n,) int32, -1 = unclustered / noise
+    densities: np.ndarray   # (n_clusters,)
+    n_rounds: int
+    k: float
+
+
+def alid_from_seed(
+    points: jax.Array,
+    active: jax.Array,
+    tables: LSHTables,
+    seed_idx: jax.Array,
+    k: jax.Array,
+    cfg: ALIDConfig,
+) -> SeedResult:
+    """Alg. 2: one complete ALID run from one seed (jit/vmap friendly)."""
+
+    def cond(carry):
+        state, c, done, overflow = carry
+        return (~done) & (c <= cfg.c_outer)
+
+    def body(carry):
+        state, c, _, overflow = carry
+        state = lid_solve(state, k, max_iters=cfg.t_lid, tol=cfg.tol, p=cfg.p)
+        roi = estimate_roi(state.v_beta, state.beta_idx, state.beta_mask, state.x,
+                           k, c, r0=cfg.r0, p=cfg.p, support_eps=cfg.support_eps)
+        res = civs_update(state, roi, points, active, tables, cfg.lsh, k,
+                          a_cap=cfg.a_cap, delta=cfg.delta, tol=cfg.tol,
+                          support_eps=cfg.support_eps, p=cfg.p)
+        # Global immunity: nothing infective was retrievable AND the ROI has
+        # essentially reached the outer ball (Prop. 1 then guarantees no
+        # infective vertex exists anywhere).
+        grown = roi.radius >= cfg.stop_frac * roi.r_out
+        done = (~res.infective_found) & (grown | (res.n_candidates == 0)) & (c > 1)
+        return res.state, c + 1, done, overflow | res.overflow
+
+    state0 = init_state(points, seed_idx, cfg.cap)
+    state, c, done, overflow = jax.lax.while_loop(
+        cond, body, (state0, jnp.int32(1), jnp.array(False), jnp.array(False)))
+    # final polish: converge LID on the last beta
+    state = lid_solve(state, k, max_iters=cfg.t_lid, tol=cfg.tol, p=cfg.p)
+
+    sup = state.beta_mask & (state.x > cfg.support_eps)
+    return SeedResult(
+        member_idx=jnp.where(sup, state.beta_idx, -1),
+        member_w=jnp.where(sup, state.x, 0.0),
+        member_mask=sup,
+        density=density(state),
+        n_outer=c - 1,
+        overflow=overflow,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _run_round(points, active, tables, seeds, seed_valid, k, cfg: ALIDConfig):
+    """Run a batch of seeds and resolve claims PALID-reducer style."""
+    results = jax.vmap(
+        lambda s: alid_from_seed(points, active, tables, s, k, cfg)
+    )(seeds)
+
+    n = points.shape[0]
+    s_batch, cap = results.member_idx.shape
+    flat_idx = results.member_idx.reshape(-1)
+    flat_valid = results.member_mask.reshape(-1) & (flat_idx >= 0)
+    flat_valid &= jnp.repeat(seed_valid, cap)
+    flat_dens = jnp.repeat(results.density, cap)
+    safe = jnp.clip(flat_idx, 0, n - 1)
+
+    # reduce 1: max density claiming each point
+    best_dens = jnp.full((n,), -jnp.inf, jnp.float32).at[safe].max(
+        jnp.where(flat_valid, flat_dens, -jnp.inf))
+    # reduce 2: among winners, deterministic tie-break on seed row id
+    flat_row = jnp.repeat(jnp.arange(s_batch, dtype=jnp.int32), cap)
+    is_winner = flat_valid & (flat_dens >= best_dens[safe] - 1e-9)
+    best_row = jnp.full((n,), -1, jnp.int32).at[safe].max(
+        jnp.where(is_winner, flat_row, -1))
+
+    claimed = best_row >= 0
+    return claimed, best_row, best_dens, results
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _sample_seeds(active, bsizes, rng, cfg: ALIDConfig):
+    """Gumbel-top-k sampling, biased to large LSH buckets (paper Sec. 4.6)."""
+    eligible = active & (bsizes > cfg.min_bucket)
+    any_eligible = jnp.any(eligible)
+    w = jnp.where(eligible, 1.0, jnp.where(active, 1e-6, 0.0))
+    logw = jnp.where(w > 0, jnp.log(w), -jnp.inf)
+    g = jax.random.gumbel(rng, logw.shape)
+    vals, seeds = jax.lax.top_k(logw + g, cfg.seeds_per_round)
+    valid = vals > -jnp.inf
+    return seeds.astype(jnp.int32), valid, any_eligible
+
+
+def detect_clusters(points: jax.Array, cfg: ALIDConfig, rng: jax.Array) -> Clustering:
+    """Host-level peeling driver: rounds of batched seeds until the data set is
+    consumed (exhaustive) or no dominant-cluster candidates remain."""
+    points = jnp.asarray(points, jnp.float32)
+    n = points.shape[0]
+    k = jnp.float32(cfg.k) if cfg.k is not None else estimate_k(points)
+    rng, kb = jax.random.split(rng)
+    tables = build_lsh(points, cfg.lsh, kb)
+    bsizes = bucket_sizes(tables)
+
+    active = jnp.ones((n,), bool)
+    labels = np.full((n,), -1, np.int32)
+    densities: list[float] = []
+    next_label = 0
+    rounds = 0
+
+    for rounds in range(1, cfg.max_rounds + 1):
+        rng, kr = jax.random.split(rng)
+        seeds, seed_valid, any_eligible = _sample_seeds(active, bsizes, kr, cfg)
+        if not bool(jnp.any(seed_valid)):
+            break
+        if not cfg.exhaustive and not bool(any_eligible):
+            break
+        claimed, best_row, best_dens, results = _run_round(
+            points, active, tables, seeds, seed_valid, k, cfg)
+
+        claimed_np = np.asarray(claimed)
+        row_np = np.asarray(best_row)
+        dens_np = np.asarray(results.density)
+        # assign labels for winning rows that clear the density threshold
+        for row in np.unique(row_np[claimed_np]):
+            pts = np.where(claimed_np & (row_np == row))[0]
+            if pts.size == 0:
+                continue
+            if dens_np[row] >= cfg.density_min and pts.size > 1:
+                labels[pts] = next_label
+                densities.append(float(dens_np[row]))
+                next_label += 1
+        # peel everything claimed + the seeds themselves (guarantees progress)
+        seeds_np = np.asarray(seeds)[np.asarray(seed_valid)]
+        new_inactive = claimed_np.copy()
+        new_inactive[seeds_np] = True
+        active = active & jnp.asarray(~new_inactive)
+        if not bool(jnp.any(active)):
+            break
+
+    return Clustering(labels=labels, densities=np.asarray(densities, np.float32),
+                      n_rounds=rounds, k=float(k))

@@ -1,0 +1,5 @@
+from repro.core.baselines.sea import sea_detect  # noqa: F401
+from repro.core.baselines.ap import affinity_propagation  # noqa: F401
+from repro.core.baselines.kmeans import kmeans  # noqa: F401
+from repro.core.baselines.spectral import spectral_clustering  # noqa: F401
+from repro.core.baselines.meanshift import mean_shift  # noqa: F401

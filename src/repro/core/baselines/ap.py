@@ -1,0 +1,65 @@
+"""Affinity Propagation (Frey & Dueck, Science'07) — baseline.
+
+Responsibility/availability message passing on the full similarity matrix;
+O(n^2) memory and time per sweep (the paper's Fig. 6/7 show AP as the least
+scalable baseline).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters",))
+def _ap_iterate(s: jax.Array, max_iters: int = 200, damping: float = 0.7):
+    n = s.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+
+    def body(carry, _):
+        r, a = carry
+        # responsibilities
+        as_ = a + s
+        first = jnp.max(as_, axis=1, keepdims=True)
+        arg = jnp.argmax(as_, axis=1)
+        second = jnp.max(jnp.where(jax.nn.one_hot(arg, n, dtype=bool), -jnp.inf, as_),
+                         axis=1, keepdims=True)
+        r_new = s - jnp.where(jax.nn.one_hot(arg, n, dtype=bool), second, first)
+        r = damping * r + (1 - damping) * r_new
+        # availabilities
+        rp = jnp.maximum(r, 0.0)
+        rp = jnp.where(eye, r, rp)
+        col = jnp.sum(rp, axis=0, keepdims=True) - rp
+        a_new = jnp.where(eye, col, jnp.minimum(0.0, col))
+        a = damping * a + (1 - damping) * a_new
+        return (r, a), None
+
+    r0 = jnp.zeros_like(s)
+    a0 = jnp.zeros_like(s)
+    (r, a), _ = jax.lax.scan(body, (r0, a0), None, length=max_iters)
+    return r, a
+
+
+def affinity_propagation(points: np.ndarray, preference: float | None = None,
+                         max_iters: int = 200, damping: float = 0.7):
+    """Returns (labels, exemplars). Similarity = -||vi - vj||^2."""
+    pts = jnp.asarray(points, jnp.float32)
+    d2 = jnp.sum((pts[:, None, :] - pts[None, :, :]) ** 2, -1)
+    s = -d2
+    off = ~jnp.eye(s.shape[0], dtype=bool)
+    pref = jnp.median(s[off]) if preference is None else preference
+    s = jnp.where(jnp.eye(s.shape[0], dtype=bool), pref, s)
+    r, a = _ap_iterate(s, max_iters=max_iters, damping=damping)
+    crit = r + a
+    exemplars = np.where(np.asarray(jnp.diagonal(crit)) > 0)[0]
+    if exemplars.size == 0:
+        exemplars = np.asarray([int(jnp.argmax(jnp.diagonal(crit)))])
+    sim_to_ex = np.asarray(s)[:, exemplars]
+    labels = exemplars[np.argmax(sim_to_ex, axis=1)]
+    labels[exemplars] = exemplars
+    # relabel to 0..K-1
+    uniq = {e: i for i, e in enumerate(sorted(set(labels.tolist())))}
+    return np.asarray([uniq[int(l)] for l in labels], np.int32), exemplars

@@ -1,0 +1,39 @@
+"""k-means (Lloyd) with k-means++ init — partitioning baseline (Fig. 11)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters", "max_iters"))
+def _lloyd(points: jax.Array, init: jax.Array, n_clusters: int, max_iters: int = 100):
+    def body(carry, _):
+        centers, _ = carry
+        d2 = jnp.sum((points[:, None, :] - centers[None, :, :]) ** 2, -1)
+        assign = jnp.argmin(d2, axis=1)
+        onehot = jax.nn.one_hot(assign, n_clusters, dtype=points.dtype)
+        counts = jnp.maximum(onehot.sum(0), 1.0)
+        centers = (onehot.T @ points) / counts[:, None]
+        return (centers, assign), None
+
+    (centers, assign), _ = jax.lax.scan(
+        body, (init, jnp.zeros(points.shape[0], jnp.int32)), None, length=max_iters)
+    return centers, assign
+
+
+def kmeans(points: np.ndarray, n_clusters: int, seed: int = 0, max_iters: int = 100):
+    pts = jnp.asarray(points, jnp.float32)
+    rng = np.random.default_rng(seed)
+    # k-means++ init
+    centers = [pts[rng.integers(len(points))]]
+    for _ in range(n_clusters - 1):
+        d2 = np.min(np.stack([np.asarray(jnp.sum((pts - c) ** 2, -1)) for c in centers]), 0)
+        prob = d2 / max(d2.sum(), 1e-12)
+        centers.append(pts[rng.choice(len(points), p=prob)])
+    init = jnp.stack(centers)
+    centers, assign = _lloyd(pts, init, n_clusters, max_iters)
+    return np.asarray(assign, np.int32), np.asarray(centers)

@@ -1,0 +1,45 @@
+"""Mean shift (Comaniciu & Meer, TPAMI'02) with a Gaussian kernel — the
+feature-space baseline discussed in Sec. 2 / Appendix C."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters",))
+def _shift(points: jax.Array, bandwidth: float, max_iters: int = 50):
+    def body(modes, _):
+        d2 = jnp.sum((modes[:, None, :] - points[None, :, :]) ** 2, -1)
+        w = jnp.exp(-d2 / (2.0 * bandwidth**2))
+        num = w @ points
+        den = jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-12)
+        return num / den, None
+
+    modes, _ = jax.lax.scan(body, points, None, length=max_iters)
+    return modes
+
+
+def mean_shift(points: np.ndarray, bandwidth: float, merge_radius: float | None = None,
+               max_iters: int = 50, min_members: int = 2):
+    pts = jnp.asarray(points, jnp.float32)
+    modes = np.asarray(_shift(pts, bandwidth, max_iters))
+    merge_radius = bandwidth if merge_radius is None else merge_radius
+    labels = np.full(len(points), -1, np.int32)
+    centers: list[np.ndarray] = []
+    for i, m in enumerate(modes):
+        for ci, c in enumerate(centers):
+            if np.linalg.norm(m - c) < merge_radius:
+                labels[i] = ci
+                break
+        else:
+            centers.append(m)
+            labels[i] = len(centers) - 1
+    # drop tiny clusters to noise
+    for ci in range(len(centers)):
+        if (labels == ci).sum() < min_members:
+            labels[labels == ci] = -1
+    return labels, np.asarray(centers) if centers else np.zeros((0, points.shape[1]))

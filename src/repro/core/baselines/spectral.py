@@ -1,0 +1,23 @@
+"""Spectral clustering (Ng-Jordan-Weiss) — partitioning baseline (Fig. 11).
+Full-matrix eigendecomposition: small n only (as in the paper's comparison)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.affinity import affinity_matrix
+from repro.core.baselines.kmeans import kmeans
+
+
+def spectral_clustering(points: np.ndarray, n_clusters: int, k_aff: float,
+                        seed: int = 0):
+    a = affinity_matrix(jnp.asarray(points, jnp.float32), k_aff)
+    d = jnp.sum(a, axis=1)
+    dm = 1.0 / jnp.sqrt(jnp.maximum(d, 1e-12))
+    lap = dm[:, None] * a * dm[None, :]
+    w, v = jnp.linalg.eigh(lap)
+    emb = v[:, -n_clusters:]
+    emb = emb / jnp.maximum(jnp.linalg.norm(emb, axis=1, keepdims=True), 1e-12)
+    labels, _ = kmeans(np.asarray(emb), n_clusters, seed=seed)
+    return labels

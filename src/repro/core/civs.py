@@ -1,0 +1,127 @@
+"""Candidate Infective Vertex Search — paper Sec. 4.3.
+
+Queries LSH from EVERY support point of x_hat (multiple locality-sensitive
+regions jointly cover the ROI, Fig. 4b), filters candidates to the ROI ball,
+keeps the <= delta nearest to the center D, and rebuilds the fixed-capacity
+LID buffers as  beta' = alpha ∪ psi  with an EXACT refresh of
+(A_beta,alpha x_alpha) (Eq. 17).
+
+Fixed-shape realization: the support is compacted into the first `a_cap`
+slots (sorted by weight — an overflow beyond a_cap drops the lightest members
+and raises `overflow`), psi occupies the trailing `delta` slots. Dedup is
+sort-based; membership tests are masked broadcasts. All shapes are static so
+the whole step vmaps over a batch of seeds.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.affinity import affinity_block
+from repro.core.lid import LIDState
+from repro.core.roi import ROI
+from repro.lsh.pstable import LSHParams, LSHTables, query_batch
+
+
+class CIVSResult(NamedTuple):
+    state: LIDState
+    infective_found: jax.Array  # () bool — some psi vertex has pi(s_j,x) > pi(x)
+    n_candidates: jax.Array     # () int32 — post-filter candidate count (diagnostics)
+    overflow: jax.Array         # () bool — support exceeded a_cap
+
+
+@functools.partial(jax.jit, static_argnames=("a_cap", "delta", "lsh_params",
+                                             "tol", "support_eps", "p"))
+def civs_update(
+    state: LIDState,
+    roi: ROI,
+    points: jax.Array,
+    active: jax.Array,
+    tables: LSHTables,
+    lsh_params: LSHParams,
+    k: jax.Array,
+    a_cap: int,
+    delta: int,
+    tol: float = 1e-5,
+    support_eps: float = 1e-6,
+    p: float = 2.0,
+) -> CIVSResult:
+    cap = a_cap + delta
+    assert state.x.shape[0] == cap, (state.x.shape, cap)
+    n = points.shape[0]
+
+    # ---- 1. compact support into the first a_cap slots (by weight, desc) ----
+    w = jnp.where(state.beta_mask, state.x, 0.0)
+    is_sup = w > support_eps
+    n_sup_total = jnp.sum(is_sup)
+    order = jnp.argsort(-w)[:a_cap]                       # heaviest first
+    sup_idx = state.beta_idx[order]
+    sup_v = state.v_beta[order]
+    sup_x = w[order]
+    n_sup = jnp.minimum(n_sup_total, a_cap)
+    slot = jnp.arange(a_cap)
+    sup_slot_mask = (slot < n_sup) & (sup_x > support_eps)
+    sup_x = jnp.where(sup_slot_mask, sup_x, 0.0)
+    sup_x = sup_x / jnp.maximum(jnp.sum(sup_x), 1e-12)    # renorm (overflow drop)
+    overflow = n_sup_total > a_cap
+
+    # ---- 2. LSH query from every support point ----
+    cands = query_batch(tables, sup_v, lsh_params)        # (a_cap, L*probe)
+    cands = jnp.where(sup_slot_mask[:, None], cands, -1)
+    flat = cands.reshape(-1)                              # (a_cap * L * probe,)
+
+    safe = jnp.clip(flat, 0, n - 1)
+    valid = flat >= 0
+    valid &= active[safe]
+    # not already a support member
+    member = jnp.any((safe[:, None] == sup_idx[None, :]) & sup_slot_mask[None, :], axis=1)
+    valid &= ~member
+
+    # ---- 3. sort-based dedup ----
+    sentinel = jnp.int32(n)  # sorts after every real index
+    keys = jnp.where(valid, safe, sentinel)
+    skeys = jnp.sort(keys)
+    uniq = jnp.concatenate([jnp.array([True]), skeys[1:] != skeys[:-1]])
+    cvalid = uniq & (skeys < sentinel)
+    cidx = jnp.clip(skeys, 0, n - 1)
+
+    # ---- 4. ROI filter + take the delta nearest to D ----
+    vc = points[cidx]
+    if p == 2.0:
+        dist = jnp.sqrt(jnp.maximum(jnp.sum((vc - roi.center[None, :]) ** 2, -1), 0.0))
+    else:
+        dist = jnp.power(jnp.sum(jnp.abs(vc - roi.center[None, :]) ** p, -1), 1.0 / p)
+    cvalid &= dist <= roi.radius
+    n_candidates = jnp.sum(cvalid)
+
+    neg = jnp.where(cvalid, -dist, -jnp.inf)
+    top_vals, top_pos = jax.lax.top_k(neg, delta)
+    psi_valid = top_vals > -jnp.inf
+    psi_idx = jnp.where(psi_valid, cidx[top_pos], -1)
+    psi_v = points[jnp.clip(psi_idx, 0, n - 1)]
+    psi_v = jnp.where(psi_valid[:, None], psi_v, 0.0)
+
+    # ---- 5. rebuild buffers: beta' = alpha ∪ psi, exact Ax refresh (Eq. 17) --
+    beta_idx = jnp.concatenate([sup_idx, psi_idx]).astype(jnp.int32)
+    beta_mask = jnp.concatenate([sup_slot_mask, psi_valid])
+    v_beta = jnp.concatenate([sup_v, psi_v], axis=0)
+    x = jnp.concatenate([sup_x, jnp.zeros((delta,), sup_x.dtype)])
+
+    a_cols = affinity_block(v_beta, sup_v, k, p)          # (cap, a_cap)
+    a_cols = jnp.where(beta_idx[:, None] == sup_idx[None, :], 0.0, a_cols)
+    a_cols = a_cols * (beta_mask[:, None] & sup_slot_mask[None, :])
+    ax = a_cols @ sup_x
+
+    pi = jnp.sum(x * ax)
+    infective = jnp.any(psi_valid & (ax[a_cap:] - pi > tol))
+
+    new_state = LIDState(
+        beta_idx=beta_idx, beta_mask=beta_mask, v_beta=v_beta, x=x, ax=ax,
+        n_iters=state.n_iters, converged=jnp.array(False),
+    )
+    return CIVSResult(state=new_state, infective_found=infective,
+                      n_candidates=n_candidates, overflow=overflow)

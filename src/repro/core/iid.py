@@ -1,0 +1,90 @@
+"""Infection-Immunization Dynamics (Rota Bulò et al., CVIU'11) on the FULL
+affinity matrix — the paper's primary baseline (Sec. 3).
+
+Solves  max_{x in Δ^n} pi(x) = x^T A x  by repeatedly invading x with the
+vertex (or co-vertex) maximizing |pi(s_i - x, x)| (Eq. 6-9). Each iteration is
+O(n) given A, but materializing A is O(n^2) — exactly the bottleneck ALID
+removes. Kept faithful here so benchmarks can reproduce the paper's
+IID-vs-ALID comparisons.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class StQPResult(NamedTuple):
+    x: jax.Array          # (n,) final simplex point
+    density: jax.Array    # pi(x)
+    n_iters: jax.Array
+    converged: jax.Array
+
+
+def _select(x: jax.Array, r: jax.Array, mask: jax.Array, tol: float):
+    """M(x) of Eq. 6: strongest infective vertex or weakest support vertex."""
+    c1 = mask & (r > tol)
+    c2 = mask & (r < -tol) & (x > 0.0)
+    score = jnp.where(c1 | c2, jnp.abs(r), -jnp.inf)
+    i = jnp.argmax(score)
+    return i, score[i]
+
+
+def _invade(x, ax, r, i, col, pi):
+    """One invasion step shared by infection and immunization.
+
+    mu = 1 for infection (y = s_i); mu = x_i/(x_i - 1) for immunization
+    (y = co-vertex of s_i, Eq. 7/12). With a_ii = 0:
+        pi(s_i - x)    = -2 (Ax)_i + pi(x)                         (Eq. 11)
+        pi(y - x, x)   = mu * r_i
+        pi(y - x)      = mu^2 * pi(s_i - x)                        (Eq. 12)
+        eps            = min(-num/den, 1) if den < 0 else 1        (Eq. 9)
+        x'             = x + eps*mu*(s_i - x)                      (Eq. 13)
+        (Ax)'          = Ax + eps*mu*(A[:,i] - Ax)                 (Eq. 14)
+    """
+    ri = r[i]
+    xi = x[i]
+    mu = jnp.where(ri > 0.0, 1.0, xi / (xi - 1.0))
+    num = mu * ri
+    den = mu * mu * (-2.0 * ax[i] + pi)
+    eps = jnp.where(den < 0.0, jnp.minimum(-num / den, 1.0), 1.0)
+    scale = eps * mu
+    onehot = jnp.zeros_like(x).at[i].set(1.0)
+    x_new = x + scale * (onehot - x)
+    ax_new = ax + scale * (col - ax)
+    return jnp.maximum(x_new, 0.0), ax_new
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters",))
+def iid_solve(a: jax.Array, x0: jax.Array, max_iters: int = 1000,
+              tol: float = 1e-5) -> StQPResult:
+    """IID from x0 on full matrix a (zero diagonal). mask = x0 domain > 0 rows
+    allowed; peeled vertices must have a[:, peeled] = 0 and x0[peeled] = 0."""
+    mask = jnp.ones(x0.shape, bool)
+
+    def cond(s):
+        x, ax, t, done = s
+        return (~done) & (t < max_iters)
+
+    def body(s):
+        x, ax, t, _ = s
+        pi = x @ ax
+        r = ax - pi
+        i, best = _select(x, r, mask, tol)
+        done = best <= tol
+        x_new, ax_new = _invade(x, ax, r, i, a[:, i], pi)
+        x = jnp.where(done, x, x_new)
+        ax = jnp.where(done, ax, ax_new)
+        return x, ax, t + 1, done
+
+    ax0 = a @ x0
+    x, ax, t, done = jax.lax.while_loop(cond, body, (x0, ax0, jnp.int32(0), jnp.array(False)))
+    return StQPResult(x=x, density=x @ ax, n_iters=t, converged=done)
+
+
+def uniform_on(mask: jax.Array) -> jax.Array:
+    m = mask.astype(jnp.float32)
+    return m / jnp.maximum(m.sum(), 1.0)

@@ -1,0 +1,34 @@
+"""Replicator Dynamics — the Dominant Sets solver (Pavan & Pelillo, TPAMI'07).
+
+x_{t+1} = x_t * (A x_t) / (x_t^T A x_t). Each iteration is O(n^2); kept as the
+paper's DS baseline. Converges to a local maximizer of pi(x) on the simplex.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.iid import StQPResult
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters",))
+def replicator_solve(a: jax.Array, x0: jax.Array, max_iters: int = 2000,
+                     tol: float = 1e-7) -> StQPResult:
+    def cond(s):
+        x, t, delta = s
+        return (delta > tol) & (t < max_iters)
+
+    def body(s):
+        x, t, _ = s
+        ax = a @ x
+        pi = x @ ax
+        x_new = jnp.where(pi > 0.0, x * ax / jnp.maximum(pi, 1e-30), x)
+        delta = jnp.sum(jnp.abs(x_new - x))
+        return x_new, t + 1, delta
+
+    x, t, delta = jax.lax.while_loop(cond, body, (x0, jnp.int32(0), jnp.float32(1.0)))
+    ax = a @ x
+    return StQPResult(x=x, density=x @ ax, n_iters=t, converged=delta <= tol)

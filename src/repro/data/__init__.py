@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticSpec,
+    make_regime_dataset,
+    make_blobs_with_noise,
+    auto_lsh_params,
+)

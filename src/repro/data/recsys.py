@@ -1,0 +1,41 @@
+"""Synthetic recsys event stream for BST: users with latent taste vectors,
+items with latent embeddings; click prob = sigmoid(taste . item + seq
+effects). Stateless-indexable batches."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "seq_len", "item_vocab",
+                                             "cat_vocab", "n_dense", "n_multi",
+                                             "multi_bag", "multi_vocab", "seed"))
+def bst_batch(step: jax.Array, *, batch: int, seq_len: int, item_vocab: int,
+              cat_vocab: int, n_dense: int = 16, n_multi: int = 2,
+              multi_bag: int = 8, multi_vocab: int = 131_072,
+              seed: int = 0) -> dict:
+    rng = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    ks = jax.random.split(rng, 8)
+    seq_items = jax.random.randint(ks[0], (batch, seq_len), 0, item_vocab)
+    target = jax.random.randint(ks[1], (batch,), 0, item_vocab)
+    # correlated clicks: same "category bucket" as the majority of history
+    cat_of = lambda it: ((it.astype(jnp.uint32) * jnp.uint32(2654435761))
+                         % jnp.uint32(cat_vocab)).astype(jnp.int32)
+    seq_cats = cat_of(seq_items)
+    tgt_cat = cat_of(target)
+    match = jnp.mean((seq_cats == tgt_cat[:, None]).astype(jnp.float32), 1)
+    p = jax.nn.sigmoid(4.0 * match - 1.0)
+    labels = jax.random.bernoulli(ks[2], p).astype(jnp.int32)
+    return {
+        "seq_items": seq_items.astype(jnp.int32),
+        "seq_cats": seq_cats,
+        "target_item": target.astype(jnp.int32),
+        "target_cat": tgt_cat,
+        "dense_feats": jax.random.normal(ks[3], (batch, n_dense), jnp.float32),
+        "multi_ids": jax.random.randint(ks[4], (batch, n_multi, multi_bag),
+                                        0, multi_vocab).astype(jnp.int32),
+        "labels": labels,
+    }

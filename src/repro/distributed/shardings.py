@@ -1,0 +1,235 @@
+"""Logical-axis sharding rules (MaxText-style): model code and the trainer
+speak logical axes; this module resolves them against the active mesh context.
+
+Conventions (DESIGN.md §4):
+  batch/tokens/edges/nodes/seeds/candidates -> data axes (("pod","data") when
+                                               multi-pod)
+  heads / mlp / vocab-rows / experts        -> "model"
+  kv_seq (long-context decode cache)        -> data axes (SP for batch=1)
+  ZeRO: optimizer states & master params additionally shard their largest
+  replicated dim over the data axes (FSDP-style) — required to fit kimi-k2.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.context import get_mesh_context
+
+
+def logical_spec(*axes: Optional[str]) -> P:
+    """Resolve logical axis names to a PartitionSpec under the current ctx."""
+    ctx = get_mesh_context()
+    if ctx is None:
+        return P()
+    out = []
+    for a in axes:
+        if a is None:
+            out.append(None)
+        elif a in ("batch", "tokens", "seeds", "kv_seq", "bags"):
+            out.append(ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0])
+        elif a in ("edges", "nodes", "candidates"):
+            # GNN/retrieval arrays have no tensor-parallel dim: flatten the
+            # whole mesh over them (data + model)
+            out.append(ctx.data_axes + (ctx.model_axis,))
+        elif a in ("heads", "kv_heads", "mlp", "vocab", "expert", "model"):
+            out.append(ctx.model_axis)
+        elif a in ("embed", "seq", "none"):
+            out.append(None)
+        else:
+            raise ValueError(f"unknown logical axis {a!r}")
+    return P(*out)
+
+
+def _axes_size(ctx, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for n in names:
+        size *= ctx.mesh.shape[n]
+    return size
+
+
+def degrade_spec(spec: P, shape: tuple[int, ...]) -> P:
+    """Per-dim fallback for non-divisible shapes: drop trailing mesh axes
+    from a dim's assignment until it divides (replicate as last resort)."""
+    ctx = get_mesh_context()
+    if ctx is None:
+        return spec
+    out = []
+    for entry, dim in zip(list(spec) + [None] * (len(shape) - len(spec)), shape):
+        names = list(entry) if isinstance(entry, tuple) else (
+            [entry] if entry else [])
+        while names and dim % _axes_size(ctx, tuple(names)) != 0:
+            names.pop()
+        out.append(tuple(names) if len(names) > 1 else (names[0] if names else None))
+    return P(*out)
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    ctx = get_mesh_context()
+    if ctx is None:
+        return x
+    spec = degrade_spec(logical_spec(*axes), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ------------------------------------------------------------ param rules --
+def _lm_leaf_spec(path: tuple[str, ...], ndim: int, q_ok: bool, kv_ok: bool) -> P:
+    name = path[-1]
+    stacked = path[0] == "blocks"  # leading (n_groups,) axis
+    lead: tuple = (None,) if stacked else ()
+
+    def spec(*tail):
+        return P(*(lead + tail)) if len(lead) + len(tail) == ndim else P(*((None,) * ndim))
+
+    if name == "embed":
+        return P("model", None)
+    if name == "lm_head":
+        return P(None, "model")
+    if name == "wq":
+        return spec(None, "model") if q_ok else spec(None, None)
+    if name in ("wk", "wv"):
+        return spec(None, "model") if kv_ok else spec(None, None)
+    if name in ("w_gate", "w_up"):
+        if "moe" in path:
+            return spec("model", None, None)      # (G, E, D, F)
+        return spec(None, "model")                # (G, D, F)
+    if name == "wo":
+        return spec("model", None) if q_ok else spec(None, None)
+    if name == "w_down":
+        if "moe" in path:
+            return spec("model", None, None)      # (G, E, F, D)
+        return spec("model", None)                # (G, F, D)
+    if name == "router":
+        return spec(None, None)
+    return P(*((None,) * ndim))                   # norms, biases, misc
+
+
+def lm_param_specs(abstract: Any, cfg: Any = None) -> Any:
+    """PartitionSpec pytree for transformer params (same structure).
+
+    Head projections are only sharded over the model axis when the head count
+    divides it — splitting inside a head forces SPMD to reshard around every
+    reshape (llama4's 40 q heads / kimi's 8 kv heads on a 16-way axis).
+    Replicated attention weights are small; the FFN/expert weights carry the
+    parameter mass and always shard.
+
+    When ctx.fsdp (default): ZeRO-3 — every param additionally shards its
+    largest remaining dim over the data axes. Required at kimi-k2 scale
+    (1T bf16 params / 16-way TP alone would be 130 GB/chip); XLA re-gathers
+    weights per layer inside the scan (the FSDP all-gather, visible in the
+    collective census)."""
+    ctx = get_mesh_context()
+    n_model = ctx.n_model if ctx else 1
+    q_ok = cfg is None or (cfg.n_heads % n_model == 0)
+    kv_ok = cfg is None or (cfg.n_kv_heads % n_model == 0)
+    fsdp = ctx.fsdp if ctx else False
+
+    def f(path, leaf):
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        # shared-expert weights live under moe/shared but shard like dense ffn
+        if "shared" in keys:
+            keys = tuple(k for k in keys if k != "moe")
+        spec = _lm_leaf_spec(keys, leaf.ndim, q_ok, kv_ok)
+        if fsdp and leaf.size * 2 > (1 << 22):   # leave small leaves alone
+            spec = zero_shard_spec(spec, leaf.shape)
+        return spec
+    return jax.tree_util.tree_map_with_path(f, abstract)
+
+
+def constrain_seq_sp(x: jax.Array) -> jax.Array:
+    """Megatron-style sequence parallelism on the residual stream: between
+    layer groups the (B, S, D) activations are sharded over BOTH the data
+    axes (batch) and the model axis (sequence). XLA inserts the
+    all-gather/reduce-scatter pair around attention/FFN; the scan carry (the
+    remat-saved tensor) stays 1/(n_data*n_model) sized — this is what lets
+    27B/1T-scale train shapes fit HBM."""
+    ctx = get_mesh_context()
+    if ctx is None or x.ndim != 3:
+        return x
+    if x.shape[1] % ctx.n_model != 0 or x.shape[1] < ctx.n_model:
+        return constrain(x, "batch", None, None)
+    data = ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(data, ctx.model_axis, None)))
+
+
+def gnn_param_specs(abstract: Any) -> Any:
+    """GNN params are small (<= a few MB): replicate everything."""
+    return jax.tree.map(lambda leaf: P(*((None,) * leaf.ndim)), abstract)
+
+
+def bst_param_specs(abstract: Any) -> Any:
+    """Embedding tables row-sharded over model; dense layers replicated."""
+    def f(path, leaf):
+        keys = tuple(str(getattr(p, "key", p)) for p in path)
+        if any("table" in k for k in keys) and leaf.ndim == 2:
+            return P("model", None)
+        return P(*((None,) * leaf.ndim))
+    return jax.tree_util.tree_map_with_path(f, abstract)
+
+
+def zero_shard_spec(spec: P, shape: tuple[int, ...]) -> P:
+    """FSDP/ZeRO: shard the largest still-replicated dim over the data axes
+    (if divisible). Applied to params (ZeRO-3), optimizer states and master
+    params. No-op if the spec already uses the data axes."""
+    ctx = get_mesh_context()
+    if ctx is None:
+        return spec
+    used = set()
+    for s in spec:
+        for a in (s if isinstance(s, tuple) else (s,)):
+            used.add(a)
+    if any(a in used for a in ctx.data_axes):
+        return spec
+    n_data = ctx.n_data
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_size = None, 0
+    for i, (s, dim) in enumerate(zip(entries, shape)):
+        if s is None and dim % n_data == 0 and dim > best_size:
+            best, best_size = i, dim
+    if best is None:
+        return spec
+    entries[best] = ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+    return P(*entries)
+
+
+def opt_state_specs(param_specs: Any, param_abs: Any, opt_abs: dict) -> dict:
+    """Specs for an optimizer-state tree (see train/optimizers.py layout):
+    per-leaf dicts keyed m/v/master (adamw), vr/vc/v (adafactor), m (sgdm).
+    Same spec as the param (axes dropped for factored states), then
+    ZeRO-sharded over the data axes."""
+    flat_specs, _ = jax.tree_util.tree_flatten(param_specs,
+                                               is_leaf=lambda s: isinstance(s, P))
+    flat_abs, treedef = jax.tree_util.tree_flatten(param_abs)
+    flat_states = treedef.flatten_up_to(opt_abs["leaves"])
+
+    out_states = []
+    for spec, p, st in zip(flat_specs, flat_abs, flat_states):
+        entries = list(spec) + [None] * (p.ndim - len(spec))
+        d: dict = {}
+        for key, leaf in st.items():
+            if key in ("m", "v", "master"):
+                s = P(*entries)
+            elif key == "vr":
+                s = P(*entries[:-1])
+            elif key == "vc":
+                s = P(*(entries[:-2] + entries[-1:]))
+            else:
+                s = P(*((None,) * leaf.ndim))
+            d[key] = zero_shard_spec(s, leaf.shape)
+        out_states.append(d)
+    return {"step": P(), "leaves": jax.tree_util.tree_unflatten(treedef, out_states)}
+
+
+def named(spec_tree: Any) -> Any:
+    ctx = get_mesh_context()
+    assert ctx is not None
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

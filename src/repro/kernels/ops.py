@@ -1,0 +1,85 @@
+"""Public jit'd wrappers for the kernel layer.
+
+Dispatch policy: Pallas kernels are the TPU-target artifacts; off-TPU (this
+container is CPU-only) every op runs its pure-jnp reference, which is also
+what the multi-pod dry-run lowers (the roofline reads XLA HLO either way).
+Set REPRO_KERNEL_INTERPRET=1 to force the Pallas kernels in interpret mode
+(used by the kernel test-suite and debugging).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.affinity import affinity_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lsh_hash import lsh_hash_pallas
+from repro.kernels.segment_matmul import segment_matmul_pallas
+
+
+def _mode() -> str:
+    if os.environ.get("REPRO_KERNEL_INTERPRET") == "1":
+        return "interpret"
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def affinity(q: jax.Array, c: jax.Array, k_scale, **kw) -> jax.Array:
+    mode = _mode()
+    if mode == "ref":
+        return _ref.affinity_ref(q, c, jnp.asarray(k_scale, jnp.float32))
+    return affinity_pallas(q, c, jnp.asarray(k_scale, jnp.float32),
+                           interpret=(mode == "interpret"), **kw)
+
+
+def flash_attention(q, k, v, q_offset=0, *, causal=True, window=None,
+                    chunk=None, softcap=None, scale=None, flat_gqa=True,
+                    **kw) -> jax.Array:
+    mode = _mode()
+    if mode == "ref":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                  chunk=chunk, softcap=softcap,
+                                  q_offset=q_offset, scale=scale,
+                                  flat_gqa=flat_gqa)
+    return flash_attention_pallas(q, k, v, q_offset, causal=causal,
+                                  window=window, chunk=chunk, softcap=softcap,
+                                  scale=scale, interpret=(mode == "interpret"),
+                                  **kw)
+
+
+def segment_matmul(msg, seg_ids, n_segments: int, **kw) -> jax.Array:
+    mode = _mode()
+    if mode == "ref":
+        return _ref.segment_matmul_ref(msg, seg_ids, n_segments)
+    out = segment_matmul_pallas(msg, seg_ids, n_segments,
+                                interpret=(mode == "interpret"), **kw)
+    # zero rows whose whole row-block was never visited (no edges)
+    bw = kw.get("bw", 128)
+    rb = jnp.where(seg_ids >= 0, seg_ids // bw, n_segments // bw + 1)
+    visited = jnp.zeros(((n_segments + bw - 1) // bw + 2,), bool).at[rb].set(True)
+    return jnp.where(visited[jnp.arange(n_segments) // bw][:, None], out, 0.0)
+
+
+def embedding_bag(table, idx, bag_ids, n_bags: int, mode: str = "sum", **kw):
+    kmode = _mode()
+    if kmode == "ref" or mode == "mean":
+        out = _ref.embedding_bag_ref(table, idx, bag_ids, n_bags, mode=mode)
+        return out
+    out = embedding_bag_pallas(table, idx, bag_ids, n_bags,
+                               interpret=(kmode == "interpret"), **kw)
+    bw = kw.get("bw", 128)
+    rb = jnp.where(bag_ids >= 0, bag_ids // bw, n_bags // bw + 1)
+    visited = jnp.zeros(((n_bags + bw - 1) // bw + 2,), bool).at[rb].set(True)
+    return jnp.where(visited[jnp.arange(n_bags) // bw][:, None], out, 0.0)
+
+
+def lsh_hash(x, proj, bias, seg_len: float, **kw) -> jax.Array:
+    mode = _mode()
+    if mode == "ref":
+        return _ref.lsh_hash_ref(x, proj, bias, seg_len)
+    return lsh_hash_pallas(x, proj, bias, seg_len,
+                           interpret=(mode == "interpret"), **kw)

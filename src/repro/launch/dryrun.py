@@ -1,0 +1,414 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+for the production meshes, with NO array allocation (ShapeDtypeStruct only).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+
+Per cell it records memory_analysis, cost_analysis, and the collective-op
+byte census parsed from the optimized HLO into experiments/dryrun/*.json —
+the roofline (benchmarks/roofline.py) reads these artifacts.
+"""  # noqa: E402
+
+import argparse  # noqa: E402
+import functools  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import all_cells, get_cell  # noqa: E402
+from repro.distributed.context import MeshContext, mesh_context  # noqa: E402
+from repro.distributed import shardings as shd  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.models import bst as bst_m  # noqa: E402
+from repro.models import gnn as gnn_m  # noqa: E402
+from repro.models import transformer as lm_m  # noqa: E402
+from repro.train import steps as steps_lib  # noqa: E402
+from repro.train.optimizers import OptConfig, init_opt_state  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# gradient-accumulation microbatches for LM train cells (1M-token global
+# batches do not fit HBM in one shot at 256 chips — see DESIGN.md §4)
+MICROBATCHES = int(os.environ.get("REPRO_MICROBATCHES", "8"))
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128]{1,0}' -> bytes. Tuple shapes handled by caller."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _while_multipliers(hlo_text: str) -> dict:
+    """computation name -> execution multiplier, from while ops'
+    known_trip_count annotations (nested whiles multiply). XLA cost tooling
+    counts loop bodies once; the census must not."""
+    # which computation does each while body belong to, and its trip count
+    body_trips: dict[str, int] = {}
+    parent_of: dict[str, str] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" "):
+            m = re.match(r"(?:ENTRY )?%?([\w.\-]+) (?:\(|\()", line.strip())
+            if m and "{" in line:
+                current = m.group(1)
+            continue
+        m = re.search(r"while\(.*?body=%?([\w.\-]+)", line)
+        if m:
+            body = m.group(1)
+            tm = re.search(r'known_trip_count[":{ ]+n["\s:]+"?(\d+)', line)
+            trips = int(tm.group(1)) if tm else 1
+            body_trips[body] = trips
+            if current:
+                parent_of[body] = current
+
+    def mult(comp: str, seen=()) -> int:
+        if comp in seen:
+            return 1
+        m = body_trips.get(comp, 1) if comp in body_trips else 1
+        p = parent_of.get(comp)
+        return m * (mult(p, seen + (comp,)) if p else 1)
+
+    # also map each while body's condition comp etc. — only bodies matter
+    return {c: mult(c) for c in body_trips}
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in the optimized HLO,
+    multiplied by the enclosing while-loop trip counts. Convention
+    (EXPERIMENTS.md): link traffic ~= output bytes (x2 for all-reduce: ring
+    moves reduce-scatter + all-gather phases)."""
+    mults = _while_multipliers(hlo_text)
+    census = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    current_mult = 1
+    for line in hlo_text.splitlines():
+        if not line.startswith(" "):
+            m = re.match(r"(?:ENTRY )?%?([\w.\-]+) \(", line.strip())
+            if m and "{" in line:
+                current_mult = mults.get(m.group(1), 1)
+            continue
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*) "
+                     r"([a-z0-9\-]+)\(", ls)
+        if not m:
+            continue
+        shape_str, op = m.groups()
+        if re.search(r"-done(\.|$|\s)", op):
+            continue  # count start ops only
+        base = re.sub(r"-(start|done)$", "", op)
+        kind = next((c for c in _COLLECTIVES if base.startswith(c)), None)
+        if kind is None:
+            continue
+        nbytes = sum(_shape_bytes(s)
+                     for s in re.findall(r"[a-z0-9]+\[[0-9,]*\]", shape_str))
+        scale = 2 if kind == "all-reduce" else 1
+        if kind == "reduce-scatter":
+            # link traffic ~ INPUT bytes = output shard x group size
+            gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", ls)
+            scale = int(gm.group(2)) if gm else 1
+        census[kind]["count"] += current_mult
+        census[kind]["bytes"] += nbytes * current_mult * scale
+    census["total_bytes"] = sum(v["bytes"] for k, v in census.items()
+                                if isinstance(v, dict))
+    return census
+
+
+def _lm_decode_cache_spec(cfg, batch: int, seqlen: int, ctx: MeshContext) -> P:
+    """(G, B, Hkv, S, dh): shard B over data when possible, else S (SP for
+    long-context batch=1); kv heads over model when divisible."""
+    n_data = ctx.n_data
+    data = ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+    kv_ok = cfg.n_kv_heads % ctx.n_model == 0
+    if batch % n_data == 0 and batch >= n_data:
+        return P(None, data, ctx.model_axis if kv_ok else None,
+                 None if kv_ok else ctx.model_axis, None)
+    return P(None, None, ctx.model_axis if kv_ok else None, data, None)
+
+
+def build_lowerable(cell, ctx: MeshContext):
+    """Returns (fn, args_abstract, in_shardings, out_shardings, donate).
+    Donation is part of the memory story: train steps alias params/opt_state
+    in->out; decode aliases the KV cache (without it every decode step would
+    hold two full caches)."""
+    mesh = ctx.mesh
+    ns = lambda spec: NamedSharding(mesh, spec)
+    data = ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+    specs = cell.input_specs()
+
+    if cell.kind == "lm":
+        cfg = cell.model_cfg
+        params_abs = lm_m.abstract_params(cfg)
+        p_specs = shd.lm_param_specs(params_abs, cfg)
+        p_shard = jax.tree.map(lambda s: ns(s), p_specs,
+                               is_leaf=lambda s: isinstance(s, P))
+        if cell.step == "train":
+            opt_cfg = OptConfig(kind="adafactor" if "kimi" in cell.arch else "adamw")
+            opt_abs = jax.eval_shape(functools.partial(init_opt_state, opt_cfg), params_abs)
+            o_specs = shd.opt_state_specs(p_specs, params_abs, opt_abs)
+            o_shard = jax.tree.map(lambda s: ns(s), o_specs,
+                                   is_leaf=lambda s: isinstance(s, P))
+            # bf16 grad accumulation: grads now live in the PARAM sharding,
+            # so fp32 accumulators would be params/TP-shard-sized in fp32
+            # (13.5 GB/dev on gemma2). bf16 halves wire bytes too.
+            fn = steps_lib.make_lm_train_step(
+                cfg, opt_cfg, microbatches=MICROBATCHES,
+                accum_dtype=jnp.bfloat16)
+            args = (params_abs, opt_abs, specs["tokens"])
+            in_sh = (p_shard, o_shard, ns(P(data, None)))
+            out_sh = (p_shard, o_shard, None)
+            return fn, args, in_sh, out_sh, (0, 1)
+        if cell.step == "prefill":
+            fn = steps_lib.make_lm_prefill_step(cfg)
+            return (fn, (params_abs, specs["tokens"]),
+                    (p_shard, ns(P(data, None))), None, ())
+        # decode
+        cache_abs = specs["cache"]
+        b = specs["token"].shape[0]
+        seqlen = jax.tree.leaves(cache_abs)[0].shape[3]
+        c_spec = _lm_decode_cache_spec(cfg, b, seqlen, ctx)
+        c_shard = jax.tree.map(lambda _: ns(c_spec), cache_abs)
+        tok_sh = ns(P(data, None)) if b % ctx.n_data == 0 and b >= ctx.n_data \
+            else ns(P(None, None))
+        fn = steps_lib.make_lm_decode_step(cfg)
+        args = (params_abs, cache_abs, specs["token"], specs["pos"])
+        in_sh = (p_shard, c_shard, tok_sh, ns(P()))
+        out_sh = (None, c_shard)
+        return fn, args, in_sh, out_sh, (1,)
+
+    if cell.kind == "gnn":
+        cfg = cell.model_cfg
+        params_abs = gnn_m.abstract_params(cfg)
+        p_specs = shd.gnn_param_specs(params_abs)
+        p_shard = jax.tree.map(lambda s: ns(s), p_specs,
+                               is_leaf=lambda s: isinstance(s, P))
+        opt_cfg = OptConfig(kind="adamw")
+        opt_abs = jax.eval_shape(functools.partial(init_opt_state, opt_cfg), params_abs)
+        o_shard = jax.tree.map(lambda _: ns(P()), opt_abs)
+
+        def batch_spec(k, v):
+            # GNN arrays have no TP dim: shard over the WHOLE mesh when the
+            # leading dim divides (62M-edge buffers are per-device-deadly at
+            # 1/16); degrade to data axes / replicated otherwise.
+            if k.startswith("edge") or k in ("node_feat", "labels", "targets",
+                                             "graph_ids", "node_mask"):
+                full = ctx.data_axes + (ctx.model_axis,)
+                for cand in (full, ctx.data_axes, ()):
+                    size = 1
+                    for a in cand:
+                        size *= ctx.mesh.shape[a]
+                    if v.shape[0] % size == 0:
+                        lead = (cand if len(cand) > 1 else
+                                (cand[0] if cand else None))
+                        return ns(P(lead, *([None] * (v.ndim - 1))))
+            return ns(P(*([None] * v.ndim)))
+
+        b_shard = {k: batch_spec(k, v) for k, v in specs.items()}
+        fn = steps_lib.make_gnn_train_step(cfg, opt_cfg, cell.loss_kind)
+        args = (params_abs, opt_abs, specs)
+        return (fn, args, (p_shard, o_shard, b_shard),
+                (p_shard, o_shard, None), (0, 1))
+
+    # recsys
+    cfg = cell.model_cfg
+    params_abs = bst_m.abstract_params(cfg)
+    p_specs = shd.bst_param_specs(params_abs)
+    p_shard = jax.tree.map(lambda s: ns(s), p_specs,
+                           is_leaf=lambda s: isinstance(s, P))
+
+    def bst_batch_spec(k, v):
+        if k in ("cand_items", "cand_cats"):
+            # 1e6 candidates: widest divisible sharding (1e6 % 256 != 0)
+            for cand_axes in (ctx.data_axes + (ctx.model_axis,), ctx.data_axes):
+                size = 1
+                for a in cand_axes:
+                    size *= ctx.mesh.shape[a]
+                if v.shape[0] % size == 0:
+                    return ns(P(cand_axes if len(cand_axes) > 1 else cand_axes[0]))
+            return ns(P(None))
+        if cell.step == "retrieval":         # B=1 user context: replicate
+            return ns(P(*([None] * v.ndim)))
+        return ns(P(data, *([None] * (v.ndim - 1))))
+
+    b_shard = {k: bst_batch_spec(k, v) for k, v in specs.items()}
+    if cell.step == "train":
+        opt_cfg = OptConfig(kind="adamw")
+        opt_abs = jax.eval_shape(functools.partial(init_opt_state, opt_cfg), params_abs)
+        o_specs = shd.opt_state_specs(p_specs, params_abs, opt_abs)
+        o_shard = jax.tree.map(lambda s: ns(s), o_specs,
+                               is_leaf=lambda s: isinstance(s, P))
+        fn = steps_lib.make_bst_train_step(cfg, opt_cfg)
+        return (fn, (params_abs, opt_abs, specs),
+                (p_shard, o_shard, b_shard), (p_shard, o_shard, None), (0, 1))
+    fn = (steps_lib.make_bst_retrieval_step(cfg) if cell.step == "retrieval"
+          else steps_lib.make_bst_serve_step(cfg))
+    return fn, (params_abs, specs), (p_shard, b_shard), None, ()
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str) -> dict:
+    cell = get_cell(arch, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "cell_id": cell.cell_id, "step": cell.step, "status": "ok"}
+    if cell.skip_reason:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell.skip_reason
+        _dump(rec, out_dir)
+        return rec
+
+    t0 = time.time()
+    # ZeRO-3 (FSDP) param sharding only where params exceed TP-sharded HBM
+    # (the MoE giants). Dense <30B archs keep params model-sharded resident
+    # (ZeRO-2: only opt states data-sharded) — kills the per-microbatch
+    # weight all-gathers (§Perf iteration 2).
+    fsdp = cell.arch in ("kimi-k2-1t-a32b", "llama4-scout-17b-16e")
+    ctx = mesh_lib.make_context(multi_pod=multi_pod, fsdp=fsdp)
+    try:
+        with mesh_context(ctx):
+            fn, args, in_sh, out_sh, donate = build_lowerable(cell, ctx)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+
+            # --- cost probe: UNROLLED lowering (never compiled) gives exact
+            # global HLO flops/bytes incl. remat recompute; while-loop bodies
+            # are otherwise counted once by XLA's cost analysis.
+            if not os.environ.get("REPRO_SKIP_PROBE"):
+                try:
+                    from repro.models import flags as model_flags
+                    tp = time.time()
+                    model_flags.UNROLL_FOR_COST = True
+                    try:
+                        # rebuild the step fn: a fresh closure defeats the jit
+                        # trace cache, so the unroll flag takes effect
+                        pfn, pargs, pin, pout, pdon = build_lowerable(cell, ctx)
+                        probe = jax.jit(pfn, in_shardings=pin, out_shardings=pout,
+                                        donate_argnums=pdon).lower(*pargs)
+                        pca = probe.cost_analysis() or {}
+                        rec["probe_flops_global"] = float(pca.get("flops", 0.0))
+                        rec["probe_bytes_global"] = float(
+                            pca.get("bytes accessed", 0.0))
+                        rec["probe_s"] = round(time.time() - tp, 2)
+                        del probe
+                    finally:
+                        model_flags.UNROLL_FOR_COST = False
+                except Exception as e:
+                    rec["probe_error"] = repr(e)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+
+            try:
+                mem = compiled.memory_analysis()
+                rec["memory_analysis"] = {
+                    k: int(getattr(mem, k))
+                    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                              "temp_size_in_bytes", "generated_code_size_in_bytes",
+                              "alias_size_in_bytes")
+                    if hasattr(mem, k)}
+                print(f"[{cell.cell_id}/{mesh_name}] memory_analysis:", mem)
+            except Exception as e:  # CPU backend may not support it
+                rec["memory_analysis_error"] = repr(e)
+
+            try:
+                ca = compiled.cost_analysis()
+                rec["cost_analysis"] = {
+                    k: float(v) for k, v in ca.items()
+                    if isinstance(v, (int, float)) and (
+                        "flops" in k or "bytes" in k or "utilization" in k.lower())
+                }
+                rec["flops_per_device"] = float(ca.get("flops", 0.0))
+                rec["bytes_per_device"] = float(ca.get("bytes accessed", 0.0))
+                print(f"[{cell.cell_id}/{mesh_name}] flops/dev="
+                      f"{rec['flops_per_device']:.3e} bytes/dev="
+                      f"{rec['bytes_per_device']:.3e}")
+            except Exception as e:
+                rec["cost_analysis_error"] = repr(e)
+
+            try:
+                hlo = compiled.as_text()
+                rec["collectives"] = collective_census(hlo)
+                rec["hlo_lines"] = hlo.count("\n")
+            except Exception as e:
+                rec["collectives_error"] = repr(e)
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = repr(e)
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    _dump(rec, out_dir)
+    return rec
+
+
+def _dump(rec: dict, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{rec['cell_id']}__{rec['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"]
+    extra = rec.get("skip_reason", rec.get("error", ""))[:80]
+    print(f"[dryrun] {rec['cell_id']:45s} mesh={rec['mesh']:6s} -> {status} "
+          f"({rec.get('total_s', 0)}s) {extra}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--only-missing", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    todo = []
+    if args.all:
+        for cell in all_cells():
+            todo.append((cell.arch, cell.shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo.append((args.arch, args.shape))
+
+    n_err = 0
+    for arch, shape in todo:
+        for mp in meshes:
+            path = os.path.join(
+                args.out, f"{arch}__{shape}__{'multi' if mp else 'single'}.json")
+            if args.only_missing and os.path.exists(path):
+                with open(path) as f:
+                    old = json.load(f)
+                if old.get("status") in ("ok", "skipped"):
+                    continue
+            rec = run_cell(arch, shape, mp, args.out)
+            n_err += rec["status"] == "error"
+    print(f"[dryrun] done, {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

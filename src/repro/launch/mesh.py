@@ -1,0 +1,38 @@
+"""Production mesh builders. Defined as FUNCTIONS so importing this module
+never touches jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init).
+
+Target: TPU v5e pods — 16x16 (256 chips) per pod; the multi-pod mesh adds a
+leading "pod" axis over DCN. Axis conventions in DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.context import MeshContext
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_context(*, multi_pod: bool = False, fsdp: bool = True) -> MeshContext:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    return MeshContext(mesh=mesh, data_axes=data_axes, model_axis="model",
+                       fsdp=fsdp)
+
+
+def make_small_context(n_data: int = 4, n_model: int = 2) -> MeshContext:
+    """Reduced mesh for subprocess tests (8 host devices)."""
+    mesh = jax.make_mesh((n_data, n_model), ("data", "model"))
+    return MeshContext(mesh=mesh, data_axes=("data",), model_axis="model")
+
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW_PER_LINK = 50e9          # B/s per link (~ per-direction)

@@ -1,0 +1,62 @@
+"""Training launcher:
+
+  PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \\
+      --smoke --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+
+--smoke uses the reduced config (CPU-runnable); the full config is intended
+for real accelerators (and is exercised shape-wise by the dry-run). On a
+cluster this entry point is what every host runs (jax.distributed initializes
+from the environment); the data pipeline is stateless so any host count works.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.lm import lm_batch
+from repro.train import steps as S
+from repro.train.optimizers import OptConfig
+from repro.train.trainer import TrainerConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    mod = get_arch(args.arch)
+    cfg = mod.SMOKE_CONFIG if args.smoke else mod.CONFIG
+    opt = OptConfig(lr=args.lr, warmup=min(20, args.steps // 10 + 1),
+                    decay_steps=args.steps)
+    params, opt_state = S.init_train_state(jax.random.PRNGKey(0), "lm", cfg, opt)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq}")
+
+    step_fn = S.make_lm_train_step(cfg, opt, microbatches=args.microbatches)
+    batch_fn = lambda step: lm_batch(jnp.int32(step), batch=args.batch,
+                                     seq_len=args.seq, vocab=cfg.vocab, seed=0)
+    tcfg = TrainerConfig(total_steps=args.steps, log_every=args.log_every,
+                         ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+    _, _, history = train_loop(step_fn, batch_fn, params, opt_state, tcfg)
+    first, last = history[0], history[-1]
+    print(f"[train] loss {first['loss']:.4f} -> {last['loss']:.4f} "
+          f"({last['wall_s']:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

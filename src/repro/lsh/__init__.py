@@ -1,0 +1,8 @@
+from repro.lsh.pstable import (  # noqa: F401
+    LSHParams,
+    LSHTables,
+    build_lsh,
+    hash_points,
+    query_batch,
+    bucket_sizes,
+)

@@ -1,0 +1,123 @@
+"""p-stable Locality Sensitive Hashing (Datar et al., SoCG'04) in pure JAX.
+
+The paper's CIVS step indexes all data items with LSH. A CPU implementation
+chains hash buckets in a hash map; that is hostile to TPUs, so we realize each
+table as ONE sorted permutation of the dataset keyed by a 32-bit mixed bucket
+key. Query = binary search (searchsorted) + a bounded contiguous gather, which
+is fixed-shape and fully vectorizable / vmappable — the TPU-native analogue of
+walking a bucket's chain.
+
+h_{l,j}(v) = floor((w_{l,j} . v + b_{l,j}) / r)   w ~ N(0,1)  (p=2 stable)
+key_l(v)  = mix32(h_{l,1..m})                     (multiply-xor fold)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LSHParams(NamedTuple):
+    n_tables: int = 4          # L
+    n_projections: int = 8     # mu (hash functions per table)
+    seg_len: float = 1.0       # r, the quantization segment length (paper Fig.6)
+    probe: int = 16            # max neighbours gathered per table per query
+
+
+class LSHTables(NamedTuple):
+    proj: jax.Array         # (L, m, d)
+    bias: jax.Array         # (L, m)
+    sorted_keys: jax.Array  # (L, n) uint32, ascending per table
+    perm: jax.Array         # (L, n) int32: position in sorted order -> data index
+
+
+_MIX_MUL = jnp.uint32(0x9E3779B1)  # golden-ratio Weyl constant
+
+
+def _mix_fold(h: jax.Array) -> jax.Array:
+    """Fold (.., m) int32 lattice coords into (..,) uint32 bucket keys."""
+    acc = jnp.full(h.shape[:-1], jnp.uint32(0x811C9DC5))
+    hu = h.astype(jnp.uint32)
+    for j in range(h.shape[-1]):
+        acc = (acc ^ hu[..., j]) * _MIX_MUL
+        acc = acc ^ (acc >> jnp.uint32(15))
+    return acc
+
+
+def hash_points(v: jax.Array, proj: jax.Array, bias: jax.Array, seg_len: float) -> jax.Array:
+    """Keys for v:(n,d) under all tables -> (L, n) uint32."""
+    # (L, n, m) = (n,d) @ (L,d,m)
+    z = jnp.einsum("nd,lmd->lnm", v, proj) + bias[:, None, :]
+    h = jnp.floor(z / seg_len).astype(jnp.int32)
+    return _mix_fold(h)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def build_lsh(v: jax.Array, params: LSHParams, rng: jax.Array) -> LSHTables:
+    n, d = v.shape
+    k_proj, k_bias = jax.random.split(rng)
+    proj = jax.random.normal(k_proj, (params.n_tables, params.n_projections, d), v.dtype)
+    bias = jax.random.uniform(
+        k_bias, (params.n_tables, params.n_projections), v.dtype, 0.0, params.seg_len
+    )
+    keys = hash_points(v, proj, bias, params.seg_len)           # (L, n)
+    order = jnp.argsort(keys, axis=1).astype(jnp.int32)          # (L, n)
+    sorted_keys = jnp.take_along_axis(keys, order.astype(jnp.int32), axis=1)
+    return LSHTables(proj=proj, bias=bias, sorted_keys=sorted_keys, perm=order)
+
+
+def _query_one_table(sorted_keys: jax.Array, perm: jax.Array, key: jax.Array,
+                     salt: jax.Array, probe: int):
+    """Return up to `probe` data indices whose key matches (else -1).
+
+    Large buckets hold more members than `probe`; starting every gather at the
+    bucket head would make all queries into the same bucket return identical
+    candidates (poor CIVS coverage). A per-query salt spreads the probe window
+    pseudo-randomly across the bucket, so the paper's multi-query coverage
+    argument (Fig. 4b) holds even when all support points share one bucket.
+    """
+    start = jnp.searchsorted(sorted_keys, key, side="left")
+    end = jnp.searchsorted(sorted_keys, key, side="right")
+    size = end - start
+    span = jnp.maximum(size - probe, 0)
+    offset = jnp.where(span > 0, (salt % (span.astype(jnp.uint32) + 1)).astype(start.dtype), 0)
+    offs = jnp.arange(probe)
+    pos = jnp.minimum(start + offset + offs, sorted_keys.shape[0] - 1)
+    hit = (sorted_keys[pos] == key) & (start + offset + offs < end)
+    idx = jnp.where(hit, perm[pos], -1)
+    return idx
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def query_batch(tables: LSHTables, q: jax.Array, params: LSHParams) -> jax.Array:
+    """Candidates for queries q:(Q,d) -> (Q, L*probe) int32 data indices, -1 = miss."""
+    z = jnp.einsum("nd,lmd->lnm", q, tables.proj) + tables.bias[:, None, :]
+    h = jnp.floor(z / params.seg_len).astype(jnp.int32)
+    keys = _mix_fold(h)                                              # (L, Q)
+    # per-query salt from the raw float bits of the projections: ANY two
+    # distinct points get different salts, so their probe windows differ even
+    # inside one giant bucket (CIVS coverage, Fig. 4b).
+    bits = jax.lax.bitcast_convert_type(z.astype(jnp.float32), jnp.uint32)
+    salts = _mix_fold(jax.lax.bitcast_convert_type(bits, jnp.int32))
+
+    def per_table(sk, pm, kq, sq):
+        return jax.vmap(lambda kk, ss: _query_one_table(sk, pm, kk, ss, params.probe))(kq, sq)
+
+    cands = jax.vmap(per_table)(tables.sorted_keys, tables.perm, keys, salts)  # (L, Q, probe)
+    return jnp.transpose(cands, (1, 0, 2)).reshape(q.shape[0], -1)
+
+
+@jax.jit
+def bucket_sizes(tables: LSHTables) -> jax.Array:
+    """Per data item: size of its bucket in table 0 (used for PALID seeding —
+    the paper samples initial vertexes from buckets with > 5 items)."""
+    sk = tables.sorted_keys[0]
+    n = sk.shape[0]
+    left = jnp.searchsorted(sk, sk, side="left")
+    right = jnp.searchsorted(sk, sk, side="right")
+    size_sorted = (right - left).astype(jnp.int32)
+    sizes = jnp.zeros((n,), jnp.int32).at[tables.perm[0]].set(size_sorted)
+    return sizes

@@ -1,0 +1,141 @@
+"""Behavior Sequence Transformer (Alibaba, arXiv:1905.06874) — the assigned
+recsys architecture.
+
+Structure per the paper: item+category+position embeddings for the user's
+behavior sequence AND the target item -> 1 transformer block (8 heads) ->
+flatten, concat with "other features" (dense profile stub + multi-hot fields
+via EmbeddingBag) -> MLP 1024-512-256 -> CTR logit.
+
+The embedding LOOKUP is the hot path: tables are row-sharded over the model
+axis, the Pallas embedding_bag kernel is the TPU artifact for the multi-hot
+fields. retrieval_cand scores 1M candidates as one batched forward (user
+context broadcast; candidates sharded over the data axes) — no loops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import constrain
+from repro.kernels import ops as kops
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    embed_dim: int = 32
+    seq_len: int = 20                 # behavior sequence length
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp: tuple[int, ...] = (1024, 512, 256)
+    item_vocab: int = 4_194_304
+    cat_vocab: int = 65_536
+    n_dense: int = 16                 # dense profile/context features (stub)
+    n_multi: int = 2                  # multi-hot fields (EmbeddingBag)
+    multi_bag: int = 8                # ids per multi-hot field
+    multi_vocab: int = 131_072
+    dropout: float = 0.0              # kept for config fidelity; eval mode
+    dtype: object = jnp.float32
+
+
+class BSTInputs(NamedTuple):
+    seq_items: jax.Array      # (B, S) int32
+    seq_cats: jax.Array       # (B, S) int32
+    target_item: jax.Array    # (B,) int32
+    target_cat: jax.Array     # (B,) int32
+    dense_feats: jax.Array    # (B, n_dense) f32
+    multi_ids: jax.Array      # (B, n_multi, bag) int32, -1 pad
+    labels: jax.Array | None = None  # (B,) {0,1} clicks (training)
+
+
+def init_params(rng, cfg: BSTConfig) -> dict:
+    d = cfg.embed_dim
+    ks = iter(jax.random.split(rng, 12))
+    s1 = cfg.seq_len + 1
+    p = {
+        "item_table": L.normal_init(next(ks), (cfg.item_vocab, d), cfg.dtype),
+        "cat_table": L.normal_init(next(ks), (cfg.cat_vocab, d), cfg.dtype),
+        "multi_table": L.normal_init(next(ks), (cfg.multi_vocab, d), cfg.dtype),
+        "pos_embed": L.normal_init(next(ks), (s1, d), cfg.dtype),
+        "blocks": [],
+    }
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        b = {
+            "wq": L.normal_init(next(ks), (d, d), cfg.dtype),
+            "wk": L.normal_init(next(ks), (d, d), cfg.dtype),
+            "wv": L.normal_init(next(ks), (d, d), cfg.dtype),
+            "wo": L.normal_init(next(ks), (d, d), cfg.dtype),
+            "ln1_s": jnp.ones((d,), jnp.float32), "ln1_b": jnp.zeros((d,), jnp.float32),
+            "ln2_s": jnp.ones((d,), jnp.float32), "ln2_b": jnp.zeros((d,), jnp.float32),
+            "ffn": L.mlp_init(next(ks), (d, 4 * d, d), cfg.dtype),
+        }
+        blocks.append(b)
+    p["blocks"] = blocks
+    d_flat = s1 * d + cfg.n_dense + cfg.n_multi * d
+    p["mlp"] = L.mlp_init(next(ks), (d_flat,) + tuple(cfg.mlp) + (1,), cfg.dtype)
+    return p
+
+
+def abstract_params(cfg: BSTConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _block(b, cfg: BSTConfig, x):
+    """Post-LN transformer block (as in the BST paper), (B, S1, d)."""
+    bsz, s1, d = x.shape
+    hd = d // cfg.n_heads
+    q = L.dense(x, b["wq"]).reshape(bsz, s1, cfg.n_heads, hd).swapaxes(1, 2)
+    k = L.dense(x, b["wk"]).reshape(bsz, s1, cfg.n_heads, hd).swapaxes(1, 2)
+    v = L.dense(x, b["wv"]).reshape(bsz, s1, cfg.n_heads, hd).swapaxes(1, 2)
+    att = kops.flash_attention(q, k, v, 0, causal=False)
+    att = att.swapaxes(1, 2).reshape(bsz, s1, d)
+    x = L.layer_norm(x + L.dense(att, b["wo"]), b["ln1_s"], b["ln1_b"])
+    f = L.mlp_apply(b["ffn"], x, act=jax.nn.gelu)
+    return L.layer_norm(x + f, b["ln2_s"], b["ln2_b"])
+
+
+def forward(params: dict, cfg: BSTConfig, inp: BSTInputs) -> jax.Array:
+    """Returns CTR logits (B,)."""
+    bsz = inp.seq_items.shape[0]
+    d = cfg.embed_dim
+
+    items = jnp.concatenate([inp.seq_items, inp.target_item[:, None]], axis=1)
+    cats = jnp.concatenate([inp.seq_cats, inp.target_cat[:, None]], axis=1)
+    x = (params["item_table"][items] + params["cat_table"][cats]
+         + params["pos_embed"][None])
+    x = constrain(x.astype(cfg.dtype), "batch", None, None)
+
+    for b in params["blocks"]:
+        x = _block(b, cfg, x)
+
+    # multi-hot "other features" via EmbeddingBag
+    flat_ids = inp.multi_ids.reshape(-1)                       # (B*n_multi*bag,)
+    bag_ids = jnp.repeat(jnp.arange(bsz * cfg.n_multi), cfg.multi_bag)
+    bag_ids = jnp.where(flat_ids >= 0, bag_ids, -1)
+    bags = kops.embedding_bag(params["multi_table"], flat_ids, bag_ids,
+                              bsz * cfg.n_multi).reshape(bsz, cfg.n_multi * d)
+
+    feat = jnp.concatenate(
+        [x.reshape(bsz, -1), inp.dense_feats.astype(cfg.dtype),
+         bags.astype(cfg.dtype)], axis=-1)
+    logit = L.mlp_apply(params["mlp"], feat, act=jax.nn.leaky_relu)
+    return logit[:, 0].astype(jnp.float32)
+
+
+def retrieval_score(params: dict, cfg: BSTConfig, user: BSTInputs,
+                    cand_items: jax.Array, cand_cats: jax.Array) -> jax.Array:
+    """Score ONE user context against n_candidates items: broadcast the user
+    sequence, shard candidates over the data axes. (B=1 inputs.)"""
+    nc = cand_items.shape[0]
+    tile = lambda a: jnp.broadcast_to(a, (nc,) + a.shape[1:])
+    inp = BSTInputs(
+        seq_items=tile(user.seq_items), seq_cats=tile(user.seq_cats),
+        target_item=cand_items, target_cat=cand_cats,
+        dense_feats=tile(user.dense_feats), multi_ids=tile(user.multi_ids))
+    return forward(params, cfg, inp)

@@ -1,0 +1,16 @@
+"""Lowering-mode flags.
+
+UNROLL_FOR_COST: when True, every structural scan (layer groups, gradient-
+accumulation microbatches, attention q-blocks) fully unrolls. XLA's
+cost_analysis counts while-loop bodies ONCE (verified in this repo's dry-run
+notes), so the roofline lowers a second "cost probe" of each cell with this
+flag set and reads flops/bytes from the UNROLLED, UNPARTITIONED module —
+exact global HLO numbers including remat recompute. The probe is only
+lowered, never compiled or run.
+"""
+
+UNROLL_FOR_COST = False
+
+
+def scan_unroll(length: int) -> int:
+    return length if UNROLL_FOR_COST else 1

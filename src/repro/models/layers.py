@@ -1,0 +1,87 @@
+"""Shared neural building blocks (no flax — params are plain pytrees of
+arrays; each block has init(rng, ...) -> params and an apply function).
+
+Conventions:
+  activations bf16 (configurable), matmul accumulation fp32 via
+  preferred_element_type, norms in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def he_init(rng, shape, dtype, fan_in=None):
+    fan_in = shape[0] if fan_in is None else fan_in
+    return (jax.random.normal(rng, shape) * (2.0 / fan_in) ** 0.5).astype(dtype)
+
+
+def normal_init(rng, shape, dtype, stddev=0.02):
+    return (jax.random.normal(rng, shape) * stddev).astype(dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    out = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b
+    return out.astype(x.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             zero_centered: bool = True) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    norm = x32 * jax.lax.rsqrt(var + eps)
+    gamma = (1.0 + scale.astype(jnp.float32)) if zero_centered else scale.astype(jnp.float32)
+    return (norm * gamma).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, dh), positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]  # (..,S,half)
+    cos = jnp.cos(ang)[..., :, None, :]   # (.., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_init(rng, sizes: tuple[int, ...], dtype, bias: bool = True) -> dict:
+    params = {}
+    keys = jax.random.split(rng, len(sizes) - 1)
+    for i, (din, dout) in enumerate(zip(sizes[:-1], sizes[1:])):
+        params[f"w{i}"] = he_init(keys[i], (din, dout), dtype)
+        if bias:
+            params[f"b{i}"] = jnp.zeros((dout,), dtype)
+    return params
+
+
+def mlp_apply(params: dict, x: jax.Array, act=jax.nn.relu,
+              final_act: bool = False) -> jax.Array:
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        x = dense(x, params[f"w{i}"], params.get(f"b{i}"))
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

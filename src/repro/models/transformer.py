@@ -1,0 +1,357 @@
+"""Config-driven decoder-only transformer covering all five assigned LM
+architectures:
+
+  gemma2-27b        alternating local(SWA)/global layers, attn+final softcap,
+                    post-norms, sqrt(d) embed scaling
+  deepseek-7b       llama-style dense GQA
+  h2o-danube-1.8b   llama+mistral mix, SWA everywhere
+  llama4-scout      MoE (16e top-1 sigmoid + shared), iRoPE interleaving
+                    (3 chunked-local layers : 1 full-attention NoPE layer)
+  kimi-k2           trillion-param MoE (384e top-8 + 1 shared)
+
+Layers are stacked and scanned in GROUPS of len(pattern) so alternating layer
+kinds stay shape-homogeneous (HLO stays small: one group body regardless of
+depth — essential for compiling 61-layer models for 512 devices).
+
+Params are plain pytrees; logical sharding rules live in
+repro/distributed/shardings.py keyed by param-tree paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import layers as L
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    pattern: tuple[str, ...] = ("full",)  # cycled kinds: full|local|chunked|full_nope
+    window: int = 4096
+    chunk: int = 8192
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    embed_scale: bool = False            # gemma: scale embeddings by sqrt(d)
+    post_norms: bool = False             # gemma2: post-attn/post-ffn RMSNorms
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, (self.n_layers, self.pattern)
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def attention_kinds(self) -> tuple[str, ...]:
+        return tuple(self.pattern)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for roofline MODEL_FLOPS)."""
+        d, h, kv, dh, f, v = (self.d_model, self.n_heads, self.n_kv_heads,
+                              self.head_dim, self.d_ff, self.vocab)
+        attn = d * h * dh + 2 * d * kv * dh + h * dh * d
+        if self.moe:
+            ffn = (3 * d * self.moe.d_ff * self.moe.n_experts
+                   + 3 * d * self.moe.d_ff * self.moe.n_shared
+                   + d * self.moe.n_experts)
+        else:
+            ffn = 3 * d * f
+        norms = 2 * d + (2 * d if self.post_norms else 0)
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn + norms) + emb + d
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        attn = (d * self.n_heads * self.head_dim
+                + 2 * d * self.n_kv_heads * self.head_dim
+                + self.n_heads * self.head_dim * d)
+        ffn = 3 * d * self.moe.d_ff * (self.moe.top_k + self.moe.n_shared)
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn) + emb
+
+
+# ----------------------------------------------------------------- params --
+def _layer_init(rng, cfg: LMConfig, dtype) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 8)
+    p = {
+        "ln_attn": jnp.zeros((d,), jnp.float32),
+        "wq": L.normal_init(ks[0], (d, h * dh), dtype),
+        "wk": L.normal_init(ks[1], (d, kv * dh), dtype),
+        "wv": L.normal_init(ks[2], (d, kv * dh), dtype),
+        "wo": L.normal_init(ks[3], (h * dh, d), dtype),
+        "ln_ffn": jnp.zeros((d,), jnp.float32),
+    }
+    if cfg.post_norms:
+        p["ln_attn_post"] = jnp.zeros((d,), jnp.float32)
+        p["ln_ffn_post"] = jnp.zeros((d,), jnp.float32)
+    if cfg.moe is not None:
+        p["moe"] = moe_init(ks[4], cfg.moe, d, dtype)
+    else:
+        p["ffn"] = {
+            "w_gate": L.normal_init(ks[5], (d, cfg.d_ff), dtype),
+            "w_up": L.normal_init(ks[6], (d, cfg.d_ff), dtype),
+            "w_down": L.normal_init(ks[7], (cfg.d_ff, d), dtype),
+        }
+    return p
+
+
+def init_params(rng, cfg: LMConfig) -> dict:
+    dtype = cfg.dtype
+    k_emb, k_head, *k_layers = jax.random.split(rng, 2 + len(cfg.pattern))
+    params: dict = {
+        "embed": L.normal_init(k_emb, (cfg.vocab, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.normal_init(k_head, (cfg.d_model, cfg.vocab), dtype)
+    # stacked per pattern position: each leaf gets a leading (n_groups,) axis
+    blocks = {}
+    for i, _kind in enumerate(cfg.pattern):
+        def stack(g):
+            return _layer_init(jax.random.fold_in(k_layers[i], g), cfg, dtype)
+        leaves = [stack(g) for g in range(cfg.n_groups)]
+        blocks[f"layer{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+    params["blocks"] = blocks
+    return params
+
+
+def abstract_params(cfg: LMConfig) -> Any:
+    """Shapes/dtypes only — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------- forward --
+def _attn_kwargs(cfg: LMConfig, kind: str) -> dict:
+    if kind == "local":
+        return dict(causal=True, window=cfg.window, softcap=cfg.attn_softcap)
+    if kind == "chunked":
+        return dict(causal=True, chunk=cfg.chunk, softcap=cfg.attn_softcap)
+    return dict(causal=True, softcap=cfg.attn_softcap)
+
+
+def _attention(p, cfg: LMConfig, kind: str, x, positions, cache=None,
+               cache_pos=None, training: bool = True):
+    """x: (B, S, D). cache: optional dict(k,v): (B, Hkv, S_max, dh).
+    Returns (out, new_cache)."""
+    from repro.distributed.shardings import constrain
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    from repro.distributed.context import get_mesh_context
+    ctx = get_mesh_context()
+    n_model = ctx.n_model if ctx else 1
+    if training:
+        # Megatron layout: full-seq activations inside the block (the SP
+        # all-gather happens here), heads sharded over model. Without these
+        # constraints XLA reduces SP-partial WEIGHT grads at full f32 size
+        # (measured 3.9 TB/step on gemma2 — §Perf iteration 4). Inference
+        # paths skip them: there is no backward, XLA's propagation from the
+        # cache/batch shardings is already collective-free (decode measured
+        # 4.7 GB -> 0 GB when driven by the cache sharding alone).
+        # Head constraints apply ONLY when the head count divides the model
+        # axis — a degraded (replicated) constraint is an active
+        # pessimization (llama4's 40 heads: measured 0.8x regression).
+        x = constrain(x, "batch", None, None)
+        q = L.dense(x, p["wq"]).reshape(b, s, h, dh)
+        k = L.dense(x, p["wk"]).reshape(b, s, kv, dh)
+        v = L.dense(x, p["wv"]).reshape(b, s, kv, dh)
+        if h % n_model == 0:
+            q = constrain(q, "batch", None, "heads", None)
+        if kv % n_model == 0:
+            k = constrain(k, "batch", None, "kv_heads", None)
+            v = constrain(v, "batch", None, "kv_heads", None)
+    else:
+        q = L.dense(x, p["wq"]).reshape(b, s, h, dh)
+        k = L.dense(x, p["wk"]).reshape(b, s, kv, dh)
+        v = L.dense(x, p["wv"]).reshape(b, s, kv, dh)
+    if kind != "full_nope":
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    q = jnp.swapaxes(q, 1, 2)   # (B, H, S, dh)
+    k = jnp.swapaxes(k, 1, 2)
+    v = jnp.swapaxes(v, 1, 2)
+
+    # grouped-kv einsum when flat heads cannot hold the model-axis sharding
+    flat = (cfg.n_heads % n_model == 0)
+    if cache is None:
+        out = kops.flash_attention(q, k, v, 0, flat_gqa=flat,
+                                   **_attn_kwargs(cfg, kind))
+        new_cache = None
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, 0, cache_pos, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, 0, cache_pos, 0))
+        out = kops.flash_attention(q, ck, cv, cache_pos, flat_gqa=flat,
+                                   **_attn_kwargs(cfg, kind))
+        new_cache = {"k": ck, "v": cv}
+    out = jnp.swapaxes(out, 1, 2).reshape(b, s, h * dh)
+    return L.dense(out, p["wo"]), new_cache
+
+
+def _dense_ffn(p, x, training: bool = True):
+    from repro.distributed.shardings import constrain
+    if training:
+        x = constrain(x, "batch", None, None)
+    g = jax.nn.silu(L.dense(x, p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    u = L.dense(x, p["w_up"])
+    h = g * u
+    if training:
+        h = constrain(h, "batch", None, "mlp")
+    return L.dense(h, p["w_down"])
+
+
+def _block(p, cfg: LMConfig, kind: str, x, positions, cache=None,
+           cache_pos=None, training: bool = True):
+    a_in = L.rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    a_out, new_cache = _attention(p, cfg, kind, a_in, positions, cache,
+                                  cache_pos, training=training)
+    if cfg.post_norms:
+        a_out = L.rms_norm(a_out, p["ln_attn_post"], cfg.norm_eps)
+    x = x + a_out
+    f_in = L.rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+    if cfg.moe is not None:
+        f_out, aux = moe_apply(p["moe"], cfg.moe, f_in)
+    else:
+        f_out, aux = _dense_ffn(p["ffn"], f_in, training=training), jnp.float32(0.0)
+    if cfg.post_norms:
+        f_out = L.rms_norm(f_out, p["ln_ffn_post"], cfg.norm_eps)
+    return x + f_out, aux, new_cache
+
+
+def forward(params: dict, cfg: LMConfig, tokens: jax.Array,
+            training: bool = True):
+    """Training/prefill forward. tokens: (B, S) -> logits (B, S, V) + aux.
+    training=False skips the Megatron TP/SP constraints (inference has no
+    backward; XLA auto-propagation is collective-cheaper there)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    from repro.distributed.shardings import constrain_seq_sp
+    if training:
+        x = constrain_seq_sp(x)
+
+    def group_body(carry, group_params):
+        x, aux = carry
+        for i, kind in enumerate(cfg.pattern):
+            x, a, _ = _block(group_params[f"layer{i}"], cfg, kind, x,
+                             positions, training=training)
+            aux = aux + a
+        # sequence-parallel boundary: the remat-saved scan carry is sharded
+        # over data x model (Megatron-SP), not replicated over model.
+        return ((constrain_seq_sp(x) if training else x), aux), None
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    from repro.models.flags import scan_unroll
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"],
+                               unroll=scan_unroll(cfg.n_groups))
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.dense(x, head.astype(cfg.dtype)).astype(jnp.float32)
+    logits = L.softcap(logits, cfg.final_softcap)
+    return logits, aux / cfg.n_layers
+
+
+# ----------------------------------------------------------------- decode --
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None) -> dict:
+    """Stacked KV cache: per pattern position, (G, B, Hkv, S_max, dh)."""
+    dtype = dtype or cfg.dtype
+    kvh, dh, g = cfg.n_kv_heads, cfg.head_dim, cfg.n_groups
+    def one(_kind):
+        # NOTE: local(SWA) layers only need window-length caches; we keep all
+        # caches max_len so the scan stays shape-homogeneous. Ring-buffer SWA
+        # caches are a recorded §Perf optimization (see EXPERIMENTS.md).
+        return {"k": jnp.zeros((g, batch, kvh, max_len, dh), dtype),
+                "v": jnp.zeros((g, batch, kvh, max_len, dh), dtype)}
+    return {f"layer{i}": one(kind) for i, kind in enumerate(cfg.pattern)}
+
+
+def _cache_forward(params: dict, cfg: LMConfig, cache: dict, tokens: jax.Array,
+                   pos: jax.Array):
+    """Forward T tokens against a KV cache, writing them at [pos, pos+T).
+    T=1 is decode; T=prompt_len with pos=0 is prefill. Returns
+    (logits (B, T, V), new_cache)."""
+    b, t = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)     # (B, T, D)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.dtype)
+    positions = (pos + jnp.arange(t))[None, :].astype(jnp.int32)
+    positions = jnp.broadcast_to(positions, (b, t))
+
+    def group_body(carry, xs):
+        # cache travels in the CARRY with indexed in-place updates: XLA then
+        # keeps ONE cache buffer alive through the loop (donated in->out);
+        # cache-as-scan-ys would allocate a second full cache (measured +6
+        # GB/device on gemma2 decode_32k).
+        x, cache = carry
+        group_params, g = xs
+        for i, kind in enumerate(cfg.pattern):
+            layer_cache = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, g, 0, keepdims=False),
+                {"k": cache[f"layer{i}"]["k"], "v": cache[f"layer{i}"]["v"]})
+            x, _, nc = _block(group_params[f"layer{i}"], cfg, kind, x,
+                              positions, cache=layer_cache, cache_pos=pos,
+                              training=False)
+            cache = {
+                **cache,
+                f"layer{i}": jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                        full, new, g, 0),
+                    cache[f"layer{i}"], nc),
+            }
+        return (x, cache), None
+
+    from repro.models.flags import scan_unroll
+    n_groups = cfg.n_groups
+    (x, new_cache), _ = jax.lax.scan(
+        group_body, (x, cache),
+        (params["blocks"], jnp.arange(n_groups, dtype=jnp.int32)),
+        unroll=scan_unroll(n_groups))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.dense(x, head.astype(cfg.dtype)).astype(jnp.float32)
+    return L.softcap(logits, cfg.final_softcap), new_cache
+
+
+def decode_step(params: dict, cfg: LMConfig, cache: dict, token: jax.Array,
+                pos: jax.Array):
+    """One decode step. token: (B, 1) int32; pos: scalar int32 (current write
+    position = number of tokens already in the cache).
+    Returns (logits (B, V), new_cache)."""
+    logits, new_cache = _cache_forward(params, cfg, cache, token, pos)
+    return logits[:, 0, :], new_cache
+
+
+def prefill_with_cache(params: dict, cfg: LMConfig, cache: dict,
+                       tokens: jax.Array):
+    """Prefill a prompt into an (empty) cache. Returns (last_logits (B, V),
+    new_cache)."""
+    logits, new_cache = _cache_forward(params, cfg, cache, tokens, jnp.int32(0))
+    return logits[:, -1, :], new_cache

@@ -1,0 +1,1 @@
+from repro.serve.engine import ServeConfig, generate, BatchServer  # noqa: F401

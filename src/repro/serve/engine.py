@@ -1,0 +1,106 @@
+"""Batched LM serving: prefill + jitted decode loop with per-slot state, and
+a BatchServer that packs queued requests into fixed batch slots (static
+shapes) — the continuous-batching-lite pattern.
+
+Long-context decode (the long_500k cell) shards the KV cache over the data
+axes (sequence parallelism for batch=1); the partial-softmax combine is
+handled by XLA's sharded reduction — see launch/dryrun._lm_decode_cache_spec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as lm_m
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 => greedy
+    eos_id: Optional[int] = None
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "scfg"))
+def _decode_loop(params, cfg: lm_m.LMConfig, scfg: ServeConfig, cache,
+                 first_logits, prompt_len, rng):
+    b = first_logits.shape[0]
+
+    def sample(logits, key):
+        if scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / scfg.temperature, axis=-1
+                                      ).astype(jnp.int32)
+
+    def body(carry, t):
+        cache, logits, rng, done = carry
+        rng, key = jax.random.split(rng)
+        tok = sample(logits, key)
+        tok = jnp.where(done, 0, tok)
+        new_logits, cache = lm_m.decode_step(params, cfg, cache, tok[:, None],
+                                             prompt_len + t)
+        if scfg.eos_id is not None:
+            done = done | (tok == scfg.eos_id)
+        return (cache, new_logits, rng, done), tok
+
+    (cache, _, _, _), toks = jax.lax.scan(
+        body, (cache, first_logits, rng, jnp.zeros((b,), bool)),
+        jnp.arange(scfg.max_new_tokens))
+    return jnp.transpose(toks, (1, 0)), cache    # (B, max_new)
+
+
+def generate(params, cfg: lm_m.LMConfig, prompts: jax.Array,
+             scfg: ServeConfig = ServeConfig(), rng=None):
+    """prompts: (B, P) int32 -> generated (B, max_new) int32."""
+    b, p = prompts.shape
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    max_len = p + scfg.max_new_tokens + 1
+    cache = lm_m.init_cache(cfg, b, max_len)
+    first_logits, cache = jax.jit(
+        lambda pr, c, t: lm_m.prefill_with_cache(pr, cfg, c, t)
+    )(params, cache, prompts)
+    out, _ = _decode_loop(params, cfg, scfg, cache, first_logits,
+                          jnp.int32(p), rng)
+    return out
+
+
+class BatchServer:
+    """Fixed-slot batched server: requests queue up, each serve() call packs
+    up to `batch_slots` prompts (padded to a shared length bucket), runs one
+    batched generate, and returns per-request completions."""
+
+    def __init__(self, params, cfg: lm_m.LMConfig, batch_slots: int = 8,
+                 scfg: ServeConfig = ServeConfig()):
+        self.params, self.cfg, self.scfg = params, cfg, scfg
+        self.batch_slots = batch_slots
+        self.queue: list[tuple[int, np.ndarray]] = []
+        self._next_id = 0
+
+    def submit(self, prompt_tokens: np.ndarray) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, np.asarray(prompt_tokens, np.int32)))
+        return rid
+
+    def serve(self) -> dict[int, np.ndarray]:
+        results: dict[int, np.ndarray] = {}
+        while self.queue:
+            batch = self.queue[:self.batch_slots]
+            self.queue = self.queue[self.batch_slots:]
+            maxp = max(len(p) for _, p in batch)
+            prompts = np.zeros((self.batch_slots, maxp), np.int32)
+            lens = np.zeros((self.batch_slots,), np.int32)
+            for i, (_, p) in enumerate(batch):
+                prompts[i, maxp - len(p):] = p   # left-pad to align last token
+                lens[i] = len(p)
+            out = np.asarray(generate(self.params, self.cfg,
+                                      jnp.asarray(prompts), self.scfg))
+            for i, (rid, _) in enumerate(batch):
+                results[rid] = out[i]
+        return results

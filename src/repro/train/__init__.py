@@ -1,0 +1,1 @@
+from repro.train.optimizers import OptConfig, init_opt_state, opt_update  # noqa: F401

@@ -1,0 +1,84 @@
+"""Gradient compression with error feedback (1-bit Adam / EF-SGD family) for
+the cross-pod DP all-reduce: over DCN the gradient synchronization is the
+dominant collective at multi-pod scale; int8 (or top-k) compression with an
+error-feedback residual keeps convergence while cutting DCN bytes 4-32x.
+
+The compressors are pure functions usable around any all-reduce; the trainer
+applies compress->(sum)->decompress with the residual carried in the
+optimizer state (emulating the collective's placement — on real hardware the
+quantized tensor is what crosses the wire)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any   # pytree like grads, fp32
+
+
+def init_ef_state(params: Any) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress_int8(g: jax.Array):
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_topk(g: jax.Array, frac: float = 0.05):
+    """Magnitude top-k (flattened): returns (values, indices, shape)."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx, g.shape
+
+
+def decompress_topk(vals, idx, shape) -> jax.Array:
+    flat = jnp.zeros((int(jnp.prod(jnp.asarray(shape))),), jnp.float32)
+    return flat.at[idx].set(vals).reshape(shape)
+
+
+def ef_compress_grads(grads: Any, ef: EFState, method: str = "int8",
+                      topk_frac: float = 0.05):
+    """Error-feedback compression of a gradient pytree. Returns
+    (decompressed_grads, new_ef_state, stats)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        if method == "int8":
+            q, s = compress_int8(x)
+            d = decompress_int8(q, s)
+        elif method == "topk":
+            v, i, shp = compress_topk(x, topk_frac)
+            d = decompress_topk(v, i, shp)
+        else:
+            raise ValueError(method)
+        return d, x - d
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    dec = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    res = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    err = sum(jnp.sum(o[1] ** 2) for o in outs)
+    return dec, EFState(residual=res), {"ef_residual_sq": err}
+
+
+def compressed_bytes(grads: Any, method: str = "int8",
+                     topk_frac: float = 0.05) -> int:
+    """Wire bytes after compression (for the DCN budget in EXPERIMENTS.md)."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        total += n + 4 if method == "int8" else int(n * topk_frac) * 8
+    return total

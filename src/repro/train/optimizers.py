@@ -1,0 +1,137 @@
+"""Optimizers built in-repo (no optax in the container):
+
+  adamw     — fp32 m/v (+ fp32 master copy when params are low-precision)
+  adafactor — factored second moment, no momentum, no master copy.
+              REQUIRED for kimi-k2: AdamW would need ~14 TB of optimizer
+              state for 1.04T params; Adafactor needs ~params/1000.
+  sgdm      — plain momentum (tests/ablations)
+
+State layout is a pytree parallel to params, so the ZeRO sharding transform
+(distributed/shardings.zero_shard_spec) applies mechanically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | adafactor | sgdm
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    master_fp32: bool = True       # keep fp32 master for low-precision params
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def init_opt_state(cfg: OptConfig, params: Any) -> dict:
+    def leaf_state(p):
+        if cfg.kind == "adamw":
+            s = {"m": jnp.zeros(p.shape, jnp.float32),
+                 "v": jnp.zeros(p.shape, jnp.float32)}
+            if cfg.master_fp32 and p.dtype != jnp.float32:
+                s["master"] = p.astype(jnp.float32)
+            return s
+        if cfg.kind == "adafactor":
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        if cfg.kind == "sgdm":
+            return {"m": jnp.zeros(p.shape, jnp.float32)}
+        raise ValueError(cfg.kind)
+
+    return {"step": jnp.zeros((), jnp.int32),
+            "leaves": jax.tree.map(leaf_state, params)}
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup) / jnp.maximum(cfg.decay_steps - cfg.warmup, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+def opt_update(cfg: OptConfig, grads: Any, state: dict, params: Any):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+
+    def upd_adamw(p, g, s):
+        m = cfg.b1 * s["m"] + (1 - cfg.b1) * g
+        v = cfg.b2 * s["v"] + (1 - cfg.b2) * g * g
+        mh = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vh = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        base = s.get("master", p.astype(jnp.float32))
+        new = base - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                           + cfg.weight_decay * base)
+        ns = {"m": m, "v": v}
+        if "master" in s:
+            ns["master"] = new
+        return new.astype(p.dtype), ns
+
+    def upd_adafactor(p, g, s):
+        g2 = g * g + 1e-30
+        if "vr" in s:
+            vr = cfg.b2 * s["vr"] + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+            vc = cfg.b2 * s["vc"] + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :] + cfg.eps)
+            ns = {"vr": vr, "vc": vc}
+        else:
+            v = cfg.b2 * s["v"] + (1 - cfg.b2) * g2
+            u = g / (jnp.sqrt(v) + cfg.eps)
+            ns = {"v": v}
+        # update clipping (Shazeer & Stern): bound RMS of the update
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        new = p.astype(jnp.float32) - lr * (u + cfg.weight_decay * p.astype(jnp.float32))
+        return new.astype(p.dtype), ns
+
+    def upd_sgdm(p, g, s):
+        m = cfg.b1 * s["m"] + g
+        new = p.astype(jnp.float32) - lr * m
+        return new.astype(p.dtype), {"m": m}
+
+    upd = {"adamw": upd_adamw, "adafactor": upd_adafactor, "sgdm": upd_sgdm}[cfg.kind]
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["leaves"])
+    new_p, new_s = [], []
+    for p, g, s in zip(flat_p, flat_g, flat_s):
+        np_, ns_ = upd(p, g.astype(jnp.float32), s)
+        new_p.append(np_)
+        new_s.append(ns_)
+    new_params = jax.tree.unflatten(treedef, new_p)
+    new_leaves = jax.tree.unflatten(treedef, new_s)
+    return new_params, {"step": step, "leaves": new_leaves}, {
+        "grad_norm": gnorm, "lr": lr}

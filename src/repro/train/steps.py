@@ -1,0 +1,194 @@
+"""Step factories: build the jittable train/serve/decode/retrieval steps for
+every architecture family. The dry-run lowers exactly these functions; the
+trainer/server run them.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import constrain
+from repro.models import bst as bst_m
+from repro.models import gnn as gnn_m
+from repro.models import transformer as lm_m
+from repro.train.optimizers import OptConfig, init_opt_state, opt_update
+
+
+# ------------------------------------------------------------------- LM ----
+def lm_loss(params, cfg: lm_m.LMConfig, tokens: jax.Array):
+    """Next-token CE. tokens: (B, S+1)."""
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = lm_m.forward(params, cfg, inputs)
+    logits = constrain(logits, "batch", None, "vocab")
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    ce = -jnp.mean(ll)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def make_lm_train_step(cfg: lm_m.LMConfig, opt: OptConfig,
+                       microbatches: int = 1,
+                       accum_dtype=jnp.float32) -> Callable:
+    """Train step with gradient-accumulation microbatching. Accumulated grads
+    are ZeRO-sharded (largest replicated dim over the data axes) so the fp32
+    accumulator is ~params/(n_data*n_model) per device — required to fit the
+    assigned 1M-token global batches in HBM."""
+    from repro.distributed.context import get_mesh_context
+    from repro.distributed.shardings import lm_param_specs, named
+
+    def grad_constrain(grads, params):
+        # Accumulate grads in the PARAM sharding. Constraining them to a
+        # different (ZeRO) layout mid-loop made XLA all-gather f32 partials
+        # to full logical size before reducing (measured 3.7 TB/step of
+        # all-reduce on gemma2 train — §Perf iteration 1-3). The optimizer
+        # re-shards ONCE after the loop instead.
+        ctx = get_mesh_context()
+        if ctx is None:
+            return grads
+        specs = lm_param_specs(params, cfg)
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                            named(specs))
+
+    def train_step(params, opt_state, tokens):
+        tokens = constrain(tokens, "batch", None)
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: lm_loss(p, cfg, tokens), has_aux=True)(params)
+            grads = grad_constrain(grads, params)
+        else:
+            b = tokens.shape[0]
+            assert b % microbatches == 0
+            mtoks = tokens.reshape(microbatches, b // microbatches, -1)
+
+            def micro(carry, mt):
+                gacc, lacc = carry
+                mt = constrain(mt, "batch", None)
+                (l, m), g = jax.value_and_grad(
+                    lambda p: lm_loss(p, cfg, mt), has_aux=True)(params)
+                # constrain in PARAM dtype first: the cross-data-shard grad
+                # reduction then moves bf16, not f32 (2x collective bytes) —
+                # §Perf iteration 1
+                g = grad_constrain(g, params)
+                g = jax.tree.map(lambda a: a.astype(accum_dtype), g)
+                gacc = jax.tree.map(jnp.add, gacc, g)
+                return (gacc, lacc + l), m
+
+            gacc0 = grad_constrain(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params),
+                params)
+            from repro.models.flags import scan_unroll
+            (grads, loss_sum), ms = jax.lax.scan(
+                micro, (gacc0, jnp.float32(0.0)), mtoks,
+                unroll=scan_unroll(microbatches))
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(jnp.mean, ms)
+        params, opt_state, opt_metrics = opt_update(opt, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+    return train_step
+
+
+def make_lm_prefill_step(cfg: lm_m.LMConfig) -> Callable:
+    def prefill_step(params, tokens):
+        tokens = constrain(tokens, "batch", None)
+        logits, _ = lm_m.forward(params, cfg, tokens, training=False)
+        return logits[:, -1, :]
+    return prefill_step
+
+
+def make_lm_decode_step(cfg: lm_m.LMConfig) -> Callable:
+    def decode_step(params, cache, token, pos):
+        logits, cache = lm_m.decode_step(params, cfg, cache, token, pos)
+        return logits, cache
+    return decode_step
+
+
+# ------------------------------------------------------------------ GNN ----
+def gnn_loss(params, cfg: gnn_m.GNNConfig, batch: dict, loss_kind: str):
+    g = gnn_m.GraphBatch(
+        node_feat=batch["node_feat"], edge_src=batch["edge_src"],
+        edge_dst=batch["edge_dst"], edge_feat=batch.get("edge_feat"),
+        graph_ids=batch.get("graph_ids"),
+        n_graphs=int(batch["graph_targets"].shape[0]) if "graph_targets" in batch else 1)
+    out = gnn_m.forward(params, cfg, g)
+    if loss_kind == "node_ce":
+        labels = batch["labels"]
+        mask = labels >= 0
+        logp = jax.nn.log_softmax(out.astype(jnp.float32), -1)
+        ll = jnp.take_along_axis(logp, jnp.maximum(labels, 0)[:, None], 1)[:, 0]
+        ce = -jnp.sum(jnp.where(mask, ll, 0.0)) / jnp.maximum(mask.sum(), 1)
+        return ce, {"ce": ce}
+    if loss_kind == "node_mse":
+        tgt = batch["targets"]
+        err2 = (out.astype(jnp.float32) - tgt) ** 2
+        if "node_mask" in batch:   # padded graphs: exclude pad nodes
+            w = batch["node_mask"]
+            mse = jnp.sum(err2 * w[:, None]) / jnp.maximum(
+                jnp.sum(w) * err2.shape[-1], 1.0)
+        else:
+            mse = jnp.mean(err2)
+        return mse, {"mse": mse}
+    if loss_kind == "graph_ce":
+        tgt = batch["graph_targets"]
+        logp = jax.nn.log_softmax(out.astype(jnp.float32), -1)
+        ce = -jnp.mean(jnp.take_along_axis(logp, tgt[:, None], 1))
+        return ce, {"ce": ce}
+    raise ValueError(loss_kind)
+
+
+def make_gnn_train_step(cfg: gnn_m.GNNConfig, opt: OptConfig,
+                        loss_kind: str) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: gnn_loss(p, cfg, batch, loss_kind), has_aux=True)(params)
+        params, opt_state, opt_metrics = opt_update(opt, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+    return train_step
+
+
+# ------------------------------------------------------------------ BST ----
+def bst_loss(params, cfg: bst_m.BSTConfig, batch: dict):
+    inp = bst_m.BSTInputs(**{k: v for k, v in batch.items() if k != "labels"})
+    logits = bst_m.forward(params, cfg, inp)
+    labels = batch["labels"].astype(jnp.float32)
+    bce = jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                   + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return bce, {"bce": bce}
+
+
+def make_bst_train_step(cfg: bst_m.BSTConfig, opt: OptConfig) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: bst_loss(p, cfg, batch), has_aux=True)(params)
+        params, opt_state, opt_metrics = opt_update(opt, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+    return train_step
+
+
+def make_bst_serve_step(cfg: bst_m.BSTConfig) -> Callable:
+    def serve_step(params, batch):
+        inp = bst_m.BSTInputs(**{k: v for k, v in batch.items() if k != "labels"})
+        return bst_m.forward(params, cfg, inp)
+    return serve_step
+
+
+def make_bst_retrieval_step(cfg: bst_m.BSTConfig) -> Callable:
+    def retrieval_step(params, batch):
+        user = bst_m.BSTInputs(
+            seq_items=batch["seq_items"], seq_cats=batch["seq_cats"],
+            target_item=jnp.zeros((1,), jnp.int32),
+            target_cat=jnp.zeros((1,), jnp.int32),
+            dense_feats=batch["dense_feats"], multi_ids=batch["multi_ids"])
+        return bst_m.retrieval_score(params, cfg, user, batch["cand_items"],
+                                     batch["cand_cats"])
+    return retrieval_step
+
+
+def init_train_state(rng, kind: str, cfg: Any, opt: OptConfig):
+    init = {"lm": lm_m.init_params, "gnn": gnn_m.init_params,
+            "recsys": bst_m.init_params}[kind]
+    params = init(rng, cfg)
+    return params, init_opt_state(opt, params)

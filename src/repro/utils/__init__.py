@@ -1,0 +1,1 @@
+from repro.utils.metrics import avg_f1_score, f1_contingency  # noqa: F401

@@ -1,0 +1,32 @@
+"""Detection-quality metrics. The paper evaluates with AVG-F (Chen & Saad,
+TKDE'12): the mean, over TRUE dominant clusters, of the best F1 achieved by
+any detected cluster."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def f1_contingency(true_mask: np.ndarray, pred_mask: np.ndarray) -> float:
+    inter = float(np.sum(true_mask & pred_mask))
+    if inter == 0.0:
+        return 0.0
+    prec = inter / float(np.sum(pred_mask))
+    rec = inter / float(np.sum(true_mask))
+    return 2 * prec * rec / (prec + rec)
+
+
+def avg_f1_score(true_labels: np.ndarray, pred_labels: np.ndarray) -> float:
+    """AVG-F over true clusters (noise = label -1 on both sides)."""
+    true_ids = [t for t in np.unique(true_labels) if t >= 0]
+    pred_ids = [p for p in np.unique(pred_labels) if p >= 0]
+    if not true_ids:
+        return 0.0
+    scores = []
+    for t in true_ids:
+        tm = true_labels == t
+        best = 0.0
+        for p in pred_ids:
+            best = max(best, f1_contingency(tm, pred_labels == p))
+        scores.append(best)
+    return float(np.mean(scores))

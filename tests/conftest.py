@@ -1,0 +1,14 @@
+import os
+
+# Tests must see the REAL device config (1 CPU). The 512-device host-platform
+# override is set ONLY inside launch/dryrun.py (and the dry-run subprocess
+# tests that exec it). Keep compilation single-threaded off the test path.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

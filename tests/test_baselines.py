@@ -1,0 +1,63 @@
+"""Baseline detectors: quality floors on easy data (loose, anti-flake)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.affinity import affinity_matrix, estimate_k
+from repro.core.baselines import (affinity_propagation, kmeans, mean_shift,
+                                  sea_detect, spectral_clustering)
+from repro.core.peeling import ds_detect, iid_detect
+from repro.data import make_blobs_with_noise
+from repro.utils import avg_f1_score
+
+
+@pytest.fixture(scope="module")
+def easy():
+    spec = make_blobs_with_noise(n_clusters=4, cluster_size=25, n_noise=60,
+                                 d=8, seed=7, overlap_pairs=0)
+    pts = jnp.asarray(spec.points)
+    k = float(estimate_k(pts))
+    return spec, pts, k
+
+
+def test_iid_detect(easy):
+    spec, pts, k = easy
+    res = iid_detect(affinity_matrix(pts, k))
+    assert avg_f1_score(spec.labels, res.labels) > 0.75
+
+
+def test_ds_detect(easy):
+    spec, pts, k = easy
+    res = ds_detect(affinity_matrix(pts, k))
+    assert avg_f1_score(spec.labels, res.labels) > 0.7
+
+
+def test_sea_detect(easy):
+    spec, pts, k = easy
+    res = sea_detect(spec.points, k)
+    assert avg_f1_score(spec.labels, res.labels) > 0.4
+
+
+def test_affinity_propagation(easy):
+    spec, _, _ = easy
+    labels, _ = affinity_propagation(spec.points)
+    assert avg_f1_score(spec.labels, labels) > 0.5
+
+
+def test_kmeans(easy):
+    spec, _, _ = easy
+    labels, _ = kmeans(spec.points, 5)
+    assert avg_f1_score(spec.labels, labels) > 0.5
+
+
+def test_spectral(easy):
+    spec, _, k = easy
+    labels = spectral_clustering(spec.points, 5, k)
+    assert avg_f1_score(spec.labels, labels) > 0.5
+
+
+def test_mean_shift(easy):
+    spec, _, _ = easy
+    labels, _ = mean_shift(spec.points, bandwidth=12.0)
+    assert avg_f1_score(spec.labels, labels) > 0.5

@@ -1,0 +1,118 @@
+"""Fault tolerance: atomic checkpoints, exact crash/resume, elastic reshard,
+stateless data skip-ahead."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, list_checkpoints,
+                              restore_checkpoint, save_checkpoint)
+from repro.configs import get_arch
+from repro.data.lm import lm_batch
+from repro.train import steps as S
+from repro.train.optimizers import OptConfig
+from repro.train.trainer import TrainerConfig, train_loop
+
+OPT = OptConfig(lr=1e-3, warmup=2, decay_steps=50)
+
+
+@pytest.fixture()
+def lm_setup():
+    cfg = get_arch("h2o-danube-1.8b").SMOKE_CONFIG
+    params, opt_state = S.init_train_state(jax.random.PRNGKey(0), "lm", cfg, OPT)
+    step_fn = S.make_lm_train_step(cfg, OPT)
+    batch_fn = lambda step: lm_batch(jnp.int32(step), batch=4, seq_len=16,
+                                     vocab=cfg.vocab, seed=3)
+    return cfg, params, opt_state, step_fn, batch_fn
+
+
+def test_checkpoint_roundtrip(tmp_path, lm_setup):
+    _, params, opt_state, _, _ = lm_setup
+    save_checkpoint(str(tmp_path), 7, {"params": params, "opt": opt_state})
+    assert list_checkpoints(str(tmp_path)) == [7]
+    step, tree = restore_checkpoint(str(tmp_path), 7,
+                                    {"params": params, "opt": opt_state})
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(
+            {"params": params, "opt": opt_state})):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_crash_resume_exact(tmp_path, lm_setup):
+    """A crashed-and-resumed run must equal the uninterrupted run exactly
+    (atomic ckpts + stateless batch(step))."""
+    _, params0, opt0, step_fn, batch_fn = lm_setup
+
+    # uninterrupted reference
+    p_ref, o_ref, hist_ref = train_loop(
+        step_fn, batch_fn, params0, opt0,
+        TrainerConfig(total_steps=8, log_every=4, ckpt_every=100, ckpt_dir=None))
+
+    # crash at step 4, resume
+    ck = str(tmp_path / "ck")
+    with pytest.raises(RuntimeError, match="injected crash"):
+        train_loop(step_fn, batch_fn, params0, opt0,
+                   TrainerConfig(total_steps=8, log_every=4, ckpt_every=4,
+                                 ckpt_dir=ck, crash_at_step=5))
+    assert latest_step(ck) == 4
+    p_res, o_res, _ = train_loop(
+        step_fn, batch_fn, params0, opt0,
+        TrainerConfig(total_steps=8, log_every=4, ckpt_every=4, ckpt_dir=ck))
+
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_res)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=0, atol=0)
+
+
+def test_atomic_save_never_corrupts(tmp_path, lm_setup):
+    _, params, opt_state, _, _ = lm_setup
+    save_checkpoint(str(tmp_path), 1, {"params": params})
+    # a stale .tmp dir from a crashed save must not shadow the real ckpt
+    os.makedirs(str(tmp_path / "step_00000002.tmp"))
+    assert latest_step(str(tmp_path)) == 1
+    _, tree = restore_checkpoint(str(tmp_path), 1, {"params": params})
+    assert jax.tree.structure(tree) is not None
+
+
+def test_elastic_reshard_on_restore(tmp_path):
+    """Save under one topology, restore under another (subprocess w/ 8 devs)."""
+    try:
+        from tests.test_distributed import run_subprocess
+    except ImportError:  # plain `pytest tests/` (no cwd on sys.path)
+        from test_distributed import run_subprocess
+    out = run_subprocess(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint import save_checkpoint, restore_checkpoint
+        mesh1 = jax.make_mesh((8,), ("data",))
+        x = jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                           NamedSharding(mesh1, P("data", None)))
+        save_checkpoint(r"{tmp_path}", 3, {{"x": x}})
+        # "restart" on a different mesh shape
+        mesh2 = jax.make_mesh((2, 4), ("a", "b"))
+        sh = {{"x": NamedSharding(mesh2, P("b", "a"))}}
+        step, tree = restore_checkpoint(r"{tmp_path}", 3, {{"x": x}}, sh)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(tree["x"]),
+                                      np.arange(64.0).reshape(8, 8))
+        print("elastic ok", tree["x"].sharding)
+    """)
+    assert "elastic ok" in out
+
+
+def test_stateless_data_skip_ahead():
+    b1 = lm_batch(jnp.int32(17), batch=4, seq_len=8, vocab=128, seed=5)
+    b2 = lm_batch(jnp.int32(17), batch=4, seq_len=8, vocab=128, seed=5)
+    b3 = lm_batch(jnp.int32(18), batch=4, seq_len=8, vocab=128, seed=5)
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    assert not np.array_equal(np.asarray(b1), np.asarray(b3))
+
+
+def test_gc_keeps_last_k(tmp_path, lm_setup):
+    _, params, _, _, _ = lm_setup
+    for s in [1, 2, 3, 4, 5]:
+        save_checkpoint(str(tmp_path), s, {"p": params["final_norm"]}, keep=2)
+    assert list_checkpoints(str(tmp_path)) == [4, 5]

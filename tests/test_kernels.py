@@ -1,0 +1,152 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle, swept
+over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.affinity import affinity_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lsh_hash import lsh_hash_pallas
+from repro.kernels.segment_matmul import segment_matmul_pallas
+
+
+# ------------------------------------------------------------- affinity ----
+@pytest.mark.parametrize("m,n,d", [(16, 16, 8), (100, 50, 32), (130, 257, 100),
+                                   (128, 128, 128), (1, 300, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_affinity_kernel(m, n, d, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(m, d)), dtype)
+    c = jnp.asarray(rng.normal(size=(n, d)), dtype)
+    k = jnp.float32(0.37)
+    got = affinity_pallas(q, c, k, bm=64, bn=64, interpret=True)
+    want = ref.affinity_ref(q, c, k)
+    rtol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=rtol, atol=1e-4)
+
+
+# ------------------------------------------------------- flash attention ----
+@pytest.mark.parametrize("cfg", [
+    dict(b=1, h=4, hkv=4, sq=128, sk=128, dh=32),                       # MHA
+    dict(b=2, h=4, hkv=2, sq=64, sk=64, dh=16),                         # GQA
+    dict(b=1, h=8, hkv=1, sq=100, sk=100, dh=32),                       # MQA+pad
+    dict(b=1, h=2, hkv=2, sq=1, sk=256, dh=64, q_offset=255),           # decode
+    dict(b=1, h=4, hkv=2, sq=128, sk=128, dh=32, window=32),            # SWA
+    dict(b=1, h=4, hkv=2, sq=128, sk=128, dh=32, chunk=64),             # chunked
+    dict(b=1, h=4, hkv=2, sq=128, sk=128, dh=32, softcap=20.0),         # softcap
+    dict(b=1, h=4, hkv=4, sq=96, sk=192, dh=32, q_offset=96),           # chunked prefill
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(cfg, dtype):
+    rng = np.random.default_rng(1)
+    b, h, hkv, sq, sk, dh = (cfg["b"], cfg["h"], cfg["hkv"], cfg["sq"],
+                             cfg["sk"], cfg["dh"])
+    q = jnp.asarray(rng.normal(size=(b, h, sq, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, sk, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, sk, dh)), dtype)
+    kw = dict(causal=True, window=cfg.get("window"), chunk=cfg.get("chunk"),
+              softcap=cfg.get("softcap"), q_offset=cfg.get("q_offset", 0))
+    got = flash_attention_pallas(q, k, v, kw.pop("q_offset"), bq=32, bk=32,
+                                 interpret=True, **kw)
+    want = ref.attention_ref(q, k, v, q_offset=cfg.get("q_offset", 0),
+                             causal=True, window=cfg.get("window"),
+                             chunk=cfg.get("chunk"), softcap=cfg.get("softcap"))
+    rtol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=rtol, atol=2e-3)
+
+
+# --------------------------------------------------------- segment matmul ---
+@pytest.mark.parametrize("e,n_seg,d", [(64, 16, 8), (300, 40, 32), (1000, 257, 16),
+                                       (128, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_segment_matmul_kernel(e, n_seg, d, dtype):
+    rng = np.random.default_rng(2)
+    seg = np.sort(rng.integers(0, n_seg, size=e)).astype(np.int32)
+    # add some padding at the end
+    seg[-e // 10:] = -1
+    seg = np.concatenate([np.sort(seg[seg >= 0]), seg[seg == -1]])
+    msg = jnp.asarray(rng.normal(size=(e, d)), dtype)
+    got = segment_matmul_pallas(msg, jnp.asarray(seg), n_seg, be=64, bw=32,
+                                interpret=True)
+    want = ref.segment_matmul_ref(msg, jnp.asarray(seg), n_seg)
+    # rows in never-visited row blocks may be garbage in the raw kernel; the
+    # ops wrapper masks them. Compare only visited row blocks here.
+    visited = np.zeros(n_seg, bool)
+    for s in seg[seg >= 0]:
+        lo = (s // 32) * 32
+        visited[lo:lo + 32] = True
+    np.testing.assert_allclose(np.asarray(got)[visited],
+                               np.asarray(want)[visited], rtol=1e-5, atol=1e-4)
+
+
+def test_segment_matmul_ops_wrapper_masks_unvisited():
+    import os
+    os.environ["REPRO_KERNEL_INTERPRET"] = "1"
+    try:
+        from repro.kernels import ops
+        rng = np.random.default_rng(3)
+        seg = jnp.asarray(np.array([0, 0, 1, 5, 5, -1], np.int32))
+        msg = jnp.asarray(rng.normal(size=(6, 8)), jnp.float32)
+        got = ops.segment_matmul(msg, seg, 300, be=8, bw=8)
+        want = ref.segment_matmul_ref(msg, seg, 300)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+    finally:
+        del os.environ["REPRO_KERNEL_INTERPRET"]
+
+
+# ---------------------------------------------------------- embedding bag ---
+@pytest.mark.parametrize("v,dim,n_idx,n_bags", [(100, 16, 64, 10),
+                                                (1000, 32, 300, 50),
+                                                (64, 128, 128, 128)])
+def test_embedding_bag_kernel(v, dim, n_idx, n_bags):
+    rng = np.random.default_rng(4)
+    table = jnp.asarray(rng.normal(size=(v, dim)), jnp.float32)
+    bags = np.sort(rng.integers(0, n_bags, size=n_idx)).astype(np.int32)
+    idx = rng.integers(0, v, size=n_idx).astype(np.int32)
+    idx[-n_idx // 8:] = -1
+    order = np.argsort(np.where(idx < 0, np.iinfo(np.int32).max, bags),
+                       kind="stable")
+    bags_s = np.where(idx[order] < 0, -1, bags[order])
+    idx_s = idx[order]
+    got = embedding_bag_pallas(table, jnp.asarray(idx_s), jnp.asarray(bags_s),
+                               n_bags, be=32, bw=16, interpret=True)
+    want = ref.embedding_bag_ref(table, jnp.asarray(idx_s), jnp.asarray(bags_s),
+                                 n_bags)
+    visited = np.zeros(n_bags, bool)
+    for s in bags_s[bags_s >= 0]:
+        lo = (s // 16) * 16
+        visited[lo:lo + 16] = True
+    np.testing.assert_allclose(np.asarray(got)[visited],
+                               np.asarray(want)[visited], rtol=1e-5, atol=1e-4)
+
+
+# -------------------------------------------------------------- lsh hash ----
+@pytest.mark.parametrize("n,d,L,m", [(64, 8, 2, 4), (300, 32, 4, 8), (128, 128, 1, 2)])
+def test_lsh_hash_kernel(n, d, L, m):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    proj = jnp.asarray(rng.normal(size=(L, m, d)), jnp.float32)
+    bias = jnp.asarray(rng.uniform(0, 1, size=(L, m)), jnp.float32)
+    got = lsh_hash_pallas(x, proj, bias, 0.8, bn=32, interpret=True)
+    want = ref.lsh_hash_ref(x, proj, bias, 0.8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lsh_hash_matches_pstable_module():
+    """The kernel must agree with the production LSH used by CIVS."""
+    from repro.lsh.pstable import hash_points
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(50, 16)), jnp.float32)
+    proj = jnp.asarray(rng.normal(size=(3, 4, 16)), jnp.float32)
+    bias = jnp.asarray(rng.uniform(0, 2, size=(3, 4)), jnp.float32)
+    got = lsh_hash_pallas(x, proj, bias, 2.0, bn=16, interpret=True)
+    want = np.asarray(hash_points(x, proj, bias, 2.0)).T  # (L,n) -> (n,L)
+    got_u = np.asarray(got).astype(np.uint32)
+    np.testing.assert_array_equal(got_u, want.astype(np.uint32))

@@ -1,0 +1,78 @@
+"""LID is a LOCALIZATION of IID: on the same (full) index range with the same
+start, the two dynamics must converge to the same dense subgraph. This pins
+the core algorithmic equivalence the paper's Sec. 4.1 asserts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.affinity import affinity_matrix, estimate_k
+from repro.core.iid import iid_solve
+from repro.core.lid import LIDState, density, lid_solve
+from repro.data import make_blobs_with_noise
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_lid_equals_iid_on_full_range(seed):
+    spec = make_blobs_with_noise(n_clusters=3, cluster_size=15, n_noise=15,
+                                 d=8, seed=seed, overlap_pairs=0)
+    pts = jnp.asarray(spec.points)
+    n = pts.shape[0]
+    k = float(estimate_k(pts))
+    a = affinity_matrix(pts, k)
+
+    # same start: barycenter of the full simplex
+    x0 = jnp.full((n,), 1.0 / n)
+    iid = iid_solve(a, x0, max_iters=5000, tol=1e-6)
+
+    state = LIDState(
+        beta_idx=jnp.arange(n, dtype=jnp.int32),
+        beta_mask=jnp.ones((n,), bool),
+        v_beta=pts,
+        x=x0,
+        ax=a @ x0,
+        n_iters=jnp.int32(0),
+        converged=jnp.array(False),
+    )
+    lid = lid_solve(state, jnp.float32(k), max_iters=5000, tol=1e-6)
+
+    # f32 noise can keep the 1e-6 stopping rule from firing even at the fixed
+    # point — equivalence is judged on density + support, not the flag
+    np.testing.assert_allclose(float(density(lid)), float(iid.density),
+                               rtol=1e-4)
+    sup_iid = set(np.where(np.asarray(iid.x) > 1e-5)[0].tolist())
+    sup_lid = set(np.asarray(lid.beta_idx)[np.asarray(lid.x) > 1e-5].tolist())
+    # same dense subgraph (allow 1-2 boundary members of tiny weight)
+    assert len(sup_iid ^ sup_lid) <= 2, (sup_iid, sup_lid)
+
+
+def test_lid_on_subrange_matches_iid_on_submatrix():
+    spec = make_blobs_with_noise(n_clusters=2, cluster_size=20, n_noise=10,
+                                 d=8, seed=5, overlap_pairs=0)
+    pts = jnp.asarray(spec.points)
+    k = float(estimate_k(pts))
+    beta = np.where(spec.labels == 0)[0][:16]          # a strict subrange
+    sub = pts[jnp.asarray(beta)]
+    a_sub = affinity_matrix(sub, k)
+    m = len(beta)
+    x0 = jnp.full((m,), 1.0 / m)
+    iid = iid_solve(a_sub, x0, max_iters=2000, tol=1e-6)
+
+    cap = 24
+    pad = cap - m
+    state = LIDState(
+        beta_idx=jnp.concatenate([jnp.asarray(beta, jnp.int32),
+                                  jnp.full((pad,), -1, jnp.int32)]),
+        beta_mask=jnp.concatenate([jnp.ones((m,), bool), jnp.zeros((pad,), bool)]),
+        v_beta=jnp.concatenate([sub, jnp.zeros((pad, pts.shape[1]))]),
+        x=jnp.concatenate([x0, jnp.zeros((pad,))]),
+        ax=jnp.concatenate([a_sub @ x0, jnp.zeros((pad,))]),
+        n_iters=jnp.int32(0),
+        converged=jnp.array(False),
+    )
+    lid = lid_solve(state, jnp.float32(k), max_iters=2000, tol=1e-6)
+    np.testing.assert_allclose(float(density(lid)), float(iid.density),
+                               rtol=1e-4)
+    # padding must remain untouched
+    assert float(jnp.abs(lid.x[m:]).max()) == 0.0

@@ -1,0 +1,80 @@
+"""Hypothesis property-based tests on the system's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.affinity import affinity_block, affinity_matrix, pairwise_distance
+from repro.core.iid import iid_solve
+from repro.core.roi import estimate_roi
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+points_strategy = hnp.arrays(
+    np.float32, st.tuples(st.integers(3, 24), st.integers(2, 6)),
+    elements=st.floats(-10, 10, width=32),
+)
+
+
+@given(points_strategy)
+@_settings
+def test_affinity_matrix_properties(pts):
+    a = np.asarray(affinity_matrix(jnp.asarray(pts), 0.5))
+    assert np.allclose(np.diag(a), 0.0)
+    assert np.allclose(a, a.T, atol=1e-5)
+    assert (a >= 0).all() and (a <= 1.0 + 1e-6).all()
+
+
+@given(points_strategy)
+@_settings
+def test_pairwise_distance_triangle(pts):
+    """d(i,j) <= d(i,k) + d(k,j) — the inequality Prop. 1 rests on."""
+    d = np.asarray(pairwise_distance(jnp.asarray(pts), jnp.asarray(pts)))
+    n = d.shape[0]
+    lhs = d[:, None, :]                       # d(i, j)
+    rhs = d[:, :, None] + d[None, :, :]       # d(i,k) + d(k,j)
+    assert (lhs <= rhs + 1e-3).all()
+
+
+@given(points_strategy, st.integers(0, 2**31 - 1))
+@_settings
+def test_iid_simplex_and_density_invariants(pts, seed):
+    """From any simplex start, IID stays on the simplex and never decreases
+    pi(x) (Theorem 2)."""
+    n = pts.shape[0]
+    rng = np.random.default_rng(seed)
+    x0 = rng.dirichlet(np.ones(n)).astype(np.float32)
+    a = affinity_matrix(jnp.asarray(pts), 0.3)
+    pi0 = float(x0 @ np.asarray(a) @ x0)
+    res = iid_solve(a, jnp.asarray(x0), max_iters=300)
+    x = np.asarray(res.x)
+    assert (x >= -1e-6).all()
+    assert abs(x.sum() - 1.0) < 1e-3
+    assert float(res.density) >= pi0 - 1e-5
+
+
+@given(points_strategy, st.integers(0, 2**31 - 1))
+@_settings
+def test_roi_proposition1_any_subgraph(pts, seed):
+    """Prop. 1 holds for ANY weighting x on the simplex, not just converged
+    ones: inside the inner ball -> infective; outside the outer -> immune."""
+    n = pts.shape[0]
+    rng = np.random.default_rng(seed)
+    x = rng.dirichlet(np.ones(n)).astype(np.float32)
+    k = 0.7
+    a = np.asarray(affinity_matrix(jnp.asarray(pts), k))
+    roi = estimate_roi(jnp.asarray(pts), jnp.arange(n, dtype=jnp.int32),
+                       jnp.ones(n, bool), jnp.asarray(x), jnp.float32(k),
+                       jnp.int32(5), support_eps=0.0)
+    payoff = a @ x
+    pi = float(np.asarray(roi.pi))
+    dist = np.linalg.norm(pts - np.asarray(roi.center), axis=1)
+    # The inner-ball guarantee is for NON-members (CIVS candidates): for a
+    # support vertex j, (Ax)_j drops the a_jj term (zero diagonal), so the
+    # bound applies to the kernel sum, not the graph payoff.
+    inside = (dist < float(roi.r_in) - 1e-4) & (x <= 0.0)
+    outside = dist > float(roi.r_out) + 1e-4
+    assert (payoff[inside] > pi - 1e-5).all()
+    assert (payoff[outside] < pi + 1e-5).all()

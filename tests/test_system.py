@@ -1,0 +1,66 @@
+"""End-to-end behaviour tests for the paper's system: the full ALID pipeline
+(LSH build -> seed rounds -> LID/ROI/CIVS -> peeling -> labels) against
+ground truth, and agreement with the paper's own full-matrix baseline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.affinity import affinity_matrix, estimate_k
+from repro.core.alid import ALIDConfig, detect_clusters
+from repro.core.peeling import iid_detect
+from repro.data import auto_lsh_params, make_blobs_with_noise, make_regime_dataset
+from repro.utils import avg_f1_score
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return make_blobs_with_noise(n_clusters=8, cluster_size=50, n_noise=600,
+                                 d=24, seed=42)
+
+
+def test_end_to_end_quality(dataset):
+    """The headline claim: ALID finds the dominant clusters in heavy noise
+    without knowing their number."""
+    cfg = ALIDConfig(a_cap=160, delta=128, lsh=auto_lsh_params(dataset.points),
+                     seeds_per_round=16, max_rounds=40)
+    res = detect_clusters(dataset.points, cfg, jax.random.PRNGKey(0))
+    f = avg_f1_score(dataset.labels, res.labels)
+    assert f > 0.85, f
+    # number of substantial clusters ~ true count (8), not the noise
+    sizes = np.bincount(res.labels[res.labels >= 0])
+    assert 6 <= (sizes >= 10).sum() <= 12
+
+
+def test_alid_tracks_full_matrix_baseline(dataset):
+    """ALID's quality must be comparable to the O(n^2) IID baseline (paper
+    Fig. 6/7): within 0.1 AVG-F on this data."""
+    cfg = ALIDConfig(a_cap=160, delta=128, lsh=auto_lsh_params(dataset.points),
+                     seeds_per_round=16, max_rounds=40)
+    res = detect_clusters(dataset.points, cfg, jax.random.PRNGKey(0))
+    f_alid = avg_f1_score(dataset.labels, res.labels)
+
+    pts = jnp.asarray(dataset.points)
+    ref = iid_detect(affinity_matrix(pts, float(estimate_k(pts))))
+    f_iid = avg_f1_score(dataset.labels, ref.labels)
+    assert f_alid > f_iid - 0.1, (f_alid, f_iid)
+
+
+def test_noise_left_unlabeled(dataset):
+    cfg = ALIDConfig(a_cap=160, delta=128, lsh=auto_lsh_params(dataset.points),
+                     seeds_per_round=16, max_rounds=40)
+    res = detect_clusters(dataset.points, cfg, jax.random.PRNGKey(1))
+    noise_idx = dataset.labels == -1
+    # a large majority of true noise must remain unlabeled
+    assert (res.labels[noise_idx] == -1).mean() > 0.8
+    # detected clusters all clear the paper's density threshold
+    assert (res.densities >= cfg.density_min).all()
+
+
+def test_regime_dataset_roundtrip():
+    spec = make_regime_dataset(800, "P", d=16, P=400, seed=1)
+    cfg = ALIDConfig(a_cap=64, delta=96, lsh=auto_lsh_params(spec.points),
+                     seeds_per_round=16, max_rounds=30)
+    res = detect_clusters(spec.points, cfg, jax.random.PRNGKey(0))
+    assert avg_f1_score(spec.labels, res.labels) > 0.6
