@@ -14,17 +14,24 @@ from repro.data import auto_lsh_params, make_blobs_with_noise
 from repro.utils import avg_f1_score
 
 
-def run_alid(spec, seed=0, seg_scale=8.0, a_cap=None, **cfg_kw):
+def run_alid(spec, seed=0, seg_scale=8.0, a_cap=None, probe=16, n_shards=0,
+             **cfg_kw):
     sizes = np.bincount(spec.labels[spec.labels >= 0])
     a_star = int(sizes.max()) if sizes.size else 64
     cfg = ALIDConfig(
         a_cap=a_cap or min(512, max(64, int(a_star * 1.5))), delta=128,
-        lsh=auto_lsh_params(spec.points, seg_scale=seg_scale),
+        lsh=auto_lsh_params(spec.points, seg_scale=seg_scale, probe=probe),
         seeds_per_round=32, max_rounds=64, **cfg_kw)
     t0 = time.time()
-    res = detect_clusters(spec.points, cfg, jax.random.PRNGKey(seed))
+    res = detect_clusters(spec.points, cfg, jax.random.PRNGKey(seed),
+                          n_shards=n_shards)
     dt = time.time() - t0
     return avg_f1_score(spec.labels, res.labels), dt, res
+
+
+def run_alid_sharded(spec, seed=0, n_shards=8, **kw):
+    """run_alid on the out-of-core ShardedStore engine (same config logic)."""
+    return run_alid(spec, seed=seed, n_shards=n_shards, **kw)
 
 
 def run_full_matrix(spec, solver="iid"):

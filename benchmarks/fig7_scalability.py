@@ -1,18 +1,51 @@
 """Paper Fig. 7 / Table 1: empirical runtime-growth exponents for the three
 a* regimes. Under log-log axes the paper reports slopes ~2 (a*=wn),
 ~1+eta (a*=n^eta), ~1 (a*<=P) for ALID, vs ~2 for all full-matrix baselines.
+
+Also compares the replicated CIVS engine against the out-of-core
+ShardedStore engine. Two comparisons per regime:
+
+  * fig7/alid_sharded_* — the sharded engine on the default (truncating)
+    probe: same runtime-growth regime, but big LSH buckets are sampled at
+    shard granularity so clusterings may legitimately diverge; avgf shows
+    quality holds anyway.
+  * fig7/sharded_parity_* — both engines at probe >= bucket sizes (the
+    exhaustive setting of DESIGN.md §3.1): `agree` is the fraction of
+    points with the same canonical label, and must be 1.000.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import csv_line, run_alid, run_full_matrix
+from benchmarks.common import (csv_line, run_alid, run_alid_sharded,
+                               run_full_matrix)
 from repro.data import make_regime_dataset
+from repro.utils import label_agreement
 
 
 def fit_slope(ns, ts):
     return float(np.polyfit(np.log(ns), np.log(np.maximum(ts, 1e-3)), 1)[0])
+
+
+def exhaustive_probe(spec) -> int:
+    """Smallest probe that makes every LSH bucket fully retrievable (no
+    probe-window truncation), so replicated and sharded retrieval must agree
+    exactly (DESIGN.md §3.1). Measured on the same tables run_alid builds."""
+    import jax
+    import jax.numpy as jnp
+    from repro.data import auto_lsh_params
+    from repro.lsh.pstable import build_lsh
+
+    lshp = auto_lsh_params(spec.points, seg_scale=8.0)
+    # same key derivation as detect_clusters(rng=PRNGKey(0)): rng, kb = split
+    kb = jax.random.split(jax.random.PRNGKey(0))[1]
+    tables = build_lsh(jnp.asarray(spec.points), lshp, kb)
+    mx = 1
+    for sk in np.asarray(tables.sorted_keys):
+        _, counts = np.unique(sk, return_counts=True)
+        mx = max(mx, int(counts.max()))
+    return mx
 
 
 def main(quick: bool = True):
@@ -20,16 +53,33 @@ def main(quick: bool = True):
     out = {}
     for regime, kw in [("omega", dict(omega=0.8)), ("eta", dict(eta=0.9)),
                        ("P", dict(P=400))]:
-        times, quals = [], []
+        times, stimes, quals, squals = [], [], [], []
+        spec0 = None
         for n in ns:
             spec = make_regime_dataset(n, regime, d=16, seed=2, **kw)
+            if spec0 is None:
+                spec0 = spec
             f, dt, _ = run_alid(spec)
+            sf, sdt, _ = run_alid_sharded(spec, n_shards=8)
             times.append(dt)
+            stimes.append(sdt)
             quals.append(f)
+            squals.append(sf)
         slope = fit_slope(ns, times)
         out[regime] = (slope, quals[-1])
         csv_line(f"fig7/alid_{regime}", times[-1] * 1e6,
                  f"slope={slope:.2f};avgf_last={quals[-1]:.3f}")
+        csv_line(f"fig7/alid_sharded_{regime}", stimes[-1] * 1e6,
+                 f"slope={fit_slope(ns, stimes):.2f};avgf_last={squals[-1]:.3f}")
+        # exact-parity comparison: probe derived from the data so no bucket
+        # truncates, at the smallest n, where the (a_cap * L * probe)
+        # candidate buffers stay CPU-friendly
+        probe = exhaustive_probe(spec0)
+        fr, tr, rr = run_alid(spec0, probe=probe)
+        fs, ts, rs = run_alid_sharded(spec0, n_shards=8, probe=probe)
+        agree = label_agreement(rr.labels, rs.labels)
+        csv_line(f"fig7/sharded_parity_{regime}", ts * 1e6,
+                 f"t_repl={tr:.2f}s;agree={agree:.3f};avgf={fs:.3f}")
     # quadratic baseline reference on the omega regime (small n only)
     bt = []
     bns = ns[:2]

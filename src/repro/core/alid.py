@@ -22,8 +22,10 @@ import numpy as np
 
 from repro.core.affinity import estimate_k
 from repro.core.civs import civs_update
-from repro.core.lid import LIDState, density, init_state, lid_solve
+from repro.core.lid import (LIDState, density, init_state, init_state_from,
+                            lid_solve)
 from repro.core.roi import estimate_roi
+from repro.core.store import ShardedStore, build_store, global_bucket_sizes, take
 from repro.lsh.pstable import LSHParams, LSHTables, bucket_sizes, build_lsh
 
 
@@ -68,14 +70,18 @@ class Clustering(NamedTuple):
 
 
 def alid_from_seed(
-    points: jax.Array,
+    points: jax.Array | ShardedStore,
     active: jax.Array,
-    tables: LSHTables,
+    tables: LSHTables | None,
     seed_idx: jax.Array,
     k: jax.Array,
     cfg: ALIDConfig,
 ) -> SeedResult:
-    """Alg. 2: one complete ALID run from one seed (jit/vmap friendly)."""
+    """Alg. 2: one complete ALID run from one seed (jit/vmap friendly).
+
+    `points` is either the replicated (n, d) array + monolithic `tables`, or
+    a ShardedStore (`tables=None`) — CIVS then streams shards out-of-core.
+    """
 
     def cond(carry):
         state, c, done, overflow = carry
@@ -96,7 +102,11 @@ def alid_from_seed(
         done = (~res.infective_found) & (grown | (res.n_candidates == 0)) & (c > 1)
         return res.state, c + 1, done, overflow | res.overflow
 
-    state0 = init_state(points, seed_idx, cfg.cap)
+    if isinstance(points, ShardedStore):
+        state0 = init_state_from(take(points, seed_idx[None])[0], seed_idx,
+                                 cfg.cap)
+    else:
+        state0 = init_state(points, seed_idx, cfg.cap)
     state, c, done, overflow = jax.lax.while_loop(
         cond, body, (state0, jnp.int32(1), jnp.array(False), jnp.array(False)))
     # final polish: converge LID on the last beta
@@ -120,7 +130,7 @@ def _run_round(points, active, tables, seeds, seed_valid, k, cfg: ALIDConfig):
         lambda s: alid_from_seed(points, active, tables, s, k, cfg)
     )(seeds)
 
-    n = points.shape[0]
+    n = points.n_points if isinstance(points, ShardedStore) else points.shape[0]
     s_batch, cap = results.member_idx.shape
     flat_idx = results.member_idx.reshape(-1)
     flat_valid = results.member_mask.reshape(-1) & (flat_idx >= 0)
@@ -154,16 +164,12 @@ def _sample_seeds(active, bsizes, rng, cfg: ALIDConfig):
     return seeds.astype(jnp.int32), valid, any_eligible
 
 
-def detect_clusters(points: jax.Array, cfg: ALIDConfig, rng: jax.Array) -> Clustering:
-    """Host-level peeling driver: rounds of batched seeds until the data set is
-    consumed (exhaustive) or no dominant-cluster candidates remain."""
-    points = jnp.asarray(points, jnp.float32)
-    n = points.shape[0]
-    k = jnp.float32(cfg.k) if cfg.k is not None else estimate_k(points)
-    rng, kb = jax.random.split(rng)
-    tables = build_lsh(points, cfg.lsh, kb)
-    bsizes = bucket_sizes(tables)
-
+def _peel(n: int, cfg: ALIDConfig, rng: jax.Array, bsizes: jax.Array,
+          run_round, k: jax.Array) -> Clustering:
+    """Host-level peeling loop shared by the replicated and sharded drivers:
+    rounds of batched seeds until the data set is consumed (exhaustive) or no
+    dominant-cluster candidates remain. `run_round(active, seeds, seed_valid)`
+    returns the `_run_round` tuple for whichever retrieval engine backs it."""
     active = jnp.ones((n,), bool)
     labels = np.full((n,), -1, np.int32)
     densities: list[float] = []
@@ -177,8 +183,8 @@ def detect_clusters(points: jax.Array, cfg: ALIDConfig, rng: jax.Array) -> Clust
             break
         if not cfg.exhaustive and not bool(any_eligible):
             break
-        claimed, best_row, best_dens, results = _run_round(
-            points, active, tables, seeds, seed_valid, k, cfg)
+        claimed, best_row, best_dens, results = run_round(
+            active, seeds, seed_valid)
 
         claimed_np = np.asarray(claimed)
         row_np = np.asarray(best_row)
@@ -202,3 +208,38 @@ def detect_clusters(points: jax.Array, cfg: ALIDConfig, rng: jax.Array) -> Clust
 
     return Clustering(labels=labels, densities=np.asarray(densities, np.float32),
                       n_rounds=rounds, k=float(k))
+
+
+def detect_clusters(points: jax.Array, cfg: ALIDConfig, rng: jax.Array,
+                    n_shards: int = 0) -> Clustering:
+    """Dominant-cluster detection over the full dataset.
+
+    n_shards == 0: replicated engine (monolithic LSH tables, original path).
+    n_shards > 0: out-of-core engine — points + LSH are partitioned into
+    `n_shards` shards and CIVS streams them (see repro.core.store). Both
+    engines share rng consumption and seeding statistics, so on data without
+    exact float ties they produce identical clusterings (tests/test_sharded).
+    """
+    points = jnp.asarray(points, jnp.float32)
+    n = points.shape[0]
+    k = jnp.float32(cfg.k) if cfg.k is not None else estimate_k(points)
+    rng, kb = jax.random.split(rng)
+    if n_shards > 0:
+        store = build_store(points, cfg.lsh, kb, n_shards=n_shards)
+        bsizes = global_bucket_sizes(store)
+        data, tables = store, None
+    else:
+        tables = build_lsh(points, cfg.lsh, kb)
+        bsizes = bucket_sizes(tables)
+        data = points
+
+    def run_round(active, seeds, seed_valid):
+        return _run_round(data, active, tables, seeds, seed_valid, k, cfg)
+
+    return _peel(n, cfg, rng, bsizes, run_round, k)
+
+
+def detect_clusters_sharded(points: jax.Array, cfg: ALIDConfig,
+                            rng: jax.Array, n_shards: int = 8) -> Clustering:
+    """The out-of-core driver: `detect_clusters` on the ShardedStore engine."""
+    return detect_clusters(points, cfg, rng, n_shards=max(1, n_shards))

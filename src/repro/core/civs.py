@@ -11,6 +11,19 @@ slots (sorted by weight — an overflow beyond a_cap drops the lightest members
 and raises `overflow`), psi occupies the trailing `delta` slots. Dedup is
 sort-based; membership tests are masked broadcasts. All shapes are static so
 the whole step vmaps over a batch of seeds.
+
+Two retrieval engines sit behind the one `civs_update` signature:
+
+  * replicated — `points`/`tables` are the full dataset + monolithic LSH
+    (original path);
+  * sharded / out-of-core — `points` is a `repro.core.store.ShardedStore`
+    (`tables=None`): a fori_loop walks the shards whose bounding ball can
+    intersect the ROI ball, probes the shard-local tables, and folds each
+    chunk into a running top-delta candidate buffer (`jax.lax.top_k` over
+    [buffer ++ chunk]). Because shards partition the dataset and share the
+    LSH projections, the union over shards of the chunked retrieval equals
+    the monolithic retrieval exactly (tested in tests/test_sharded.py);
+    peak live affinity/candidate state is O(shard + a_cap + delta), not O(n).
 """
 
 from __future__ import annotations
@@ -24,7 +37,9 @@ import jax.numpy as jnp
 from repro.core.affinity import affinity_block
 from repro.core.lid import LIDState
 from repro.core.roi import ROI
-from repro.lsh.pstable import LSHParams, LSHTables, query_batch
+from repro.core.store import ShardedStore
+from repro.lsh.pstable import (LSHParams, LSHTables, hash_queries,
+                               probe_tables, query_batch)
 
 
 class CIVSResult(NamedTuple):
@@ -34,27 +49,16 @@ class CIVSResult(NamedTuple):
     overflow: jax.Array         # () bool — support exceeded a_cap
 
 
-@functools.partial(jax.jit, static_argnames=("a_cap", "delta", "lsh_params",
-                                             "tol", "support_eps", "p"))
-def civs_update(
-    state: LIDState,
-    roi: ROI,
-    points: jax.Array,
-    active: jax.Array,
-    tables: LSHTables,
-    lsh_params: LSHParams,
-    k: jax.Array,
-    a_cap: int,
-    delta: int,
-    tol: float = 1e-5,
-    support_eps: float = 1e-6,
-    p: float = 2.0,
-) -> CIVSResult:
-    cap = a_cap + delta
-    assert state.x.shape[0] == cap, (state.x.shape, cap)
-    n = points.shape[0]
+def _roi_distance(vc: jax.Array, center: jax.Array, p: float) -> jax.Array:
+    """Distance of candidate rows vc:(C,d) to the ROI center (shared by both
+    engines so replicated/sharded filtering is bit-identical)."""
+    if p == 2.0:
+        return jnp.sqrt(jnp.maximum(jnp.sum((vc - center[None, :]) ** 2, -1), 0.0))
+    return jnp.power(jnp.sum(jnp.abs(vc - center[None, :]) ** p, -1), 1.0 / p)
 
-    # ---- 1. compact support into the first a_cap slots (by weight, desc) ----
+
+def _compact_support(state: LIDState, a_cap: int, support_eps: float):
+    """Step 1: compact the support into the first a_cap slots (weight desc)."""
     w = jnp.where(state.beta_mask, state.x, 0.0)
     is_sup = w > support_eps
     n_sup_total = jnp.sum(is_sup)
@@ -68,44 +72,14 @@ def civs_update(
     sup_x = jnp.where(sup_slot_mask, sup_x, 0.0)
     sup_x = sup_x / jnp.maximum(jnp.sum(sup_x), 1e-12)    # renorm (overflow drop)
     overflow = n_sup_total > a_cap
+    return sup_idx, sup_v, sup_x, sup_slot_mask, overflow
 
-    # ---- 2. LSH query from every support point ----
-    cands = query_batch(tables, sup_v, lsh_params)        # (a_cap, L*probe)
-    cands = jnp.where(sup_slot_mask[:, None], cands, -1)
-    flat = cands.reshape(-1)                              # (a_cap * L * probe,)
 
-    safe = jnp.clip(flat, 0, n - 1)
-    valid = flat >= 0
-    valid &= active[safe]
-    # not already a support member
-    member = jnp.any((safe[:, None] == sup_idx[None, :]) & sup_slot_mask[None, :], axis=1)
-    valid &= ~member
-
-    # ---- 3. sort-based dedup ----
-    sentinel = jnp.int32(n)  # sorts after every real index
-    keys = jnp.where(valid, safe, sentinel)
-    skeys = jnp.sort(keys)
-    uniq = jnp.concatenate([jnp.array([True]), skeys[1:] != skeys[:-1]])
-    cvalid = uniq & (skeys < sentinel)
-    cidx = jnp.clip(skeys, 0, n - 1)
-
-    # ---- 4. ROI filter + take the delta nearest to D ----
-    vc = points[cidx]
-    if p == 2.0:
-        dist = jnp.sqrt(jnp.maximum(jnp.sum((vc - roi.center[None, :]) ** 2, -1), 0.0))
-    else:
-        dist = jnp.power(jnp.sum(jnp.abs(vc - roi.center[None, :]) ** p, -1), 1.0 / p)
-    cvalid &= dist <= roi.radius
-    n_candidates = jnp.sum(cvalid)
-
-    neg = jnp.where(cvalid, -dist, -jnp.inf)
-    top_vals, top_pos = jax.lax.top_k(neg, delta)
-    psi_valid = top_vals > -jnp.inf
-    psi_idx = jnp.where(psi_valid, cidx[top_pos], -1)
-    psi_v = points[jnp.clip(psi_idx, 0, n - 1)]
-    psi_v = jnp.where(psi_valid[:, None], psi_v, 0.0)
-
-    # ---- 5. rebuild buffers: beta' = alpha ∪ psi, exact Ax refresh (Eq. 17) --
+def _rebuild(state: LIDState, sup_idx, sup_v, sup_x, sup_slot_mask,
+             psi_idx, psi_valid, psi_v, k, a_cap: int, tol: float, p: float,
+             n_candidates, overflow) -> CIVSResult:
+    """Step 5: beta' = alpha ∪ psi with exact Ax refresh (Eq. 17)."""
+    delta = psi_idx.shape[0]
     beta_idx = jnp.concatenate([sup_idx, psi_idx]).astype(jnp.int32)
     beta_mask = jnp.concatenate([sup_slot_mask, psi_valid])
     v_beta = jnp.concatenate([sup_v, psi_v], axis=0)
@@ -125,3 +99,182 @@ def civs_update(
     )
     return CIVSResult(state=new_state, infective_found=infective,
                       n_candidates=n_candidates, overflow=overflow)
+
+
+def _retrieve_replicated(roi: ROI, points, active, tables, lsh_params,
+                         sup_idx, sup_v, sup_slot_mask, delta: int, p: float):
+    """Steps 2-4 against the full dataset + monolithic LSH tables."""
+    n = points.shape[0]
+    cands = query_batch(tables, sup_v, lsh_params)        # (a_cap, L*probe)
+    cands = jnp.where(sup_slot_mask[:, None], cands, -1)
+    flat = cands.reshape(-1)                              # (a_cap * L * probe,)
+
+    safe = jnp.clip(flat, 0, n - 1)
+    valid = flat >= 0
+    valid &= active[safe]
+    # not already a support member
+    member = jnp.any((safe[:, None] == sup_idx[None, :]) & sup_slot_mask[None, :], axis=1)
+    valid &= ~member
+
+    # sort-based dedup
+    sentinel = jnp.int32(n)  # sorts after every real index
+    keys = jnp.where(valid, safe, sentinel)
+    skeys = jnp.sort(keys)
+    uniq = jnp.concatenate([jnp.array([True]), skeys[1:] != skeys[:-1]])
+    cvalid = uniq & (skeys < sentinel)
+    cidx = jnp.clip(skeys, 0, n - 1)
+
+    # ROI filter + take the delta nearest to D
+    vc = points[cidx]
+    dist = _roi_distance(vc, roi.center, p)
+    cvalid &= dist <= roi.radius
+    n_candidates = jnp.sum(cvalid)
+
+    neg = jnp.where(cvalid, -dist, -jnp.inf)
+    top_vals, top_pos = jax.lax.top_k(neg, delta)
+    psi_valid = top_vals > -jnp.inf
+    psi_idx = jnp.where(psi_valid, cidx[top_pos], -1)
+    psi_v = points[jnp.clip(psi_idx, 0, n - 1)]
+    psi_v = jnp.where(psi_valid[:, None], psi_v, 0.0)
+    return psi_idx, psi_valid, psi_v, n_candidates
+
+
+# Conservative slack on the ball-intersection routing test: shard radii and
+# the triangle inequality are evaluated in f32, so a candidate exactly on the
+# ROI boundary must not be lost to rounding in the shard-level test. Applied
+# RELATIVE to the ball scales (f32 rounding is relative): over-admitting a
+# shard costs one extra probe, under-admitting breaks exactness.
+_ROUTE_EPS = 1e-4
+
+
+def _retrieve_sharded(roi: ROI, store: ShardedStore, active, lsh_params,
+                      sup_idx, sup_v, sup_slot_mask, delta: int, p: float):
+    """Steps 2-4, out-of-core: stream shards through a running top-delta merge.
+
+    Each fori_loop step materializes ONE shard's points + tables (a dynamic
+    slice on the leading S axis — the axis a mesh shards over devices) and
+    only when the shard's bounding ball intersects the ROI ball. Candidates
+    live in a (delta,) running buffer; cross-shard dedup is free because the
+    shards partition the dataset.
+    """
+    n = store.n_points
+    n_shards, shard_cap, _ = store.shards.shape
+    keys, salts = hash_queries(sup_v, store.tables.proj, store.tables.bias,
+                               lsh_params.seg_len)         # (L, a_cap)
+
+    d = store.shards.shape[2]
+
+    def chunk_step(s, carry):
+        best_neg, best_idx, best_v, n_cand = carry
+        sk = jax.lax.dynamic_index_in_dim(store.tables.sorted_keys, s, 0,
+                                          keepdims=False)  # (L, cap)
+        pm = jax.lax.dynamic_index_in_dim(store.tables.perm, s, 0,
+                                          keepdims=False)  # (L, cap)
+        gmap = jax.lax.dynamic_index_in_dim(store.global_idx, s, 0,
+                                            keepdims=False)  # (cap,)
+        pts_s = jax.lax.dynamic_index_in_dim(store.shards, s, 0,
+                                             keepdims=False)  # (cap, d)
+        local = probe_tables(sk, pm, keys, salts, lsh_params.probe)
+        local = jnp.where(sup_slot_mask[:, None], local, -1)
+        flat = local.reshape(-1)                          # (a_cap * L * probe,)
+        safe_slot = jnp.clip(flat, 0, shard_cap - 1)
+        gidx = jnp.where(flat >= 0, gmap[safe_slot], -1)
+        vc = pts_s[safe_slot]
+        dist = _roi_distance(vc, roi.center, p)
+
+        safe_g = jnp.clip(gidx, 0, n - 1)
+        valid = (gidx >= 0) & active[safe_g]
+        member = jnp.any((safe_g[:, None] == sup_idx[None, :])
+                         & sup_slot_mask[None, :], axis=1)
+        valid &= ~member
+        valid &= dist <= roi.radius
+
+        # within-chunk dedup (a point can surface from several tables); the
+        # sort also fixes a deterministic order for exact-tie distances
+        sentinel = jnp.int32(n)
+        dkeys = jnp.where(valid, safe_g, sentinel)
+        order = jnp.argsort(dkeys)
+        sg = dkeys[order]
+        sd = dist[order]
+        sv = vc[order]
+        uniq = jnp.concatenate([jnp.array([True]), sg[1:] != sg[:-1]])
+        cvalid = uniq & (sg < sentinel)
+        n_cand = n_cand + jnp.sum(cvalid)
+
+        neg = jnp.where(cvalid, -sd, -jnp.inf)
+        cand_idx = jnp.where(cvalid, sg, -1).astype(jnp.int32)
+        # streaming top-delta merge: buffer ++ chunk -> top_k. Candidate
+        # ROWS ride along in the carry so psi needs no end-of-loop gather
+        # over the (device-sharded) store — the rows are already local here.
+        merged_neg = jnp.concatenate([best_neg, neg])
+        merged_idx = jnp.concatenate([best_idx, cand_idx])
+        merged_v = jnp.concatenate([best_v, sv], axis=0)
+        best_neg, pos = jax.lax.top_k(merged_neg, delta)
+        best_idx = merged_idx[pos]
+        best_v = merged_v[pos]
+        return best_neg, best_idx, best_v, n_cand
+
+    def shard_step(s, carry):
+        if p != 2.0:
+            # shard radii are Euclidean; ball routing is only sound when the
+            # ROI metric matches, so other norms probe every shard (exact,
+            # just unrouted)
+            return chunk_step(s, carry)
+        # ROI-ball vs shard-ball routing (exact by the triangle inequality:
+        # every point within roi.radius of the center lies in a shard whose
+        # ball intersects the ROI ball). lax.cond skips the gather + probe
+        # for non-intersecting shards; under vmap (batched seeds in
+        # lockstep) it lowers to select, so the saving materializes in the
+        # unbatched / host-streamed deployments, not the vmapped drivers.
+        c_dist = _roi_distance(store.centers[s][None, :], roi.center, p)[0]
+        reach = roi.radius + store.radii[s]
+        touch = c_dist <= reach + _ROUTE_EPS * (1.0 + reach)
+        return jax.lax.cond(touch, lambda c: chunk_step(s, c), lambda c: c,
+                            carry)
+
+    best_neg0 = jnp.full((delta,), -jnp.inf, jnp.float32)
+    best_idx0 = jnp.full((delta,), -1, jnp.int32)
+    best_v0 = jnp.zeros((delta, d), store.shards.dtype)
+    best_neg, best_idx, best_v, n_candidates = jax.lax.fori_loop(
+        0, n_shards, shard_step, (best_neg0, best_idx0, best_v0, jnp.int32(0)))
+
+    psi_valid = best_neg > -jnp.inf
+    psi_idx = jnp.where(psi_valid, best_idx, -1)
+    psi_v = jnp.where(psi_valid[:, None], best_v, 0.0)
+    return psi_idx, psi_valid, psi_v, n_candidates
+
+
+@functools.partial(jax.jit, static_argnames=("a_cap", "delta", "lsh_params",
+                                             "tol", "support_eps", "p"))
+def civs_update(
+    state: LIDState,
+    roi: ROI,
+    points: jax.Array | ShardedStore,
+    active: jax.Array,
+    tables: LSHTables | None,
+    lsh_params: LSHParams,
+    k: jax.Array,
+    a_cap: int,
+    delta: int,
+    tol: float = 1e-5,
+    support_eps: float = 1e-6,
+    p: float = 2.0,
+) -> CIVSResult:
+    cap = a_cap + delta
+    assert state.x.shape[0] == cap, (state.x.shape, cap)
+
+    sup_idx, sup_v, sup_x, sup_slot_mask, overflow = _compact_support(
+        state, a_cap, support_eps)
+
+    if isinstance(points, ShardedStore):
+        psi_idx, psi_valid, psi_v, n_candidates = _retrieve_sharded(
+            roi, points, active, lsh_params, sup_idx, sup_v, sup_slot_mask,
+            delta, p)
+    else:
+        psi_idx, psi_valid, psi_v, n_candidates = _retrieve_replicated(
+            roi, points, active, tables, lsh_params, sup_idx, sup_v,
+            sup_slot_mask, delta, p)
+
+    return _rebuild(state, sup_idx, sup_v, sup_x, sup_slot_mask,
+                    psi_idx, psi_valid, psi_v, k, a_cap, tol, p,
+                    n_candidates, overflow)

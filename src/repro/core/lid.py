@@ -37,15 +37,21 @@ class LIDState(NamedTuple):
     converged: jax.Array  # () bool
 
 
-def init_state(points: jax.Array, seed_idx: jax.Array, cap: int) -> LIDState:
-    """Alg. 2 line 1: beta = {seed}, x = s_seed, Ax = a_ii = 0."""
-    d = points.shape[1]
+def init_state_from(v_seed: jax.Array, seed_idx: jax.Array, cap: int) -> LIDState:
+    """Alg. 2 line 1 from an already-gathered seed row v_seed:(d,) — lets
+    out-of-core drivers seed without a global points array."""
+    d = v_seed.shape[0]
     beta_idx = jnp.full((cap,), -1, jnp.int32).at[0].set(seed_idx.astype(jnp.int32))
     beta_mask = jnp.zeros((cap,), bool).at[0].set(True)
-    v_beta = jnp.zeros((cap, d), points.dtype).at[0].set(points[seed_idx])
+    v_beta = jnp.zeros((cap, d), v_seed.dtype).at[0].set(v_seed)
     x = jnp.zeros((cap,), jnp.float32).at[0].set(1.0)
     ax = jnp.zeros((cap,), jnp.float32)
     return LIDState(beta_idx, beta_mask, v_beta, x, ax, jnp.int32(0), jnp.array(False))
+
+
+def init_state(points: jax.Array, seed_idx: jax.Array, cap: int) -> LIDState:
+    """Alg. 2 line 1: beta = {seed}, x = s_seed, Ax = a_ii = 0."""
+    return init_state_from(points[seed_idx], seed_idx, cap)
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters", "tol", "p"))

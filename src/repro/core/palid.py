@@ -5,10 +5,12 @@ a JAX device mesh.
   ---------------------------+----------------------------------------------
   mapper = one ALID per seed | shard_map over the data axes; each device runs
                              | a vmapped batch of seeds in lockstep
-  MongoDB server holding the | dataset + LSH tables replicated in HBM
-  data + LSH tables          | (SIFT-50M in bf16 ~ 12 GB — fits v5e; the
-                             | sharded-CIVS extension is documented in
-                             | DESIGN.md as the >HBM path)
+  MongoDB server holding the | replicated: dataset + LSH tables in every
+  data + LSH tables          | device's HBM (SIFT-50M in bf16 ~ 12 GB — fits
+                             | v5e). n_shards > 0: the ShardedStore engine —
+                             | dataset + LSH partitioned over the mesh data
+                             | axes, CIVS streams one shard at a time (the
+                             | >HBM path, DESIGN.md §5)
   reducer: point -> max-     | segment-max claim resolution, identical to the
   density cluster            | serial driver (exact same results)
 
@@ -27,12 +29,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.alid import (ALIDConfig, Clustering, _sample_seeds,
                              alid_from_seed)
 from repro.core.affinity import estimate_k
-from repro.distributed.context import MeshContext
+from repro.core.store import build_store, global_bucket_sizes
+from repro.distributed.context import MeshContext, mesh_context
+from repro.distributed.shardings import logical_spec, store_specs
 from repro.lsh.pstable import bucket_sizes, build_lsh
 
 
@@ -57,19 +61,45 @@ def _palid_map(points, active, tables, seeds, k, cfg: ALIDConfig,
     )(points, active, tables, seeds)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _palid_map_sharded(store, active, seeds, k, cfg: ALIDConfig):
+    """Map phase against the ShardedStore. No shard_map here: the store's
+    leading S axis is device-placed (store_specs) and GSPMD materializes one
+    shard slice per fori_loop step of the streaming CIVS — each device's HBM
+    holds its dataset slice plus a single in-flight shard, not a replica."""
+    return jax.vmap(
+        lambda s: alid_from_seed(store, active, None, s, k, cfg))(seeds)
+
+
 def detect_clusters_parallel(points, cfg: ALIDConfig, rng, ctx: MeshContext,
-                             k: float | None = None) -> Clustering:
+                             k: float | None = None,
+                             n_shards: int = 0) -> Clustering:
     """PALID driver: identical semantics to core.alid.detect_clusters, with
     the map phase sharded over the mesh. seeds_per_round must divide evenly
-    over the data axes."""
+    over the data axes.
+
+    n_shards > 0 switches the map phase to the out-of-core ShardedStore
+    engine, with the store's per-shard leaves placed over the mesh data axes
+    (each device keeps 1/n_data of the dataset + LSH instead of a replica).
+    n_shards must then divide evenly over the data axes."""
     points = jnp.asarray(points, jnp.float32)
     n = points.shape[0]
     n_data = ctx.n_data
     assert cfg.seeds_per_round % n_data == 0, (cfg.seeds_per_round, n_data)
     kv = jnp.float32(cfg.k if cfg.k is not None else (k or estimate_k(points)))
     rng, kb = jax.random.split(rng)
-    tables = build_lsh(points, cfg.lsh, kb)
-    bsizes = bucket_sizes(tables)
+    store = None
+    if n_shards > 0:
+        assert n_shards % n_data == 0, (n_shards, n_data)
+        store = build_store(points, cfg.lsh, kb, n_shards=n_shards)
+        store = jax.device_put(store, jax.tree.map(
+            lambda s: NamedSharding(ctx.mesh, s), store_specs(store),
+            is_leaf=lambda s: isinstance(s, P)))
+        bsizes = global_bucket_sizes(store)
+        tables = None
+    else:
+        tables = build_lsh(points, cfg.lsh, kb)
+        bsizes = bucket_sizes(tables)
 
     active = jnp.ones((n,), bool)
     labels = np.full((n,), -1, np.int32)
@@ -84,7 +114,17 @@ def detect_clusters_parallel(points, cfg: ALIDConfig, rng, ctx: MeshContext,
             break
         if not cfg.exhaustive and not bool(any_eligible):
             break
-        results = _palid_map(points, active, tables, seeds, kv, cfg, ctx)
+        if store is not None:
+            # partition the seed batch over the data axes (the shard_map
+            # analogue for the GSPMD path): each device runs
+            # seeds_per_round/n_data instances against its store slice
+            with mesh_context(ctx):
+                seed_spec = logical_spec("seeds")
+            seeds_placed = jax.device_put(
+                seeds, NamedSharding(ctx.mesh, seed_spec))
+            results = _palid_map_sharded(store, active, seeds_placed, kv, cfg)
+        else:
+            results = _palid_map(points, active, tables, seeds, kv, cfg, ctx)
 
         # ---- reduce phase (host): point -> max-density cluster ----
         member = np.asarray(results.member_idx)

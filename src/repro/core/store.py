@@ -1,0 +1,141 @@
+"""ShardedStore — the out-of-core data layout behind sharded CIVS.
+
+ALID's space bound is O(a*(a*+delta)): only the LOCAL affinity graph is ever
+materialized. The replicated PALID port honored that for affinity but still
+parked the full dataset + LSH tables in every device's HBM. This module
+partitions both into S fixed-size shards so the CIVS hot path touches one
+shard at a time:
+
+  * points are ordered by projection onto a random direction (the first LSH
+    projection vector), then cut into contiguous equal shards — spatially
+    coherent, so each shard has a tight bounding ball;
+  * each shard carries its own sorted-key LSH tables (projections shared, see
+    `build_lsh_sharded`) plus routing metadata (centroid + bounding radius):
+    a CIVS query visits a shard only when its ROI ball can intersect the
+    shard ball, which is exact — any candidate inside the ROI lives in a
+    touched shard by the triangle inequality;
+  * the store is a flat pytree whose per-shard leaves all lead with the S
+    axis, so a mesh places each device's HBM slice with
+    `NamedSharding(P("data"))` (repro.distributed.shardings.store_specs) and
+    the fori_loop in sharded CIVS pulls one (cap, d) shard slice per step.
+
+Global <-> local index maps (`shard_of`/`slot_of`, `global_idx`) are O(n)
+int32 metadata — the O(n*d) float payload and the affinity blocks are what
+the sharding keeps out of the working set (DESIGN.md has the full model).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.lsh.pstable import (LSHParams, ShardedLSHTables, build_lsh_sharded,
+                               make_projections)
+
+
+class ShardedStore(NamedTuple):
+    shards: jax.Array      # (S, cap, d) f32 — padded shard points
+    valid: jax.Array       # (S, cap) bool — False on padding
+    global_idx: jax.Array  # (S, cap) int32 — original data index, -1 on padding
+    shard_of: jax.Array    # (n,) int32 — inverse map: point -> shard
+    slot_of: jax.Array     # (n,) int32 — inverse map: point -> slot in shard
+    centers: jax.Array     # (S, d) shard centroid (over valid members)
+    radii: jax.Array       # (S,) bounding radius around the centroid
+    tables: ShardedLSHTables
+
+    @property
+    def n_shards(self) -> int:
+        return self.shards.shape[0]
+
+    @property
+    def shard_cap(self) -> int:
+        return self.shards.shape[1]
+
+    @property
+    def n_points(self) -> int:
+        return self.shard_of.shape[0]
+
+
+def take(store: ShardedStore, idx: jax.Array) -> jax.Array:
+    """Gather point rows by GLOBAL index (the out-of-core points[idx])."""
+    safe = jnp.clip(idx, 0, store.n_points - 1)
+    return store.shards[store.shard_of[safe], store.slot_of[safe]]
+
+
+@functools.partial(jax.jit, static_argnames=("params", "n_shards"))
+def _build_store_impl(points: jax.Array, params: LSHParams, rng: jax.Array,
+                      n_shards: int) -> ShardedStore:
+    n, d = points.shape
+    cap = -(-n // n_shards)                    # ceil — last shard padded
+    pad = n_shards * cap - n
+
+    # Spatial ordering: project onto the first LSH direction. jax PRNG keys
+    # are pure, so regenerating proj here matches build_lsh_sharded exactly
+    # without threading the array through.
+    proj, _ = make_projections(rng, params, d, points.dtype)
+    score = points @ proj[0, 0]
+    order = jnp.argsort(score).astype(jnp.int32)           # (n,)
+
+    gidx = jnp.concatenate([order, jnp.full((pad,), -1, jnp.int32)])
+    gidx = gidx.reshape(n_shards, cap)
+    valid = gidx >= 0
+    shards = points[jnp.clip(gidx, 0, n - 1)] * valid[..., None]
+
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    sid = jnp.arange(n_shards, dtype=jnp.int32)
+    safe_g = jnp.where(valid, gidx, n)
+    shard_of = jnp.zeros((n + 1,), jnp.int32).at[safe_g.reshape(-1)].set(
+        jnp.broadcast_to(sid[:, None], gidx.shape).reshape(-1))[:n]
+    slot_of = jnp.zeros((n + 1,), jnp.int32).at[safe_g.reshape(-1)].set(
+        jnp.broadcast_to(slot[None, :], gidx.shape).reshape(-1))[:n]
+
+    cnt = jnp.maximum(jnp.sum(valid, axis=1), 1)
+    centers = jnp.sum(shards, axis=1) / cnt[:, None].astype(points.dtype)
+    dist = jnp.sqrt(jnp.maximum(
+        jnp.sum((shards - centers[:, None, :]) ** 2, -1), 0.0))
+    radii = jnp.max(jnp.where(valid, dist, 0.0), axis=1)
+
+    tables = build_lsh_sharded(shards, valid, params, rng)
+    return ShardedStore(shards=shards, valid=valid, global_idx=gidx,
+                        shard_of=shard_of, slot_of=slot_of,
+                        centers=centers, radii=radii, tables=tables)
+
+
+def build_store(points: jax.Array, params: LSHParams, rng: jax.Array,
+                n_shards: int = 8) -> ShardedStore:
+    """Partition `points` + LSH into `n_shards` routing-aware shards.
+
+    Consumes `rng` exactly like `build_lsh` (one split -> proj, bias), so a
+    store built with the same key is query-for-query consistent with the
+    monolithic tables — the basis of the replicated/sharded parity tests.
+    """
+    points = jnp.asarray(points, jnp.float32)
+    n_shards = max(1, min(int(n_shards), points.shape[0]))
+    return _build_store_impl(points, params, rng, n_shards)
+
+
+@jax.jit
+def global_bucket_sizes(store: ShardedStore) -> jax.Array:
+    """Per data item: size of its table-0 bucket across ALL shards.
+
+    Projections are shared, so the monolithic bucket of key k is exactly the
+    disjoint union of the per-shard buckets of k — summing per-shard counts
+    reproduces `bucket_sizes(build_lsh(...))` without ever building the
+    monolithic table (used for PALID seeding, paper Sec. 4.6).
+    """
+    n = store.n_points
+    sk0 = store.tables.sorted_keys[:, 0, :]                   # (S, cap)
+    perm0 = store.tables.perm[:, 0, :]                        # (S, cap)
+    # per-point table-0 key, scattered to global positions
+    safe_slot = jnp.clip(perm0, 0, store.shard_cap - 1)
+    g_of_sorted = jnp.take_along_axis(store.global_idx, safe_slot, axis=1)
+    g_of_sorted = jnp.where(perm0 >= 0, g_of_sorted, n)       # drop pads
+    keys = jnp.zeros((n + 1,), sk0.dtype).at[g_of_sorted.reshape(-1)].set(
+        sk0.reshape(-1))[:n]
+    counts = jax.vmap(
+        lambda sk: jnp.searchsorted(sk, keys, side="right")
+        - jnp.searchsorted(sk, keys, side="left"))(sk0)       # (S, n)
+    return jnp.sum(counts, axis=0).astype(jnp.int32)

@@ -32,6 +32,10 @@ def logical_spec(*axes: Optional[str]) -> P:
             out.append(None)
         elif a in ("batch", "tokens", "seeds", "kv_seq", "bags"):
             out.append(ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0])
+        elif a == "shards":
+            # ShardedStore leading axis: one HBM slice of the dataset per
+            # device group (out-of-core CIVS, DESIGN.md §5)
+            out.append(ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0])
         elif a in ("edges", "nodes", "candidates"):
             # GNN/retrieval arrays have no tensor-parallel dim: flatten the
             # whole mesh over them (data + model)
@@ -158,6 +162,43 @@ def constrain_seq_sp(x: jax.Array) -> jax.Array:
     data = ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(ctx.mesh, P(data, ctx.model_axis, None)))
+
+
+def store_specs(store: Any) -> Any:
+    """PartitionSpecs for a repro.core.store.ShardedStore (same structure).
+
+    Per-shard payload leaves (leading S axis: points, validity, index maps
+    into shards, per-shard sorted LSH keys/perms) shard over the data axes —
+    each device's HBM holds only its slice of the dataset. The routing balls
+    (centers/radii, O(S*d)), shared LSH projections/biases, and the O(n)
+    int32 inverse maps replicate: they are what lets any device decide
+    whether a shard is worth pulling without touching it (DESIGN.md §5)."""
+    from repro.core.store import ShardedStore  # local import: avoid cycle
+    from repro.lsh.pstable import ShardedLSHTables
+    assert isinstance(store, ShardedStore), type(store)
+
+    def sharded(leaf):
+        return degrade_spec(logical_spec(*(["shards"] + [None] * (leaf.ndim - 1))),
+                            leaf.shape)
+
+    def replicated(leaf):
+        return P(*((None,) * leaf.ndim))
+
+    return ShardedStore(
+        shards=sharded(store.shards),
+        valid=sharded(store.valid),
+        global_idx=sharded(store.global_idx),
+        shard_of=replicated(store.shard_of),
+        slot_of=replicated(store.slot_of),
+        centers=replicated(store.centers),
+        radii=replicated(store.radii),
+        tables=ShardedLSHTables(
+            proj=replicated(store.tables.proj),
+            bias=replicated(store.tables.bias),
+            sorted_keys=sharded(store.tables.sorted_keys),
+            perm=sharded(store.tables.perm),
+        ),
+    )
 
 
 def gnn_param_specs(abstract: Any) -> Any:

@@ -1,0 +1,20 @@
+"""Pallas API compatibility shims.
+
+jax renamed `pltpu.TPUCompilerParams` to `pltpu.CompilerParams` (and back,
+depending on the 0.4.x/0.5.x line). Kernels import `compiler_params` from
+here instead of touching the class directly so one site tracks the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def compiler_params(**kwargs):
+    """Build the TPU compiler-params struct under whichever name this jax
+    version exports (`CompilerParams` on new jax, `TPUCompilerParams` on
+    jax 0.4.x)."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

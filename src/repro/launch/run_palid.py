@@ -4,6 +4,11 @@ detection over SIFT-like descriptor collections, parallelized over a mesh.
   # 8 virtual devices (the Spark-executor analogue of Table 2):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
       python -m repro.launch.run_palid --n 20000 --d 32 --devices 8
+
+  # out-of-core: dataset + LSH split into 16 shards, 2 per device's HBM
+  # (the >HBM path, DESIGN.md §3):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+      python -m repro.launch.run_palid --n 20000 --d 32 --devices 8 --shards 16
 """
 
 from __future__ import annotations
@@ -28,6 +33,10 @@ def main():
     ap.add_argument("--clusters", type=int, default=20)
     ap.add_argument("--devices", type=int, default=0,  # 0 = serial ALID
                     help="data-axis size for PALID (0 = serial)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="ShardedStore shard count for out-of-core CIVS "
+                         "(0 = replicated dataset + LSH; must divide evenly "
+                         "over --devices when both are set)")
     ap.add_argument("--seeds-per-round", type=int, default=32)
     ap.add_argument("--rounds", type=int, default=64)
     args = ap.parse_args()
@@ -45,13 +54,15 @@ def main():
         mesh = jax.make_mesh((args.devices,), ("data",))
         ctx = MeshContext(mesh=mesh, data_axes=("data",), model_axis="data")
         res = detect_clusters_parallel(spec.points, cfg, jax.random.PRNGKey(0),
-                                       ctx)
+                                       ctx, n_shards=args.shards)
     else:
-        res = detect_clusters(spec.points, cfg, jax.random.PRNGKey(0))
+        res = detect_clusters(spec.points, cfg, jax.random.PRNGKey(0),
+                              n_shards=args.shards)
     dt = time.time() - t0
     f = avg_f1_score(spec.labels, res.labels)
     n_members = int((res.labels >= 0).sum())
-    print(f"[palid] n={args.n} devices={max(args.devices,1)} time={dt:.2f}s "
+    print(f"[palid] n={args.n} devices={max(args.devices,1)} "
+          f"shards={args.shards} time={dt:.2f}s "
           f"clusters={len(res.densities)} members={n_members} AVG-F={f:.3f}")
 
 

@@ -1,8 +1,12 @@
 from repro.lsh.pstable import (  # noqa: F401
     LSHParams,
     LSHTables,
+    ShardedLSHTables,
     build_lsh,
+    build_lsh_sharded,
     hash_points,
+    hash_queries,
+    probe_tables,
     query_batch,
     bucket_sizes,
 )

@@ -34,6 +34,23 @@ class LSHTables(NamedTuple):
     perm: jax.Array         # (L, n) int32: position in sorted order -> data index
 
 
+class ShardedLSHTables(NamedTuple):
+    """Shard-local LSH: one sorted key array per (shard, table).
+
+    The projections/biases are SHARED across shards, so a query hashes once
+    and the same (key, salt) probes every shard — the per-shard tables are an
+    exact partition of the monolithic table's buckets. Padded slots carry
+    `PAD_KEY` (sorts last) and perm -1 (never returned as a hit).
+    """
+    proj: jax.Array         # (L, m, d) — shared across shards
+    bias: jax.Array         # (L, m)
+    sorted_keys: jax.Array  # (S, L, cap) uint32, ascending per (shard, table)
+    perm: jax.Array         # (S, L, cap) int32: sorted pos -> LOCAL slot, -1 pad
+
+
+PAD_KEY = jnp.uint32(0xFFFFFFFF)
+
+
 _MIX_MUL = jnp.uint32(0x9E3779B1)  # golden-ratio Weyl constant
 
 
@@ -47,6 +64,25 @@ def _mix_fold(h: jax.Array) -> jax.Array:
     return acc
 
 
+def make_projections(rng: jax.Array, params: LSHParams, d: int,
+                     dtype) -> tuple[jax.Array, jax.Array]:
+    """The ONE place the PRNG key becomes (proj, bias).
+
+    Every consumer (monolithic build, sharded build, the store's spatial
+    ordering) must derive identical projections from the same key — that
+    bit-equality is what makes sharded retrieval an exact re-chunking of
+    replicated retrieval (DESIGN.md §3.1) — so none of them may inline this
+    recipe.
+    """
+    k_proj, k_bias = jax.random.split(rng)
+    proj = jax.random.normal(
+        k_proj, (params.n_tables, params.n_projections, d), dtype)
+    bias = jax.random.uniform(
+        k_bias, (params.n_tables, params.n_projections), dtype,
+        0.0, params.seg_len)
+    return proj, bias
+
+
 def hash_points(v: jax.Array, proj: jax.Array, bias: jax.Array, seg_len: float) -> jax.Array:
     """Keys for v:(n,d) under all tables -> (L, n) uint32."""
     # (L, n, m) = (n,d) @ (L,d,m)
@@ -58,11 +94,7 @@ def hash_points(v: jax.Array, proj: jax.Array, bias: jax.Array, seg_len: float) 
 @functools.partial(jax.jit, static_argnames=("params",))
 def build_lsh(v: jax.Array, params: LSHParams, rng: jax.Array) -> LSHTables:
     n, d = v.shape
-    k_proj, k_bias = jax.random.split(rng)
-    proj = jax.random.normal(k_proj, (params.n_tables, params.n_projections, d), v.dtype)
-    bias = jax.random.uniform(
-        k_bias, (params.n_tables, params.n_projections), v.dtype, 0.0, params.seg_len
-    )
+    proj, bias = make_projections(rng, params, d, v.dtype)
     keys = hash_points(v, proj, bias, params.seg_len)           # (L, n)
     order = jnp.argsort(keys, axis=1).astype(jnp.int32)          # (L, n)
     sorted_keys = jnp.take_along_axis(keys, order.astype(jnp.int32), axis=1)
@@ -91,23 +123,68 @@ def _query_one_table(sorted_keys: jax.Array, perm: jax.Array, key: jax.Array,
     return idx
 
 
+def hash_queries(q: jax.Array, proj: jax.Array, bias: jax.Array,
+                 seg_len: float) -> tuple[jax.Array, jax.Array]:
+    """(keys, salts) for queries q:(Q,d) -> both (L, Q) uint32.
+
+    The per-query salt comes from the raw float bits of the projections: ANY
+    two distinct points get different salts, so their probe windows differ
+    even inside one giant bucket (CIVS coverage, Fig. 4b).
+    """
+    z = jnp.einsum("nd,lmd->lnm", q, proj) + bias[:, None, :]
+    h = jnp.floor(z / seg_len).astype(jnp.int32)
+    keys = _mix_fold(h)                                              # (L, Q)
+    bits = jax.lax.bitcast_convert_type(z.astype(jnp.float32), jnp.uint32)
+    salts = _mix_fold(jax.lax.bitcast_convert_type(bits, jnp.int32))
+    return keys, salts
+
+
+def probe_tables(sorted_keys: jax.Array, perm: jax.Array, keys: jax.Array,
+                 salts: jax.Array, probe: int) -> jax.Array:
+    """Probe pre-hashed queries against one set of tables.
+
+    sorted_keys/perm: (L, n); keys/salts: (L, Q) -> (Q, L*probe) indices in
+    whatever index space `perm` holds (data indices for the monolithic
+    tables, local slots for one shard), -1 = miss.
+    """
+    def per_table(sk, pm, kq, sq):
+        return jax.vmap(lambda kk, ss: _query_one_table(sk, pm, kk, ss, probe))(kq, sq)
+
+    cands = jax.vmap(per_table)(sorted_keys, perm, keys, salts)      # (L, Q, probe)
+    return jnp.transpose(cands, (1, 0, 2)).reshape(keys.shape[1], -1)
+
+
 @functools.partial(jax.jit, static_argnames=("params",))
 def query_batch(tables: LSHTables, q: jax.Array, params: LSHParams) -> jax.Array:
     """Candidates for queries q:(Q,d) -> (Q, L*probe) int32 data indices, -1 = miss."""
-    z = jnp.einsum("nd,lmd->lnm", q, tables.proj) + tables.bias[:, None, :]
-    h = jnp.floor(z / params.seg_len).astype(jnp.int32)
-    keys = _mix_fold(h)                                              # (L, Q)
-    # per-query salt from the raw float bits of the projections: ANY two
-    # distinct points get different salts, so their probe windows differ even
-    # inside one giant bucket (CIVS coverage, Fig. 4b).
-    bits = jax.lax.bitcast_convert_type(z.astype(jnp.float32), jnp.uint32)
-    salts = _mix_fold(jax.lax.bitcast_convert_type(bits, jnp.int32))
+    keys, salts = hash_queries(q, tables.proj, tables.bias, params.seg_len)
+    return probe_tables(tables.sorted_keys, tables.perm, keys, salts, params.probe)
 
-    def per_table(sk, pm, kq, sq):
-        return jax.vmap(lambda kk, ss: _query_one_table(sk, pm, kk, ss, params.probe))(kq, sq)
 
-    cands = jax.vmap(per_table)(tables.sorted_keys, tables.perm, keys, salts)  # (L, Q, probe)
-    return jnp.transpose(cands, (1, 0, 2)).reshape(q.shape[0], -1)
+@functools.partial(jax.jit, static_argnames=("params",))
+def build_lsh_sharded(shard_points: jax.Array, valid: jax.Array,
+                      params: LSHParams, rng: jax.Array) -> ShardedLSHTables:
+    """Shard-local tables over pre-partitioned points (S, cap, d).
+
+    Consumes `rng` exactly like `build_lsh` (via make_projections), so the
+    SAME key yields the SAME projections/biases — per-point bucket keys are
+    then bit-identical to the monolithic build (the einsum rounds per
+    element, independent of batching), which is what makes sharded CIVS
+    retrieval provably a re-chunking of the replicated retrieval rather
+    than an approximation.
+    """
+    s, cap, d = shard_points.shape
+    proj, bias = make_projections(rng, params, d, shard_points.dtype)
+    keys = jax.vmap(lambda v: hash_points(v, proj, bias, params.seg_len))(
+        shard_points)                                         # (S, L, cap)
+    keys = jnp.where(valid[:, None, :], keys, PAD_KEY)
+    order = jnp.argsort(keys, axis=-1).astype(jnp.int32)
+    sorted_keys = jnp.take_along_axis(keys, order, axis=-1)
+    sorted_valid = jnp.take_along_axis(
+        jnp.broadcast_to(valid[:, None, :], keys.shape), order, axis=-1)
+    perm = jnp.where(sorted_valid, order, -1)
+    return ShardedLSHTables(proj=proj, bias=bias, sorted_keys=sorted_keys,
+                            perm=perm)
 
 
 @jax.jit

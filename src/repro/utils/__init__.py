@@ -1,1 +1,6 @@
-from repro.utils.metrics import avg_f1_score, f1_contingency  # noqa: F401
+from repro.utils.metrics import (  # noqa: F401
+    avg_f1_score,
+    canonical_labels,
+    f1_contingency,
+    label_agreement,
+)

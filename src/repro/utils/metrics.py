@@ -30,3 +30,20 @@ def avg_f1_score(true_labels: np.ndarray, pred_labels: np.ndarray) -> float:
             best = max(best, f1_contingency(tm, pred_labels == p))
         scores.append(best)
     return float(np.mean(scores))
+
+
+def canonical_labels(labels: np.ndarray) -> np.ndarray:
+    """Renumber cluster ids by first occurrence (noise -1 kept), so two
+    clusterings compare exactly regardless of label permutation."""
+    out = np.full_like(labels, -1)
+    mapping: dict[int, int] = {}
+    for i, v in enumerate(labels):
+        if v >= 0:
+            out[i] = mapping.setdefault(int(v), len(mapping))
+    return out
+
+
+def label_agreement(a: np.ndarray, b: np.ndarray) -> float:
+    """Fraction of points with the same canonical label (1.0 = identical
+    clustering up to relabeling) — the replicated/sharded parity metric."""
+    return float(np.mean(canonical_labels(a) == canonical_labels(b)))

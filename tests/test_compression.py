@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.train.compression import (compress_int8, compress_topk,
                                      decompress_int8, decompress_topk,
@@ -26,6 +27,7 @@ def test_topk_keeps_largest():
     np.testing.assert_allclose(np.asarray(d), [[0.0, -5.0, 0.0, 3.0]])
 
 
+@pytest.mark.slow  # trains to convergence: dominated by jit+optimizer loop
 def test_error_feedback_preserves_convergence():
     """EF-compressed gradient descent on a quadratic reaches (near) the same
     optimum as exact GD — the 1-bit-Adam style guarantee."""

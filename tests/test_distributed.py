@@ -26,6 +26,7 @@ def run_subprocess(code: str) -> str:
     return out.stdout
 
 
+@pytest.mark.slow  # subprocess: re-imports jax on 8 virtual devices
 def test_palid_matches_serial_alid():
     out = run_subprocess("""
         import jax, json
@@ -57,6 +58,7 @@ def test_palid_matches_serial_alid():
     assert abs(res["f_ser"] - res["f_par"]) < 0.15, res
 
 
+@pytest.mark.slow  # subprocess dry-run: lowers+compiles two full archs
 def test_mini_dryrun_small_mesh():
     """Lower+compile smoke configs for a 4x2 mesh through the real sharding
     machinery (the production-mesh equivalent runs in launch/dryrun.py)."""
@@ -90,11 +92,14 @@ def test_mini_dryrun_small_mesh():
                                               NamedSharding(mesh, P("data", None))),
                             out_shardings=(nsh, osh, None)
                             ).lower(pa, oa, toks).compile()
-                print(arch, "compiled", c.cost_analysis()["flops"] > 0)
+                ca = c.cost_analysis()
+                ca = ca[0] if isinstance(ca, list) else ca  # jax 0.4.x: list
+                print(arch, "compiled", ca["flops"] > 0)
     """)
     assert out.count("compiled True") == 2, out
 
 
+@pytest.mark.slow  # subprocess dry-run: runs a sharded MoE step on 8 devices
 def test_mini_dryrun_runs_real_arrays():
     """Not just compile: run a sharded MoE train step on 8 devices and check
     finite loss (exercises the shard_map all-to-alls for real)."""

@@ -77,6 +77,7 @@ def test_atomic_save_never_corrupts(tmp_path, lm_setup):
     assert jax.tree.structure(tree) is not None
 
 
+@pytest.mark.slow  # subprocess: re-imports jax on 8 virtual devices
 def test_elastic_reshard_on_restore(tmp_path):
     """Save under one topology, restore under another (subprocess w/ 8 devs)."""
     try:

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # optional dep: requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.models.moe import MoEConfig, _dispatch_combine, moe_apply, moe_init

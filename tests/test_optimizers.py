@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # optional dep: requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.train.optimizers import (OptConfig, global_norm, init_opt_state,

@@ -2,6 +2,9 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dep: requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 

@@ -15,6 +15,9 @@ LM_ARCHS = ["gemma2-27b", "deepseek-7b", "h2o-danube-1.8b",
             "llama4-scout-17b-16e", "kimi-k2-1t-a32b"]
 GNN_ARCHS = ["gin-tu", "graphcast", "meshgraphnet", "graphsage-reddit"]
 
+# every per-arch case jit-compiles a full model: minutes of wall clock on CPU
+pytestmark = pytest.mark.slow
+
 OPT = OptConfig(lr=1e-3, warmup=1, decay_steps=100)
 
 
