@@ -8,7 +8,8 @@ import jax
 import numpy as np
 
 from repro.core.affinity import affinity_matrix, estimate_k
-from repro.core.alid import ALIDConfig, detect_clusters
+from repro.core.alid import ALIDConfig, EngineSpec
+from repro.core.engine import fit
 from repro.core.peeling import ds_detect, iid_detect
 from repro.data import auto_lsh_params, make_blobs_with_noise
 from repro.utils import avg_f1_score
@@ -18,13 +19,14 @@ def run_alid(spec, seed=0, seg_scale=8.0, a_cap=None, probe=16, n_shards=0,
              **cfg_kw):
     sizes = np.bincount(spec.labels[spec.labels >= 0])
     a_star = int(sizes.max()) if sizes.size else 64
+    espec = (EngineSpec(engine="sharded", n_shards=n_shards) if n_shards > 0
+             else EngineSpec(engine="replicated"))
     cfg = ALIDConfig(
         a_cap=a_cap or min(512, max(64, int(a_star * 1.5))), delta=128,
         lsh=auto_lsh_params(spec.points, seg_scale=seg_scale, probe=probe),
-        seeds_per_round=32, max_rounds=64, **cfg_kw)
+        seeds_per_round=32, max_rounds=64, spec=espec, **cfg_kw)
     t0 = time.time()
-    res = detect_clusters(spec.points, cfg, jax.random.PRNGKey(seed),
-                          n_shards=n_shards)
+    res = fit(spec.points, cfg, jax.random.PRNGKey(seed))
     dt = time.time() - t0
     return avg_f1_score(spec.labels, res.labels), dt, res
 

@@ -3,12 +3,14 @@ a* regimes. Under log-log axes the paper reports slopes ~2 (a*=wn),
 ~1+eta (a*=n^eta), ~1 (a*<=P) for ALID, vs ~2 for all full-matrix baselines.
 
 Also compares the replicated CIVS engine against the out-of-core
-ShardedStore engine. Two comparisons per regime:
+ShardedStore engine (both through the `repro.core.engine.fit` facade, via
+benchmarks.common). Two comparisons per regime:
 
   * fig7/alid_sharded_* — the sharded engine on the default (truncating)
-    probe: same runtime-growth regime, but big LSH buckets are sampled at
-    shard granularity so clusterings may legitimately diverge; avgf shows
-    quality holds anyway.
+    probe: same runtime-growth regime; the global probe budget keeps the
+    per-bucket sample size at the replicated engine's, though the sampled
+    members may differ, so clusterings can still legitimately diverge; avgf
+    shows quality holds anyway.
   * fig7/sharded_parity_* — both engines at probe >= bucket sizes (the
     exhaustive setting of DESIGN.md §3.1): `agree` is the fraction of
     points with the same canonical label, and must be 1.000.
@@ -38,7 +40,7 @@ def exhaustive_probe(spec) -> int:
     from repro.lsh.pstable import build_lsh
 
     lshp = auto_lsh_params(spec.points, seg_scale=8.0)
-    # same key derivation as detect_clusters(rng=PRNGKey(0)): rng, kb = split
+    # same key derivation as engine.fit(rng=PRNGKey(0)): rng, kb = split
     kb = jax.random.split(jax.random.PRNGKey(0))[1]
     tables = build_lsh(jnp.asarray(spec.points), lshp, kb)
     mx = 1

@@ -24,8 +24,8 @@ _SCRIPT = """
 import json, time
 import jax
 import numpy as np
-from repro.core.alid import ALIDConfig, detect_clusters
-from repro.core.palid import detect_clusters_parallel
+from repro.core.alid import ALIDConfig, EngineSpec
+from repro.core.engine import fit
 from repro.data import auto_lsh_params, make_blobs_with_noise
 from repro.distributed.context import MeshContext
 from repro.utils import avg_f1_score
@@ -33,15 +33,16 @@ from repro.utils import avg_f1_score
 DEV = {dev}
 spec = make_blobs_with_noise(n_clusters=10, cluster_size=60, n_noise=2000,
                              d=16, seed=9)
-cfg = ALIDConfig(a_cap=128, delta=128, lsh=auto_lsh_params(spec.points),
-                 seeds_per_round=32, max_rounds=24)
-t0 = time.time()
 if DEV > 1:
     mesh = jax.make_mesh((DEV,), ("data",))
     ctx = MeshContext(mesh=mesh, data_axes=("data",), model_axis="data")
-    res = detect_clusters_parallel(spec.points, cfg, jax.random.PRNGKey(0), ctx)
+    espec = EngineSpec(engine="mesh", mesh_ctx=ctx)
 else:
-    res = detect_clusters(spec.points, cfg, jax.random.PRNGKey(0))
+    espec = EngineSpec(engine="replicated")
+cfg = ALIDConfig(a_cap=128, delta=128, lsh=auto_lsh_params(spec.points),
+                 seeds_per_round=32, max_rounds=24, spec=espec)
+t0 = time.time()
+res = fit(spec.points, cfg, jax.random.PRNGKey(0))
 dt = time.time() - t0
 print(json.dumps(dict(devices=DEV, wall_s=dt,
                       seeds_per_device=cfg.seeds_per_round // DEV,

@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.alid import ALIDConfig, detect_clusters
+from repro.core.alid import ALIDConfig
+from repro.core.engine import fit
 from repro.data import auto_lsh_params
 from repro.models import gnn as gnn_m
 from repro.utils import avg_f1_score
@@ -49,9 +50,9 @@ def main():
 
     acfg = ALIDConfig(a_cap=96, delta=96, lsh=auto_lsh_params(emb),
                       seeds_per_round=16, max_rounds=30)
-    res = detect_clusters(emb, acfg, jax.random.PRNGKey(1))
+    res = fit(emb, acfg, jax.random.PRNGKey(1))
     f = avg_f1_score(comm, res.labels)
-    print(f"[gnn] ALID found {len(res.densities)} dominant node clusters, "
+    print(f"[gnn] ALID found {res.n_clusters} dominant node clusters, "
           f"AVG-F vs true communities = {f:.3f}")
 
 

@@ -1,7 +1,7 @@
 """End-to-end PALID driver (the paper's SIFT-50M scenario, scaled to CPU):
-build LSH index -> parallel seed rounds over a device mesh -> max-density
-reduce -> report clusters + quality, with checkpointed peeling state between
-rounds (restartable).
+build LSH index -> parallel seed rounds over a device mesh -> shared
+segment-max reduce -> report clusters + quality, all through the unified
+engine facade (`repro.core.engine.fit` with EngineSpec(engine="mesh")).
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
         python examples/palid_pipeline.py --n 30000 --devices 8
@@ -13,8 +13,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core.alid import ALIDConfig, detect_clusters
-from repro.core.palid import detect_clusters_parallel
+from repro.core.alid import ALIDConfig, EngineSpec
+from repro.core.engine import fit
 from repro.data import auto_lsh_params, make_blobs_with_noise
 from repro.distributed.context import MeshContext
 from repro.utils import avg_f1_score
@@ -35,23 +35,23 @@ def main():
     print(f"[pipeline] {args.n} descriptors, {n_clusters} visual-word "
           f"clusters of ~{cluster_size}, rest noise")
 
-    cfg = ALIDConfig(a_cap=max(64, cluster_size + 32), delta=128,
-                     lsh=auto_lsh_params(spec.points),
-                     seeds_per_round=32, max_rounds=48)
-    t0 = time.time()
     if args.devices > 1:
         mesh = jax.make_mesh((args.devices,), ("data",))
         ctx = MeshContext(mesh=mesh, data_axes=("data",), model_axis="data")
-        res = detect_clusters_parallel(spec.points, cfg, jax.random.PRNGKey(1),
-                                       ctx)
+        espec = EngineSpec(engine="mesh", mesh_ctx=ctx)
         mode = f"PALID x{args.devices}"
     else:
-        res = detect_clusters(spec.points, cfg, jax.random.PRNGKey(1))
+        espec = EngineSpec(engine="replicated")
         mode = "ALID serial"
+    cfg = ALIDConfig(a_cap=max(64, cluster_size + 32), delta=128,
+                     lsh=auto_lsh_params(spec.points),
+                     seeds_per_round=32, max_rounds=48, spec=espec)
+    t0 = time.time()
+    res = fit(spec.points, cfg, jax.random.PRNGKey(1))
     dt = time.time() - t0
 
-    sizes = np.bincount(res.labels[res.labels >= 0]) if len(res.densities) else []
-    print(f"[pipeline] {mode}: {dt:.1f}s, {len(res.densities)} clusters, "
+    sizes = np.bincount(res.labels[res.labels >= 0]) if res.n_clusters else []
+    print(f"[pipeline] {mode}: {dt:.1f}s, {res.n_clusters} clusters, "
           f"sizes {sorted(sizes.tolist(), reverse=True)[:10]}...")
     print(f"[pipeline] AVG-F = {avg_f1_score(spec.labels, res.labels):.3f}")
 

@@ -1,41 +1,75 @@
-"""Quickstart: detect dominant clusters in a noisy point cloud with ALID.
+"""Quickstart: detect dominant clusters in a noisy point cloud with ALID,
+through the unified engine facade.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py            # full demo
+    PYTHONPATH=src python examples/quickstart.py --quick    # CI smoke (small n)
 
 The data mimics the paper's synthetic setup: Gaussian clusters buried in
 uniform background noise; ALID finds the clusters without knowing their
-number and leaves the noise unlabeled (-1).
+number and leaves the noise unlabeled (-1). The fitted `Clustering` then
+assigns NEW points via `predict` — no re-clustering, no original dataset.
 """
+
+import argparse
 
 import jax
 import numpy as np
 
-from repro.core.alid import ALIDConfig, detect_clusters
-from repro.core.affinity import affinity_matrix, estimate_k
-from repro.core.peeling import iid_detect
+from repro.core.alid import ALIDConfig, EngineSpec
+from repro.core.engine import fit
 from repro.data import auto_lsh_params, make_blobs_with_noise
 from repro.utils import avg_f1_score
 
 
 def main():
-    spec = make_blobs_with_noise(n_clusters=8, cluster_size=50, n_noise=600,
-                                 d=24, seed=42)
-    print(f"data: {spec.points.shape[0]} points "
-          f"({8 * 50} in clusters, 600 noise), d={spec.points.shape[1]}")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small-n smoke run (used by CI)")
+    args = ap.parse_args()
 
-    cfg = ALIDConfig(a_cap=96, delta=96, lsh=auto_lsh_params(spec.points),
-                     seeds_per_round=16, max_rounds=40)
-    res = detect_clusters(spec.points, cfg, jax.random.PRNGKey(0))
-    print(f"ALID: {len(res.densities)} dominant clusters "
+    n_clusters, cluster_size, n_noise = \
+        (4, 24, 100) if args.quick else (8, 50, 600)
+    spec = make_blobs_with_noise(n_clusters=n_clusters,
+                                 cluster_size=cluster_size,
+                                 n_noise=n_noise, d=24, seed=42)
+    print(f"data: {spec.points.shape[0]} points "
+          f"({n_clusters * cluster_size} in clusters, {n_noise} noise), "
+          f"d={spec.points.shape[1]}")
+
+    # probe=128 keeps retrieval exhaustive at this scale, so the engines
+    # agree exactly (DESIGN.md §3.1) and the smoke run is deterministic
+    cfg = ALIDConfig(a_cap=cluster_size * 2, delta=96,
+                     lsh=auto_lsh_params(spec.points, probe=128),
+                     seeds_per_round=16,
+                     max_rounds=24 if args.quick else 40,
+                     spec=EngineSpec(engine="replicated"))
+    res = fit(spec.points, cfg, jax.random.PRNGKey(0))
+    print(f"ALID: {res.n_clusters} dominant clusters "
           f"(densities {np.round(res.densities, 3).tolist()})")
     print(f"ALID AVG-F = {avg_f1_score(spec.labels, res.labels):.3f}")
 
-    # reference: the O(n^2) full-matrix IID baseline the paper compares against
-    import jax.numpy as jnp
-    pts = jnp.asarray(spec.points)
-    ref = iid_detect(affinity_matrix(pts, float(estimate_k(pts))))
-    print(f"IID  AVG-F = {avg_f1_score(spec.labels, ref.labels):.3f} "
-          f"(full affinity matrix: {spec.points.shape[0]}^2 entries)")
+    # the fitted result is a first-class object: assign held-out queries
+    members = spec.points[res.labels >= 0][:8]
+    far = spec.points[:8] + 100.0          # way outside every cluster
+    print(f"predict(members) = {res.predict(members).tolist()}")
+    print(f"predict(far noise) = {res.predict(far).tolist()}")
+
+    # the sharded out-of-core engine is one spec away — same labels
+    shd = fit(spec.points,
+              cfg._replace(spec=EngineSpec(engine="sharded", n_shards=4)),
+              jax.random.PRNGKey(0))
+    agree = float(np.mean(shd.labels == res.labels))
+    print(f"sharded engine agreement = {agree:.3f}")
+
+    if not args.quick:
+        # reference: the O(n^2) full-matrix IID baseline the paper beats
+        import jax.numpy as jnp
+        from repro.core.affinity import affinity_matrix, estimate_k
+        from repro.core.peeling import iid_detect
+        pts = jnp.asarray(spec.points)
+        ref = iid_detect(affinity_matrix(pts, float(estimate_k(pts))))
+        print(f"IID  AVG-F = {avg_f1_score(spec.labels, ref.labels):.3f} "
+              f"(full affinity matrix: {spec.points.shape[0]}^2 entries)")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,7 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+# The paper's primary contribution — the ALID dominant-cluster system.
+# Public facade: one config (ALIDConfig + EngineSpec), one driver (fit),
+# one result object (Clustering, with predict() and npz serialization).
+from repro.core.alid import ALIDConfig, Clustering, EngineSpec  # noqa: F401
+from repro.core.engine import (Engine, MeshEngine, ReplicatedEngine,  # noqa: F401
+                               ShardedEngine, fit, make_engine,
+                               resolve_claims)

@@ -1,32 +1,56 @@
-"""ALID — the complete algorithm (paper Alg. 2) plus the peeling driver
-(Sec. 4.4) and bucket-based seeding (Sec. 4.6).
+"""ALID — the complete algorithm (paper Alg. 2): config, the per-seed
+instance, bucket-based seed sampling (Sec. 4.6), and the `Clustering` result
+object.
 
 One ALID instance = iterate (LID -> ROI -> CIVS) from a seed vertex until the
 local dense subgraph is immune against everything the ROI can still add, or
 c > C. Instances are shape-static, so a whole batch of seeds runs under vmap —
 the single-machine analogue of the paper's PALID mappers (and the unit that
-shard_map distributes across devices in repro.core.palid).
+shard_map distributes across devices in repro.core.engine.MeshEngine).
 
-Peeling: claimed points are deactivated each round; overlapping claims are
-resolved to the maximum-density cluster exactly like the PALID reducer.
+The peel-reduce DRIVER lives in `repro.core.engine`: one host loop (`fit`)
+over a declaratively selected Engine (replicated / sharded / mesh, see
+`EngineSpec`), with a single segment-max claim reducer shared by every
+engine. The old entry points `detect_clusters` / `detect_clusters_sharded`
+(and `repro.core.palid.detect_clusters_parallel`) remain as thin deprecation
+shims over `engine.fit`.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+import warnings
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.affinity import estimate_k
+from repro.core.affinity import affinity_block, estimate_k
 from repro.core.civs import civs_update
 from repro.core.lid import (LIDState, density, init_state, init_state_from,
                             lid_solve)
 from repro.core.roi import estimate_roi
-from repro.core.store import ShardedStore, build_store, global_bucket_sizes, take
-from repro.lsh.pstable import LSHParams, LSHTables, bucket_sizes, build_lsh
+from repro.core.store import ShardedStore, take
+from repro.distributed.context import MeshContext
+from repro.lsh.pstable import LSHParams, LSHTables
+
+
+class EngineSpec(NamedTuple):
+    """Declarative engine selection, folded into ALIDConfig (hashable).
+
+    engine:   "replicated" — full dataset + monolithic LSH on one device;
+              "sharded"    — out-of-core ShardedStore, CIVS streams shards;
+              "mesh"       — PALID map phase sharded over a device mesh
+                             (replicated store, or ShardedStore when
+                             n_shards > 0: one HBM slice per device).
+    n_shards: ShardedStore shard count (0 = replicated store).
+    mesh_ctx: MeshContext for engine="mesh" (None -> a default 1-axis "data"
+              mesh over all visible devices).
+    """
+    engine: str = "replicated"
+    n_shards: int = 0
+    mesh_ctx: Optional[MeshContext] = None
 
 
 class ALIDConfig(NamedTuple):
@@ -47,6 +71,7 @@ class ALIDConfig(NamedTuple):
     max_rounds: int = 128
     min_bucket: int = 5           # paper: seed from buckets with > 5 items
     exhaustive: bool = False      # peel until no active point remains
+    spec: EngineSpec = EngineSpec()
 
     @property
     def cap(self) -> int:
@@ -62,11 +87,102 @@ class SeedResult(NamedTuple):
     overflow: jax.Array     # () support hit a_cap
 
 
+@jax.jit
+def _predict_scores(q, sup_v, sup_w, k):
+    """Weighted affinity of queries to every cluster's support (the CIVS
+    affinity kernel): q:(m,d), sup_v:(C,A,d), sup_w:(C,A) -> (m,C)."""
+    def one(v, w):
+        return affinity_block(q, v, k) @ w
+    return jax.vmap(one, in_axes=(0, 0), out_axes=1)(sup_v, sup_w)
+
+
+def assign_labels(q, sup_v, sup_w, densities: np.ndarray, k,
+                  threshold: float) -> np.ndarray:
+    """Label queries by max weighted support affinity, -1 below the bar.
+
+    Shared by `Clustering.predict` and `serve.ClusterService` (the service
+    passes pre-converted device arrays so the support tensor is uploaded
+    once, not per batch). Array args may be numpy or jax arrays.
+    """
+    scores = np.asarray(_predict_scores(q, sup_v, sup_w, jnp.float32(k)))
+    best = scores.argmax(axis=1)
+    ok = scores[np.arange(scores.shape[0]), best] >= \
+        threshold * np.asarray(densities)[best]
+    return np.where(ok, best, -1).astype(np.int32)
+
+
 class Clustering(NamedTuple):
+    """First-class clustering result: labels + per-cluster weighted supports.
+
+    Beyond the label array, `fit` records each dominant cluster's support
+    (member indices, LID weights, and point vectors), which makes the result
+    self-contained: `predict` assigns NEW points without the original
+    dataset, and `save`/`load` round-trip through a plain .npz file.
+    """
     labels: np.ndarray      # (n,) int32, -1 = unclustered / noise
     densities: np.ndarray   # (n_clusters,)
     n_rounds: int
     k: float
+    support_idx: Optional[np.ndarray] = None  # (C, cap) int32, -1 pad
+    support_w: Optional[np.ndarray] = None    # (C, cap) f32, simplex per row
+    support_v: Optional[np.ndarray] = None    # (C, cap, d) f32, 0 on pad
+
+    @property
+    def n_clusters(self) -> int:
+        return int(len(self.densities))
+
+    def predict(self, queries, threshold: float = 0.5) -> np.ndarray:
+        """Assign queries to detected dominant clusters; -1 = none.
+
+        A query joins the cluster of maximal weighted support affinity
+        sum_j w_j * exp(-k ||q - v_j||) (paper Eq. 1 against the stored
+        support — ALID's localization makes this O(C * cap), independent of
+        n). For a true member this score is ~pi(x) (the KKT payoff), so the
+        acceptance bar is `threshold * densities[c]`; far-away noise decays
+        to ~0 and stays unassigned.
+        """
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        if self.support_v is None or self.n_clusters == 0:
+            return np.full((q.shape[0],), -1, np.int32)
+        return assign_labels(q, self.support_v, self.support_w,
+                             self.densities, self.k, threshold)
+
+    def to_dict(self) -> dict:
+        """NumPy-safe dict (no jax arrays; None supports dropped)."""
+        out = {
+            "labels": np.asarray(self.labels, np.int32),
+            "densities": np.asarray(self.densities, np.float32),
+            "n_rounds": np.int32(self.n_rounds),
+            "k": np.float32(self.k),
+        }
+        if self.support_idx is not None:
+            out["support_idx"] = np.asarray(self.support_idx, np.int32)
+            out["support_w"] = np.asarray(self.support_w, np.float32)
+            out["support_v"] = np.asarray(self.support_v, np.float32)
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Clustering":
+        return cls(
+            labels=np.asarray(d["labels"], np.int32),
+            densities=np.asarray(d["densities"], np.float32),
+            n_rounds=int(d["n_rounds"]),
+            k=float(d["k"]),
+            support_idx=np.asarray(d["support_idx"], np.int32)
+            if "support_idx" in d else None,
+            support_w=np.asarray(d["support_w"], np.float32)
+            if "support_w" in d else None,
+            support_v=np.asarray(d["support_v"], np.float32)
+            if "support_v" in d else None,
+        )
+
+    def save(self, path) -> None:
+        np.savez(path, **self.to_dict())
+
+    @classmethod
+    def load(cls, path) -> "Clustering":
+        with np.load(path) as z:
+            return cls.from_dict({k: z[k] for k in z.files})
 
 
 def alid_from_seed(
@@ -124,34 +240,6 @@ def alid_from_seed(
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def _run_round(points, active, tables, seeds, seed_valid, k, cfg: ALIDConfig):
-    """Run a batch of seeds and resolve claims PALID-reducer style."""
-    results = jax.vmap(
-        lambda s: alid_from_seed(points, active, tables, s, k, cfg)
-    )(seeds)
-
-    n = points.n_points if isinstance(points, ShardedStore) else points.shape[0]
-    s_batch, cap = results.member_idx.shape
-    flat_idx = results.member_idx.reshape(-1)
-    flat_valid = results.member_mask.reshape(-1) & (flat_idx >= 0)
-    flat_valid &= jnp.repeat(seed_valid, cap)
-    flat_dens = jnp.repeat(results.density, cap)
-    safe = jnp.clip(flat_idx, 0, n - 1)
-
-    # reduce 1: max density claiming each point
-    best_dens = jnp.full((n,), -jnp.inf, jnp.float32).at[safe].max(
-        jnp.where(flat_valid, flat_dens, -jnp.inf))
-    # reduce 2: among winners, deterministic tie-break on seed row id
-    flat_row = jnp.repeat(jnp.arange(s_batch, dtype=jnp.int32), cap)
-    is_winner = flat_valid & (flat_dens >= best_dens[safe] - 1e-9)
-    best_row = jnp.full((n,), -1, jnp.int32).at[safe].max(
-        jnp.where(is_winner, flat_row, -1))
-
-    claimed = best_row >= 0
-    return claimed, best_row, best_dens, results
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
 def _sample_seeds(active, bsizes, rng, cfg: ALIDConfig):
     """Gumbel-top-k sampling, biased to large LSH buckets (paper Sec. 4.6)."""
     eligible = active & (bsizes > cfg.min_bucket)
@@ -164,82 +252,32 @@ def _sample_seeds(active, bsizes, rng, cfg: ALIDConfig):
     return seeds.astype(jnp.int32), valid, any_eligible
 
 
-def _peel(n: int, cfg: ALIDConfig, rng: jax.Array, bsizes: jax.Array,
-          run_round, k: jax.Array) -> Clustering:
-    """Host-level peeling loop shared by the replicated and sharded drivers:
-    rounds of batched seeds until the data set is consumed (exhaustive) or no
-    dominant-cluster candidates remain. `run_round(active, seeds, seed_valid)`
-    returns the `_run_round` tuple for whichever retrieval engine backs it."""
-    active = jnp.ones((n,), bool)
-    labels = np.full((n,), -1, np.int32)
-    densities: list[float] = []
-    next_label = 0
-    rounds = 0
-
-    for rounds in range(1, cfg.max_rounds + 1):
-        rng, kr = jax.random.split(rng)
-        seeds, seed_valid, any_eligible = _sample_seeds(active, bsizes, kr, cfg)
-        if not bool(jnp.any(seed_valid)):
-            break
-        if not cfg.exhaustive and not bool(any_eligible):
-            break
-        claimed, best_row, best_dens, results = run_round(
-            active, seeds, seed_valid)
-
-        claimed_np = np.asarray(claimed)
-        row_np = np.asarray(best_row)
-        dens_np = np.asarray(results.density)
-        # assign labels for winning rows that clear the density threshold
-        for row in np.unique(row_np[claimed_np]):
-            pts = np.where(claimed_np & (row_np == row))[0]
-            if pts.size == 0:
-                continue
-            if dens_np[row] >= cfg.density_min and pts.size > 1:
-                labels[pts] = next_label
-                densities.append(float(dens_np[row]))
-                next_label += 1
-        # peel everything claimed + the seeds themselves (guarantees progress)
-        seeds_np = np.asarray(seeds)[np.asarray(seed_valid)]
-        new_inactive = claimed_np.copy()
-        new_inactive[seeds_np] = True
-        active = active & jnp.asarray(~new_inactive)
-        if not bool(jnp.any(active)):
-            break
-
-    return Clustering(labels=labels, densities=np.asarray(densities, np.float32),
-                      n_rounds=rounds, k=float(k))
-
+# --------------------------------------------------------------------------
+# Deprecated entry points — thin shims over repro.core.engine.fit. The engine
+# choice is what used to be smeared across n_shards/ctx kwargs; new code
+# should set ALIDConfig.spec and call fit().
+# --------------------------------------------------------------------------
 
 def detect_clusters(points: jax.Array, cfg: ALIDConfig, rng: jax.Array,
                     n_shards: int = 0) -> Clustering:
-    """Dominant-cluster detection over the full dataset.
-
-    n_shards == 0: replicated engine (monolithic LSH tables, original path).
-    n_shards > 0: out-of-core engine — points + LSH are partitioned into
-    `n_shards` shards and CIVS streams them (see repro.core.store). Both
-    engines share rng consumption and seeding statistics, so on data without
-    exact float ties they produce identical clusterings (tests/test_sharded).
-    """
-    points = jnp.asarray(points, jnp.float32)
-    n = points.shape[0]
-    k = jnp.float32(cfg.k) if cfg.k is not None else estimate_k(points)
-    rng, kb = jax.random.split(rng)
-    if n_shards > 0:
-        store = build_store(points, cfg.lsh, kb, n_shards=n_shards)
-        bsizes = global_bucket_sizes(store)
-        data, tables = store, None
-    else:
-        tables = build_lsh(points, cfg.lsh, kb)
-        bsizes = bucket_sizes(tables)
-        data = points
-
-    def run_round(active, seeds, seed_valid):
-        return _run_round(data, active, tables, seeds, seed_valid, k, cfg)
-
-    return _peel(n, cfg, rng, bsizes, run_round, k)
+    """Deprecated: use `repro.core.engine.fit` with `ALIDConfig.spec`."""
+    warnings.warn(
+        "detect_clusters is deprecated; use repro.core.engine.fit with "
+        "ALIDConfig(spec=EngineSpec(engine='replicated'|'sharded', ...))",
+        DeprecationWarning, stacklevel=2)
+    from repro.core.engine import fit
+    spec = (EngineSpec(engine="sharded", n_shards=int(n_shards))
+            if n_shards > 0 else EngineSpec(engine="replicated"))
+    return fit(points, cfg._replace(spec=spec), rng)
 
 
 def detect_clusters_sharded(points: jax.Array, cfg: ALIDConfig,
                             rng: jax.Array, n_shards: int = 8) -> Clustering:
-    """The out-of-core driver: `detect_clusters` on the ShardedStore engine."""
-    return detect_clusters(points, cfg, rng, n_shards=max(1, n_shards))
+    """Deprecated: use `repro.core.engine.fit` with engine="sharded"."""
+    warnings.warn(
+        "detect_clusters_sharded is deprecated; use repro.core.engine.fit "
+        "with ALIDConfig(spec=EngineSpec(engine='sharded', n_shards=...))",
+        DeprecationWarning, stacklevel=2)
+    from repro.core.engine import fit
+    spec = EngineSpec(engine="sharded", n_shards=max(1, int(n_shards)))
+    return fit(points, cfg._replace(spec=spec), rng)

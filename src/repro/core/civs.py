@@ -22,8 +22,12 @@ Two retrieval engines sit behind the one `civs_update` signature:
     chunk into a running top-delta candidate buffer (`jax.lax.top_k` over
     [buffer ++ chunk]). Because shards partition the dataset and share the
     LSH projections, the union over shards of the chunked retrieval equals
-    the monolithic retrieval exactly (tested in tests/test_sharded.py);
-    peak live affinity/candidate state is O(shard + a_cap + delta), not O(n).
+    the monolithic retrieval exactly when probe covers the buckets (tested
+    in tests/test_sharded.py), and a GLOBAL probe budget
+    (`pstable.shard_bucket_windows`) keeps the per-bucket sample size at
+    min(bucket, probe) — the replicated engine's — even when an oversized
+    bucket spans many shards. Peak live affinity/candidate state is
+    O(shard + a_cap + delta), not O(n).
 """
 
 from __future__ import annotations
@@ -39,7 +43,8 @@ from repro.core.lid import LIDState
 from repro.core.roi import ROI
 from repro.core.store import ShardedStore
 from repro.lsh.pstable import (LSHParams, LSHTables, hash_queries,
-                               probe_tables, query_batch)
+                               probe_tables_window, query_batch,
+                               shard_bucket_windows)
 
 
 class CIVSResult(NamedTuple):
@@ -161,6 +166,13 @@ def _retrieve_sharded(roi: ROI, store: ShardedStore, active, lsh_params,
     n_shards, shard_cap, _ = store.shards.shape
     keys, salts = hash_queries(sup_v, store.tables.proj, store.tables.bias,
                                lsh_params.seg_len)         # (L, a_cap)
+    # Global probe budget (ROADMAP item): one `probe`-wide salted window per
+    # (table, query) is split across shards proportionally to their bucket
+    # spans, so an oversized bucket yields min(bucket, probe) candidates in
+    # total — the replicated engine's sample size — instead of per-shard
+    # windows that grow with the shard count.
+    win_starts, win_lo, win_hi = shard_bucket_windows(
+        store.tables.sorted_keys, keys, salts, lsh_params.probe)
 
     d = store.shards.shape[2]
 
@@ -174,7 +186,10 @@ def _retrieve_sharded(roi: ROI, store: ShardedStore, active, lsh_params,
                                             keepdims=False)  # (cap,)
         pts_s = jax.lax.dynamic_index_in_dim(store.shards, s, 0,
                                              keepdims=False)  # (cap, d)
-        local = probe_tables(sk, pm, keys, salts, lsh_params.probe)
+        st = jax.lax.dynamic_index_in_dim(win_starts, s, 0, keepdims=False)
+        lo = jax.lax.dynamic_index_in_dim(win_lo, s, 0, keepdims=False)
+        hi = jax.lax.dynamic_index_in_dim(win_hi, s, 0, keepdims=False)
+        local = probe_tables_window(sk, pm, keys, st, lo, hi, lsh_params.probe)
         local = jnp.where(sup_slot_mask[:, None], local, -1)
         flat = local.reshape(-1)                          # (a_cap * L * probe,)
         safe_slot = jnp.clip(flat, 0, shard_cap - 1)

@@ -1,0 +1,377 @@
+"""Unified ClusterEngine API — ONE peel-reduce driver over three engines.
+
+This module is the public face of dominant-cluster detection:
+
+    cfg = ALIDConfig(spec=EngineSpec(engine="sharded", n_shards=8), ...)
+    clustering = fit(points, cfg, rng)          # -> Clustering
+    labels = clustering.predict(new_points)     # per-query assignment
+
+`fit` runs the host-level peeling loop of paper Sec. 4.4: rounds of batched
+seeds, each resolved by the PALID reducer (Sec. 4.6) — a point belongs to
+the claiming instance of maximum density, exact ties broken deterministically
+toward the larger seed row id. That reducer exists exactly ONCE
+(`resolve_claims`, a jitted segment-max scatter) and every engine routes
+through it; the paper's MapReduce split survives as map = `run_round`'s
+vmapped/shard_mapped ALID instances, reduce = `resolve_claims`.
+
+Engines implement the small `Engine` protocol and differ only in where the
+retrieval substrate lives:
+
+  * ReplicatedEngine — full dataset + monolithic LSH on the local device(s);
+  * ShardedEngine    — out-of-core `ShardedStore`, CIVS streams one shard at
+                       a time (DESIGN.md §3);
+  * MeshEngine       — the PALID map phase sharded over a device mesh, with
+                       either a replicated store or (n_shards > 0) the
+                       ShardedStore placed one HBM slice per device.
+
+All three consume the PRNG stream identically (one split for the LSH build,
+one per round for seeding) and share seeding statistics, so on tie-free data
+they produce identical labels (tests/test_engine.py parametrizes the parity
+suite over every engine x exhaustive mode).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.alid import (ALIDConfig, Clustering, EngineSpec, SeedResult,
+                             _sample_seeds, alid_from_seed)
+from repro.core.affinity import estimate_k
+from repro.core.store import build_store, global_bucket_sizes
+from repro.distributed.context import MeshContext, mesh_context
+from repro.distributed.shardings import logical_spec, store_specs
+from repro.lsh.pstable import bucket_sizes, build_lsh
+
+__all__ = ["Engine", "EngineSpec", "Clustering", "fit", "make_engine",
+           "resolve_claims", "ReplicatedEngine", "ShardedEngine",
+           "MeshEngine"]
+
+
+# ------------------------------------------------------------ the reducer --
+@functools.partial(jax.jit, static_argnames=("n",))
+def resolve_claims(member_idx: jax.Array, member_mask: jax.Array,
+                   dens: jax.Array, seed_valid: jax.Array, n: int):
+    """THE claim reducer (paper Sec. 4.6) — the only implementation.
+
+    Segment-max over all (seed row, member) claims: each point goes to the
+    claiming instance of maximum density; among exactly-tied densities
+    (within 1e-9) the larger seed row id wins, deterministically. Every
+    engine resolves its round through this function, so serial, sharded and
+    mesh runs agree even on deliberately tied data (tests/test_engine.py).
+
+    member_idx/member_mask: (s, cap); dens/seed_valid: (s,).
+    Returns (claimed (n,) bool, best_row (n,) int32, best_dens (n,) f32).
+    """
+    s_batch, cap = member_idx.shape
+    flat_idx = member_idx.reshape(-1)
+    flat_valid = member_mask.reshape(-1) & (flat_idx >= 0)
+    flat_valid &= jnp.repeat(seed_valid, cap)
+    flat_dens = jnp.repeat(dens, cap)
+    safe = jnp.clip(flat_idx, 0, n - 1)
+
+    # reduce 1: max density claiming each point
+    best_dens = jnp.full((n,), -jnp.inf, jnp.float32).at[safe].max(
+        jnp.where(flat_valid, flat_dens, -jnp.inf))
+    # reduce 2: among winners, deterministic tie-break on seed row id
+    flat_row = jnp.repeat(jnp.arange(s_batch, dtype=jnp.int32), cap)
+    is_winner = flat_valid & (flat_dens >= best_dens[safe] - 1e-9)
+    best_row = jnp.full((n,), -1, jnp.int32).at[safe].max(
+        jnp.where(is_winner, flat_row, -1))
+
+    claimed = best_row >= 0
+    return claimed, best_row, best_dens
+
+
+# ---------------------------------------------------------- map functions --
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _map_round(points, active, tables, seeds, k, cfg: ALIDConfig):
+    """Local map phase: a vmapped batch of ALID instances. `points` is the
+    replicated array (+`tables`) or a ShardedStore (`tables=None`)."""
+    return jax.vmap(
+        lambda s: alid_from_seed(points, active, tables, s, k, cfg))(seeds)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "ctx"))
+def _map_round_mesh(points, active, tables, seeds, k, cfg: ALIDConfig,
+                    ctx: MeshContext):
+    """PALID map phase: seeds sharded over the data axes, dataset + LSH
+    tables replicated; every device runs its seed batch under vmap."""
+    data = ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+
+    def shard_fn(pts, act, tab, seeds_local):
+        return jax.vmap(
+            lambda s: alid_from_seed(pts, act, tab, s, k, cfg))(seeds_local)
+
+    rep = lambda leaf: P(*([None] * leaf.ndim))
+    return shard_map(
+        shard_fn, mesh=ctx.mesh,
+        in_specs=(P(None, None), P(None),
+                  jax.tree.map(rep, tables), P(data)),
+        out_specs=P(data),
+        check_rep=False,
+    )(points, active, tables, seeds)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _map_round_mesh_sharded(store, active, seeds, k, cfg: ALIDConfig):
+    """Map phase against the mesh-placed ShardedStore. No shard_map: the
+    store's leading S axis is device-placed (store_specs) and GSPMD
+    materializes one shard slice per fori_loop step of the streaming CIVS —
+    each device's HBM holds its dataset slice plus a single in-flight shard,
+    not a replica."""
+    return jax.vmap(
+        lambda s: alid_from_seed(store, active, None, s, k, cfg))(seeds)
+
+
+# ----------------------------------------------------------------- engines --
+class Engine(Protocol):
+    """One retrieval/compute substrate behind the shared peel-reduce driver.
+
+    build() prepares the store + LSH (consuming rng exactly once), after
+    which `k` and `bucket_sizes` are available; run_round() maps a batch of
+    seeds and resolves their claims through `resolve_claims`.
+    """
+
+    k: jax.Array
+
+    def build(self, points: jax.Array, cfg: ALIDConfig,
+              rng: jax.Array) -> None: ...
+
+    def run_round(self, active: jax.Array, seeds: jax.Array,
+                  seed_valid: jax.Array
+                  ) -> tuple[jax.Array, jax.Array, SeedResult]: ...
+
+    @property
+    def bucket_sizes(self) -> jax.Array: ...
+
+
+class _EngineBase:
+    def __init__(self) -> None:
+        self._bsizes = None
+        self.k = None
+        self._cfg: Optional[ALIDConfig] = None
+        self._n = 0
+
+    def _setup_k(self, points: jax.Array, cfg: ALIDConfig) -> None:
+        self._cfg = cfg
+        self._n = points.shape[0]
+        self.k = (jnp.float32(cfg.k) if cfg.k is not None
+                  else estimate_k(points))
+
+    @property
+    def bucket_sizes(self) -> jax.Array:
+        assert self._bsizes is not None, "call build() first"
+        return self._bsizes
+
+    def _reduce(self, results: SeedResult, seed_valid: jax.Array):
+        claimed, best_row, _ = resolve_claims(
+            results.member_idx, results.member_mask, results.density,
+            seed_valid, n=self._n)
+        return claimed, best_row, results
+
+
+class ReplicatedEngine(_EngineBase):
+    """Full dataset + monolithic LSH tables in device memory (original path)."""
+
+    def __init__(self, spec: EngineSpec = EngineSpec()):
+        super().__init__()
+        self.spec = spec
+
+    def build(self, points, cfg, rng):
+        self._setup_k(points, cfg)
+        self._points = points
+        self._tables = build_lsh(points, cfg.lsh, rng)
+        self._bsizes = bucket_sizes(self._tables)
+
+    def run_round(self, active, seeds, seed_valid):
+        results = _map_round(self._points, active, self._tables, seeds,
+                             self.k, self._cfg)
+        return self._reduce(results, seed_valid)
+
+
+class ShardedEngine(_EngineBase):
+    """Out-of-core ShardedStore: CIVS streams one shard at a time, the live
+    working set is O(shard + cap), not O(n) (DESIGN.md §3)."""
+
+    def __init__(self, spec: EngineSpec):
+        super().__init__()
+        self.spec = spec
+
+    def build(self, points, cfg, rng):
+        self._setup_k(points, cfg)
+        self._store = build_store(points, cfg.lsh, rng,
+                                  n_shards=max(1, self.spec.n_shards))
+        self._bsizes = global_bucket_sizes(self._store)
+
+    def run_round(self, active, seeds, seed_valid):
+        results = _map_round(self._store, active, None, seeds, self.k,
+                             self._cfg)
+        return self._reduce(results, seed_valid)
+
+
+class MeshEngine(_EngineBase):
+    """PALID over a device mesh (paper Alg. 3): the map phase shards the
+    seed batch over the data axes; n_shards > 0 additionally places the
+    ShardedStore one HBM slice per device. Straggler story as in the paper:
+    seeds are over-decomposed and every instance runs the same masked
+    iteration count, so devices stay in lockstep; a lost device's seed range
+    is re-issued by the host driver on the next round (fit is restartable at
+    round granularity)."""
+
+    def __init__(self, spec: EngineSpec):
+        super().__init__()
+        self.spec = spec
+        self.ctx = spec.mesh_ctx
+
+    def build(self, points, cfg, rng):
+        self._setup_k(points, cfg)
+        if self.ctx is None:
+            mesh = jax.make_mesh((jax.device_count(),), ("data",))
+            self.ctx = MeshContext(mesh=mesh, data_axes=("data",),
+                                   model_axis="data")
+        n_data = self.ctx.n_data
+        assert cfg.seeds_per_round % n_data == 0, \
+            (cfg.seeds_per_round, n_data)
+        self._points = points
+        n_shards = self.spec.n_shards
+        if n_shards > 0:
+            assert n_shards % n_data == 0, (n_shards, n_data)
+            store = build_store(points, cfg.lsh, rng, n_shards=n_shards)
+            self._store = jax.device_put(store, jax.tree.map(
+                lambda s: NamedSharding(self.ctx.mesh, s), store_specs(store),
+                is_leaf=lambda s: isinstance(s, P)))
+            self._bsizes = global_bucket_sizes(self._store)
+            self._tables = None
+        else:
+            self._store = None
+            self._tables = build_lsh(points, cfg.lsh, rng)
+            self._bsizes = bucket_sizes(self._tables)
+
+    def run_round(self, active, seeds, seed_valid):
+        if self._store is not None:
+            # partition the seed batch over the data axes (the shard_map
+            # analogue for the GSPMD path): each device runs
+            # seeds_per_round/n_data instances against its store slice
+            with mesh_context(self.ctx):
+                seed_spec = logical_spec("seeds")
+            seeds = jax.device_put(
+                seeds, NamedSharding(self.ctx.mesh, seed_spec))
+            results = _map_round_mesh_sharded(self._store, active, seeds,
+                                              self.k, self._cfg)
+        else:
+            results = _map_round_mesh(self._points, active, self._tables,
+                                      seeds, self.k, self._cfg, self.ctx)
+        return self._reduce(results, seed_valid)
+
+
+_ENGINES = {
+    "replicated": ReplicatedEngine,
+    "sharded": ShardedEngine,
+    "mesh": MeshEngine,
+}
+
+
+def make_engine(spec: EngineSpec) -> Engine:
+    """Instantiate the engine an EngineSpec names (unbuilt)."""
+    try:
+        return _ENGINES[spec.engine](spec)
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {spec.engine!r}; expected one of "
+            f"{sorted(_ENGINES)}") from None
+
+
+# ------------------------------------------------------------- the driver --
+def fit(points: jax.Array, cfg: ALIDConfig = ALIDConfig(),
+        rng: Optional[jax.Array] = None) -> Clustering:
+    """Dominant-cluster detection: THE host peel-reduce loop (Sec. 4.4).
+
+    Rounds of batched seeds (sampled from large LSH buckets) run on the
+    engine `cfg.spec` selects; claims resolve through `resolve_claims`;
+    claimed points + seeds are peeled until no dominant-cluster candidate
+    remains (or, with cfg.exhaustive, no active point at all). All engines
+    consume rng identically, so on tie-free data the engine choice does not
+    change the clustering.
+
+    Returns a `Clustering` carrying per-cluster weighted supports, so the
+    result can `predict` new points and serialize without the dataset.
+    """
+    points = jnp.asarray(points, jnp.float32)
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    n = points.shape[0]
+    pts_np = np.asarray(points)
+
+    engine = make_engine(cfg.spec)
+    rng, kb = jax.random.split(rng)
+    engine.build(points, cfg, kb)
+
+    active = jnp.ones((n,), bool)
+    labels = np.full((n,), -1, np.int32)
+    densities: list[float] = []
+    sup_idx: list[np.ndarray] = []
+    sup_w: list[np.ndarray] = []
+    sup_v: list[np.ndarray] = []
+    next_label = 0
+    rounds = 0
+
+    for rounds in range(1, cfg.max_rounds + 1):
+        rng, kr = jax.random.split(rng)
+        seeds, seed_valid, any_eligible = _sample_seeds(
+            active, engine.bucket_sizes, kr, cfg)
+        if not bool(jnp.any(seed_valid)):
+            break
+        if not cfg.exhaustive and not bool(any_eligible):
+            break
+        claimed, best_row, results = engine.run_round(active, seeds,
+                                                      seed_valid)
+
+        claimed_np = np.asarray(claimed)
+        row_np = np.asarray(best_row)
+        dens_np = np.asarray(results.density)
+        member_np = np.asarray(results.member_idx)
+        weight_np = np.asarray(results.member_w)
+        # assign labels for winning rows that clear the density threshold
+        for row in np.unique(row_np[claimed_np]):
+            pts = np.where(claimed_np & (row_np == row))[0]
+            if pts.size == 0:
+                continue
+            if dens_np[row] >= cfg.density_min and pts.size > 1:
+                labels[pts] = next_label
+                densities.append(float(dens_np[row]))
+                midx, mw = member_np[row], weight_np[row]
+                valid = (midx >= 0) & (mw > 0)
+                w = np.where(valid, mw, 0.0).astype(np.float32)
+                w /= max(float(w.sum()), 1e-12)
+                sup_idx.append(np.where(valid, midx, -1).astype(np.int32))
+                sup_w.append(w)
+                sup_v.append(pts_np[np.clip(midx, 0, n - 1)]
+                             * valid[:, None])
+                next_label += 1
+        # peel everything claimed + the seeds themselves (guarantees progress)
+        seeds_np = np.asarray(seeds)[np.asarray(seed_valid)]
+        new_inactive = claimed_np.copy()
+        new_inactive[seeds_np] = True
+        active = active & jnp.asarray(~new_inactive)
+        if not bool(jnp.any(active)):
+            break
+
+    cap, d = cfg.cap, points.shape[1]
+    return Clustering(
+        labels=labels,
+        densities=np.asarray(densities, np.float32),
+        n_rounds=rounds,
+        k=float(engine.k),
+        support_idx=(np.stack(sup_idx) if sup_idx
+                     else np.zeros((0, cap), np.int32)),
+        support_w=(np.stack(sup_w) if sup_w
+                   else np.zeros((0, cap), np.float32)),
+        support_v=(np.stack(sup_v).astype(np.float32) if sup_v
+                   else np.zeros((0, cap, d), np.float32)),
+    )

@@ -1,158 +1,57 @@
 """PALID — parallel ALID (paper Sec. 4.6, Alg. 3), mapped from MapReduce onto
 a JAX device mesh.
 
+This module is now a thin deprecation shim: the mesh map phase lives in
+`repro.core.engine.MeshEngine` and the host peel-reduce loop is the single
+`engine.fit` driver, so the mesh path shares the exact segment-max claim
+reducer (`engine.resolve_claims`) with the serial and sharded engines — the
+old host-side stable-argsort reduce, which broke exact density ties
+differently, is gone. New code should call:
+
+    from repro.core.engine import fit
+    cfg = cfg._replace(spec=EngineSpec(engine="mesh", mesh_ctx=ctx,
+                                       n_shards=S))
+    fit(points, cfg, rng)
+
   paper                      | here
   ---------------------------+----------------------------------------------
-  mapper = one ALID per seed | shard_map over the data axes; each device runs
-                             | a vmapped batch of seeds in lockstep
+  mapper = one ALID per seed | MeshEngine: shard_map over the data axes; each
+                             | device runs a vmapped batch of seeds
   MongoDB server holding the | replicated: dataset + LSH tables in every
-  data + LSH tables          | device's HBM (SIFT-50M in bf16 ~ 12 GB — fits
-                             | v5e). n_shards > 0: the ShardedStore engine —
-                             | dataset + LSH partitioned over the mesh data
-                             | axes, CIVS streams one shard at a time (the
-                             | >HBM path, DESIGN.md §5)
-  reducer: point -> max-     | segment-max claim resolution, identical to the
-  density cluster            | serial driver (exact same results)
-
-Straggler mitigation: seeds are over-decomposed (seeds_per_round >> devices)
-and every ALID instance runs the same masked iteration count, so devices stay
-in lockstep; a lost device's seed range is re-issued by the host driver on
-the next round (deterministic reseeding — detect_clusters_parallel is
-restartable at round granularity).
+  data + LSH tables          | device's HBM. n_shards > 0: the ShardedStore
+                             | engine, one HBM slice per device (DESIGN.md §5)
+  reducer: point -> max-     | engine.resolve_claims — the one segment-max
+  density cluster            | reducer every engine shares
 """
 
 from __future__ import annotations
 
-import functools
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.experimental.shard_map import shard_map
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.core.alid import (ALIDConfig, Clustering, _sample_seeds,
-                             alid_from_seed)
-from repro.core.affinity import estimate_k
-from repro.core.store import build_store, global_bucket_sizes
-from repro.distributed.context import MeshContext, mesh_context
-from repro.distributed.shardings import logical_spec, store_specs
-from repro.lsh.pstable import bucket_sizes, build_lsh
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "ctx"))
-def _palid_map(points, active, tables, seeds, k, cfg: ALIDConfig,
-               ctx: MeshContext):
-    """The PALID map phase: seeds sharded over the data axes, dataset + LSH
-    tables replicated; every device runs its seed batch under vmap."""
-    data = ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
-
-    def shard_fn(pts, act, tab, seeds_local):
-        return jax.vmap(
-            lambda s: alid_from_seed(pts, act, tab, s, k, cfg))(seeds_local)
-
-    rep = lambda leaf: P(*([None] * leaf.ndim))
-    return shard_map(
-        shard_fn, mesh=ctx.mesh,
-        in_specs=(P(None, None), P(None),
-                  jax.tree.map(rep, tables), P(data)),
-        out_specs=P(data),
-        check_rep=False,
-    )(points, active, tables, seeds)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _palid_map_sharded(store, active, seeds, k, cfg: ALIDConfig):
-    """Map phase against the ShardedStore. No shard_map here: the store's
-    leading S axis is device-placed (store_specs) and GSPMD materializes one
-    shard slice per fori_loop step of the streaming CIVS — each device's HBM
-    holds its dataset slice plus a single in-flight shard, not a replica."""
-    return jax.vmap(
-        lambda s: alid_from_seed(store, active, None, s, k, cfg))(seeds)
+from repro.core.alid import ALIDConfig, Clustering, EngineSpec
+from repro.distributed.context import MeshContext
 
 
 def detect_clusters_parallel(points, cfg: ALIDConfig, rng, ctx: MeshContext,
                              k: float | None = None,
                              n_shards: int = 0) -> Clustering:
-    """PALID driver: identical semantics to core.alid.detect_clusters, with
-    the map phase sharded over the mesh. seeds_per_round must divide evenly
-    over the data axes.
+    """Deprecated: use `repro.core.engine.fit` with engine="mesh".
 
-    n_shards > 0 switches the map phase to the out-of-core ShardedStore
-    engine, with the store's per-shard leaves placed over the mesh data axes
-    (each device keeps 1/n_data of the dataset + LSH instead of a replica).
-    n_shards must then divide evenly over the data axes."""
-    points = jnp.asarray(points, jnp.float32)
-    n = points.shape[0]
-    n_data = ctx.n_data
-    assert cfg.seeds_per_round % n_data == 0, (cfg.seeds_per_round, n_data)
-    kv = jnp.float32(cfg.k if cfg.k is not None else (k or estimate_k(points)))
-    rng, kb = jax.random.split(rng)
-    store = None
-    if n_shards > 0:
-        assert n_shards % n_data == 0, (n_shards, n_data)
-        store = build_store(points, cfg.lsh, kb, n_shards=n_shards)
-        store = jax.device_put(store, jax.tree.map(
-            lambda s: NamedSharding(ctx.mesh, s), store_specs(store),
-            is_leaf=lambda s: isinstance(s, P)))
-        bsizes = global_bucket_sizes(store)
-        tables = None
-    else:
-        tables = build_lsh(points, cfg.lsh, kb)
-        bsizes = bucket_sizes(tables)
-
-    active = jnp.ones((n,), bool)
-    labels = np.full((n,), -1, np.int32)
-    densities: list[float] = []
-    next_label = 0
-    rounds = 0
-
-    for rounds in range(1, cfg.max_rounds + 1):
-        rng, kr = jax.random.split(rng)
-        seeds, seed_valid, any_eligible = _sample_seeds(active, bsizes, kr, cfg)
-        if not bool(jnp.any(seed_valid)):
-            break
-        if not cfg.exhaustive and not bool(any_eligible):
-            break
-        if store is not None:
-            # partition the seed batch over the data axes (the shard_map
-            # analogue for the GSPMD path): each device runs
-            # seeds_per_round/n_data instances against its store slice
-            with mesh_context(ctx):
-                seed_spec = logical_spec("seeds")
-            seeds_placed = jax.device_put(
-                seeds, NamedSharding(ctx.mesh, seed_spec))
-            results = _palid_map_sharded(store, active, seeds_placed, kv, cfg)
-        else:
-            results = _palid_map(points, active, tables, seeds, kv, cfg, ctx)
-
-        # ---- reduce phase (host): point -> max-density cluster ----
-        member = np.asarray(results.member_idx)
-        mmask = np.asarray(results.member_mask) & np.asarray(seed_valid)[:, None]
-        dens = np.asarray(results.density)
-        best_d = np.full((n,), -np.inf)
-        best_row = np.full((n,), -1, np.int64)
-        order = np.argsort(dens, kind="stable")          # ties -> larger row id
-        for row in order:
-            pts = member[row][mmask[row]]
-            pts = pts[pts >= 0]
-            upd = dens[row] >= best_d[pts]
-            best_d[pts[upd]] = dens[row]
-            best_row[pts[upd]] = row
-
-        claimed = best_row >= 0
-        for row in np.unique(best_row[claimed]):
-            pts = np.where(claimed & (best_row == row))[0]
-            if dens[row] >= cfg.density_min and pts.size > 1:
-                labels[pts] = next_label
-                densities.append(float(dens[row]))
-                next_label += 1
-        seeds_np = np.asarray(seeds)[np.asarray(seed_valid)]
-        new_inactive = claimed.copy()
-        new_inactive[seeds_np] = True
-        active = active & jnp.asarray(~new_inactive)
-        if not bool(jnp.any(active)):
-            break
-
-    return Clustering(labels=labels, densities=np.asarray(densities, np.float32),
-                      n_rounds=rounds, k=float(kv))
+    The `k=` parameter is redundant (shadowed by cfg.k) and deprecated; it
+    is still honored when cfg.k is None, with a DeprecationWarning.
+    """
+    warnings.warn(
+        "detect_clusters_parallel is deprecated; use repro.core.engine.fit "
+        "with ALIDConfig(spec=EngineSpec(engine='mesh', mesh_ctx=..., "
+        "n_shards=...))",
+        DeprecationWarning, stacklevel=2)
+    if k is not None:
+        warnings.warn(
+            "the k= parameter of detect_clusters_parallel is deprecated "
+            "(redundant with ALIDConfig.k); set cfg.k instead",
+            DeprecationWarning, stacklevel=2)
+        if cfg.k is None:
+            cfg = cfg._replace(k=float(k))
+    from repro.core.engine import fit
+    spec = EngineSpec(engine="mesh", n_shards=int(n_shards), mesh_ctx=ctx)
+    return fit(points, cfg._replace(spec=spec), rng)

@@ -1,5 +1,7 @@
 """PALID launcher — the paper's headline workload (Sec. 5.3): dominant-cluster
 detection over SIFT-like descriptor collections, parallelized over a mesh.
+Drives the unified engine facade (`repro.core.engine.fit`); --devices and
+--shards select the EngineSpec.
 
   # 8 virtual devices (the Spark-executor analogue of Table 2):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
@@ -17,13 +19,23 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
-from repro.core.alid import ALIDConfig, detect_clusters
-from repro.core.palid import detect_clusters_parallel
+from repro.core.alid import ALIDConfig, EngineSpec
+from repro.core.engine import fit
 from repro.data import auto_lsh_params, make_blobs_with_noise
 from repro.distributed.context import MeshContext
 from repro.utils import avg_f1_score
+
+
+def engine_spec(devices: int, shards: int) -> EngineSpec:
+    """Map the legacy --devices/--shards CLI onto an EngineSpec."""
+    if devices > 1:
+        mesh = jax.make_mesh((devices,), ("data",))
+        ctx = MeshContext(mesh=mesh, data_axes=("data",), model_axis="data")
+        return EngineSpec(engine="mesh", n_shards=shards, mesh_ctx=ctx)
+    if shards > 0:
+        return EngineSpec(engine="sharded", n_shards=shards)
+    return EngineSpec(engine="replicated")
 
 
 def main():
@@ -32,7 +44,7 @@ def main():
     ap.add_argument("--d", type=int, default=32)
     ap.add_argument("--clusters", type=int, default=20)
     ap.add_argument("--devices", type=int, default=0,  # 0 = serial ALID
-                    help="data-axis size for PALID (0 = serial)")
+                    help="data-axis size for the mesh engine (0 = serial)")
     ap.add_argument("--shards", type=int, default=0,
                     help="ShardedStore shard count for out-of-core CIVS "
                          "(0 = replicated dataset + LSH; must divide evenly "
@@ -48,22 +60,17 @@ def main():
     lshp = auto_lsh_params(spec.points)
     cfg = ALIDConfig(a_cap=max(64, cluster_size + 32), delta=128, lsh=lshp,
                      seeds_per_round=args.seeds_per_round,
-                     max_rounds=args.rounds)
+                     max_rounds=args.rounds,
+                     spec=engine_spec(args.devices, args.shards))
     t0 = time.time()
-    if args.devices > 1:
-        mesh = jax.make_mesh((args.devices,), ("data",))
-        ctx = MeshContext(mesh=mesh, data_axes=("data",), model_axis="data")
-        res = detect_clusters_parallel(spec.points, cfg, jax.random.PRNGKey(0),
-                                       ctx, n_shards=args.shards)
-    else:
-        res = detect_clusters(spec.points, cfg, jax.random.PRNGKey(0),
-                              n_shards=args.shards)
+    res = fit(spec.points, cfg, jax.random.PRNGKey(0))
     dt = time.time() - t0
     f = avg_f1_score(spec.labels, res.labels)
     n_members = int((res.labels >= 0).sum())
-    print(f"[palid] n={args.n} devices={max(args.devices,1)} "
-          f"shards={args.shards} time={dt:.2f}s "
-          f"clusters={len(res.densities)} members={n_members} AVG-F={f:.3f}")
+    print(f"[palid] n={args.n} engine={cfg.spec.engine} "
+          f"devices={max(args.devices, 1)} shards={args.shards} "
+          f"time={dt:.2f}s clusters={res.n_clusters} "
+          f"members={n_members} AVG-F={f:.3f}")
 
 
 if __name__ == "__main__":

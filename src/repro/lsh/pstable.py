@@ -139,6 +139,66 @@ def hash_queries(q: jax.Array, proj: jax.Array, bias: jax.Array,
     return keys, salts
 
 
+def shard_bucket_windows(sorted_keys: jax.Array, keys: jax.Array,
+                         salts: jax.Array, probe: int):
+    """Global probe budget: split one `probe`-wide window across shards.
+
+    sorted_keys: (S, L, cap) per-shard tables; keys/salts: (L, Q) pre-hashed
+    queries. For every (table, query) the GLOBAL bucket is the concatenation
+    of the per-shard buckets (shards partition the dataset and share hash
+    functions), so a single contiguous window of `probe` slots — placed at
+    the same salted offset formula `_query_one_table` uses — is carved out of
+    that concatenation and intersected with each shard's span. The union over
+    shards then retrieves exactly `min(global bucket size, probe)` members,
+    matching the replicated engine's sample SIZE even when one oversized
+    bucket spans many shards (per-shard windows would return up to S*probe).
+
+    Returns (starts, lo, hi), each (S, L, Q) int32: `starts` is the bucket
+    head inside the shard's sorted order; the shard retrieves local bucket
+    positions [lo, hi).
+    """
+    def per_shard(sk):                                    # sk: (L, cap)
+        s = jax.vmap(lambda a, k: jnp.searchsorted(a, k, side="left"))(sk, keys)
+        e = jax.vmap(lambda a, k: jnp.searchsorted(a, k, side="right"))(sk, keys)
+        return s, e
+
+    starts, ends = jax.vmap(per_shard)(sorted_keys)       # (S, L, Q)
+    sizes = ends - starts
+    total = jnp.sum(sizes, axis=0)                        # (L, Q)
+    prefix = jnp.cumsum(sizes, axis=0) - sizes            # members in shards < s
+    span = jnp.maximum(total - probe, 0)
+    offset = (salts % (span.astype(jnp.uint32) + 1)).astype(sizes.dtype)
+    lo = jnp.clip(offset[None] - prefix, 0, sizes)
+    hi = jnp.clip(offset[None] + probe - prefix, 0, sizes)
+    return starts, lo, hi
+
+
+def _window_one_table(sorted_keys: jax.Array, perm: jax.Array, key: jax.Array,
+                      start: jax.Array, lo: jax.Array, hi: jax.Array,
+                      probe: int) -> jax.Array:
+    """Gather local bucket positions [lo, hi) (a pre-allocated sub-window of
+    the global probe budget) from one shard's table; -1 on unused slots."""
+    offs = jnp.arange(probe)
+    pos = jnp.minimum(start + lo + offs, sorted_keys.shape[0] - 1)
+    hit = (lo + offs < hi) & (sorted_keys[pos] == key)
+    return jnp.where(hit, perm[pos], -1)
+
+
+def probe_tables_window(sorted_keys: jax.Array, perm: jax.Array,
+                        keys: jax.Array, starts: jax.Array, lo: jax.Array,
+                        hi: jax.Array, probe: int) -> jax.Array:
+    """Probe one shard's tables with explicit per-(table, query) windows from
+    `shard_bucket_windows`. sorted_keys/perm: (L, cap); keys/starts/lo/hi:
+    (L, Q) -> (Q, L*probe) local-slot indices, -1 = miss."""
+    def per_table(sk, pm, kq, st, l, h):
+        return jax.vmap(
+            lambda k1, s1, l1, h1: _window_one_table(sk, pm, k1, s1, l1, h1,
+                                                     probe))(kq, st, l, h)
+
+    cands = jax.vmap(per_table)(sorted_keys, perm, keys, starts, lo, hi)
+    return jnp.transpose(cands, (1, 0, 2)).reshape(keys.shape[1], -1)
+
+
 def probe_tables(sorted_keys: jax.Array, perm: jax.Array, keys: jax.Array,
                  salts: jax.Array, probe: int) -> jax.Array:
     """Probe pre-hashed queries against one set of tables.

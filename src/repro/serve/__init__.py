@@ -1,1 +1,2 @@
 from repro.serve.engine import ServeConfig, generate, BatchServer  # noqa: F401
+from repro.serve.cluster_service import ClusterService  # noqa: F401

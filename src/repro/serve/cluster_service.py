@@ -1,0 +1,78 @@
+"""Batched clustering query service: fixed-slot submit/serve assignment of
+new points to detected dominant clusters.
+
+The LM stack serves traffic through `serve.engine.BatchServer` (queue ->
+fixed batch slots -> one batched jitted call); this module gives clustering
+the same path. A `ClusterService` wraps a fitted `Clustering` result and
+answers "which dominant cluster does this point belong to?" via
+`Clustering.predict` — weighted affinity against the stored cluster supports
+(the CIVS affinity kernel), O(C * cap) per query independent of the original
+dataset size, which is exactly what ALID's localized design (paper Sec. 4)
+buys at serving time.
+
+Usage:
+    clustering = engine.fit(points, cfg, rng)
+    svc = ClusterService(clustering, batch_slots=8)
+    rid = svc.submit(query_vec)
+    labels = svc.serve()          # {rid: cluster id, -1 = no cluster}
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.alid import Clustering, assign_labels
+
+
+class ClusterService:
+    """Fixed-slot batched assignment server over a fitted Clustering.
+
+    Requests queue up; each serve() call packs up to `batch_slots` queries
+    into one fixed-shape batch (zero-padded rows, so the jitted score kernel
+    compiles once per (batch_slots, d)) and runs one batched assignment.
+    The support tensor is converted to device arrays once at construction,
+    not re-uploaded per batch.
+    """
+
+    def __init__(self, clustering: Clustering, batch_slots: int = 8,
+                 threshold: float = 0.5):
+        assert clustering.support_v is not None, (
+            "ClusterService needs a Clustering with stored supports "
+            "(produced by repro.core.engine.fit)")
+        self.clustering = clustering
+        self.batch_slots = batch_slots
+        self.threshold = threshold
+        self.d = int(clustering.support_v.shape[2])
+        self._sup_v = jnp.asarray(clustering.support_v)
+        self._sup_w = jnp.asarray(clustering.support_w)
+        self.queue: list[tuple[int, np.ndarray]] = []
+        self._next_id = 0
+
+    def submit(self, query: np.ndarray) -> int:
+        q = np.asarray(query, np.float32)
+        if q.shape != (self.d,):
+            raise ValueError(
+                f"one {self.d}-d point per request, got shape {q.shape}")
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, q))
+        return rid
+
+    def serve(self) -> dict[int, int]:
+        results: dict[int, int] = {}
+        while self.queue:
+            batch = self.queue[:self.batch_slots]
+            self.queue = self.queue[self.batch_slots:]
+            q = np.zeros((self.batch_slots, self.d), np.float32)
+            for i, (_, v) in enumerate(batch):
+                q[i] = v
+            if self.clustering.n_clusters == 0:
+                labels = np.full((self.batch_slots,), -1, np.int32)
+            else:
+                labels = assign_labels(jnp.asarray(q), self._sup_v,
+                                       self._sup_w, self.clustering.densities,
+                                       self.clustering.k, self.threshold)
+            for i, (rid, _) in enumerate(batch):
+                results[rid] = int(labels[i])
+        return results

@@ -1,0 +1,71 @@
+"""ClusterService: held-out queries assigned through the submit/serve path
+(the clustering analogue of serve.engine.BatchServer)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.alid import ALIDConfig
+from repro.core.engine import fit
+from repro.data import auto_lsh_params, make_blobs_with_noise
+from repro.serve.cluster_service import ClusterService
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    spec = make_blobs_with_noise(n_clusters=3, cluster_size=30, n_noise=60,
+                                 d=8, seed=11, overlap_pairs=0)
+    cfg = ALIDConfig(a_cap=48, delta=48,
+                     lsh=auto_lsh_params(spec.points, probe=128),
+                     seeds_per_round=16, max_rounds=16)
+    res = fit(spec.points, cfg, jax.random.PRNGKey(0))
+    assert res.n_clusters > 0
+    return spec, res
+
+
+def test_submit_serve_batch(fitted):
+    """A mixed batch of held-out queries — cluster members and far noise —
+    goes through submit/serve and comes back with per-request labels."""
+    spec, res = fitted
+    svc = ClusterService(res, batch_slots=4)
+
+    expected = {}
+    for c in range(res.n_clusters):
+        member = spec.points[res.labels == c][0]
+        expected[svc.submit(member)] = c
+    for q in spec.points[:5] + 200.0:                  # far away -> no cluster
+        expected[svc.submit(q)] = -1
+
+    out = svc.serve()
+    assert out == expected
+    assert svc.queue == []                             # drained
+
+
+def test_serve_packs_fixed_slots(fitted):
+    """More requests than batch_slots: serve() drains the queue in fixed-size
+    batches and every request id gets an answer exactly once."""
+    spec, res = fitted
+    svc = ClusterService(res, batch_slots=3)
+    members = spec.points[res.labels == 0][:7]
+    rids = [svc.submit(q) for q in members]
+    out = svc.serve()
+    assert sorted(out) == sorted(rids)
+    assert all(out[r] == 0 for r in rids)
+
+
+def test_submit_rejects_wrong_dimension(fitted):
+    """Dimension mismatches fail at submit time, not mid-serve (a bad
+    request must not sink an already-packed batch)."""
+    _, res = fitted
+    svc = ClusterService(res, batch_slots=4)
+    with pytest.raises(ValueError, match="point per request"):
+        svc.submit(np.zeros(svc.d + 1, np.float32))
+    assert svc.queue == []
+
+
+def test_service_requires_supports():
+    from repro.core.alid import Clustering
+    bare = Clustering(labels=np.zeros(2, np.int32),
+                      densities=np.zeros(0, np.float32), n_rounds=0, k=1.0)
+    with pytest.raises(AssertionError, match="stored supports"):
+        ClusterService(bare)

@@ -146,6 +146,55 @@ def test_serial_parallel_sharded_label_parity(blobs, lshp):
                                rtol=1e-6)
 
 
+def test_global_probe_budget_on_oversized_bucket():
+    """Satellite acceptance (ROADMAP item): one `probe`-wide budget is split
+    across shards, so a bucket LARGER than probe that spans several shards
+    yields the replicated engine's sample size — min(bucket, probe) — not
+    min(bucket_s, probe) per shard (up to S*probe before this change)."""
+    from repro.core.roi import ROI
+    from repro.lsh.pstable import LSHParams
+
+    rng = np.random.default_rng(0)
+    # one tight cluster of 100 (a single giant LSH bucket) + 40 spread noise
+    cluster = rng.normal(0, 0.05, size=(100, 8)).astype(np.float32)
+    noise = rng.uniform(-30, 30, size=(40, 8)).astype(np.float32)
+    perm = rng.permutation(140)
+    pts_np = np.concatenate([cluster, noise])[perm]
+    pts = jnp.asarray(pts_np)
+
+    # L=1 so per-table windows are directly comparable across engines
+    lshp = LSHParams(n_tables=1, n_projections=4, seg_len=4.0, probe=8)
+    key = jax.random.PRNGKey(42)
+    tables = build_lsh(pts, lshp, key)
+    assert int(np.asarray(bucket_sizes(tables)).max()) >= 100  # oversized
+    # 4 shards of cap 35: the spatially-contiguous cluster spans >= 3 shards
+    store4 = build_store(pts, lshp, key, n_shards=4)
+
+    k = estimate_k(pts)
+    cfg = ALIDConfig(a_cap=16, delta=64, lsh=lshp)
+    seed = int(np.where(perm == 0)[0][0])              # a cluster member
+    state = init_state(pts, jnp.int32(seed), cfg.cap)
+    # ROI ball covering the whole cluster, so nothing retrieved is filtered
+    roi = ROI(center=jnp.mean(jnp.asarray(cluster), 0),
+              radius=jnp.float32(5.0), r_in=jnp.float32(0.0),
+              r_out=jnp.float32(10.0), pi=jnp.float32(0.0))
+    active = jnp.ones(pts.shape[0], bool)
+    mono = civs_update(state, roi, pts, active, tables, lshp, k,
+                       a_cap=cfg.a_cap, delta=cfg.delta)
+    shrd = civs_update(state, roi, store4, active, None, lshp, k,
+                       a_cap=cfg.a_cap, delta=cfg.delta)
+    n_mono, n_shrd = int(mono.n_candidates), int(shrd.n_candidates)
+    # the budget holds: never more than `probe` from the one bucket (the old
+    # shard-granular windows would retrieve ~S*probe here)
+    assert n_shrd <= lshp.probe
+    assert n_mono <= lshp.probe
+    # and the sample size matches the replicated engine (±1: the engines
+    # sample the bucket in different canonical orders, so the query point
+    # itself — excluded as a support member — may fall in only one window)
+    assert abs(n_shrd - n_mono) <= 1
+    assert n_shrd >= lshp.probe - 1                    # budget fully used
+
+
 def test_sharded_quality_with_default_probe(blobs):
     """With the default (truncating) probe the engines may retrieve different
     candidates, but the sharded engine must still cluster well."""
