@@ -1,0 +1,148 @@
+"""Peak device-memory footprint: replicated vs sharded vs streamed.
+
+The whole point of the DataSource + StreamedEngine redesign is the memory
+model (DESIGN.md §3.3): the replicated engine keeps the O(n·d) dataset plus
+the O(L·n) LSH tables device-resident, the sharded engine keeps them
+resident but touches one shard at a time, and the streamed engine keeps
+NOTHING resident beyond two in-flight shard bundles and the per-seed state —
+peak device bytes O(shard + cap).
+
+Measured directly: a sampler thread polls `jax.live_arrays()` while
+`engine.fit` runs and records the maximum total live device bytes. The
+streamed engine reads the dataset from an on-disk memmap, so neither host
+nor device ever holds the full payload. Results print as csv lines and land
+in BENCH_mem_footprint.json, including the acceptance inequality
+
+    streamed_peak - common_overhead  <  2·shard_bytes + cap_terms
+
+(common_overhead = the O(n) int32/bool metadata every engine carries:
+bucket sizes + active mask; cap_terms = the seeds_per_round·cap·d working
+state of one round batch, with a small constant for the carry/psi buffers).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.core.alid import ALIDConfig, EngineSpec
+from repro.core.engine import fit
+from repro.core.source import MemmapSource
+from repro.data import auto_lsh_params, make_blobs_with_noise
+
+
+def _live_bytes() -> int:
+    total = 0
+    for a in jax.live_arrays():
+        try:
+            if not a.is_deleted():
+                total += a.nbytes
+        except Exception:
+            pass
+    return total
+
+
+class PeakSampler:
+    """Poll jax.live_arrays() in a daemon thread; record the max."""
+
+    def __init__(self, interval: float = 0.002):
+        self.interval = interval
+        self.peak = 0
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        while not self._stop.is_set():
+            self.peak = max(self.peak, _live_bytes())
+            time.sleep(self.interval)
+
+    def __enter__(self):
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc):
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+        self.peak = max(self.peak, _live_bytes())
+        return False
+
+
+def measure(data, cfg: ALIDConfig):
+    jax.clear_caches()
+    base = _live_bytes()
+    with PeakSampler() as sampler:
+        res = fit(data, cfg, jax.random.PRNGKey(0))
+    return res, base, sampler.peak
+
+
+def main(quick: bool = True):
+    # the memory story is asymptotic in n: the replicated store grows
+    # O(n·d + L·n) while the streamed peak stays at O(shard + cap) — the
+    # dataset must be big enough that O(n·d) dominates the working state
+    n_clusters, cluster_size, n_noise, d = \
+        (8, 60, 15520, 32) if quick else (16, 120, 62080, 32)
+    spec = make_blobs_with_noise(n_clusters=n_clusters,
+                                 cluster_size=cluster_size,
+                                 n_noise=n_noise, d=d, seed=1)
+    n = spec.points.shape[0]
+    n_shards = 8
+    lshp = auto_lsh_params(spec.points)
+    cfg = ALIDConfig(a_cap=max(64, cluster_size + 24), delta=96, lsh=lshp,
+                     seeds_per_round=8, max_rounds=16)
+    cap_s = -(-n // n_shards)
+    # one device-resident shard bundle: points f32 + L·(keys u32, perm i32)
+    # + global map i32
+    shard_bytes = cap_s * d * 4 + lshp.n_tables * cap_s * 8 + cap_s * 4
+    # per-round working state: seeds_per_round ALID instances of (cap, d)
+    # LID/support/candidate buffers; the host loop keeps ~10 such tensors
+    # live at once (previous + rebuilt LID state, support, psi, carry rows,
+    # probe windows, and the round's SeedResult)
+    cap_terms = cfg.seeds_per_round * cfg.cap * d * 4 * 10
+    # O(n) metadata every engine keeps live: bucket sizes + active mask
+    common = n * 4 + n * 1
+
+    out = {"n": n, "d": d, "n_shards": n_shards, "shard_bytes": shard_bytes,
+           "cap_terms": cap_terms, "common_overhead": common, "engines": {}}
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "points.npy")
+        np.save(path, spec.points)
+        runs = [
+            ("replicated", spec.points, EngineSpec(engine="replicated")),
+            ("sharded", spec.points,
+             EngineSpec(engine="sharded", n_shards=n_shards)),
+            ("streamed", MemmapSource(path),
+             EngineSpec(engine="streamed", n_shards=n_shards)),
+        ]
+        for name, data, espec in runs:
+            res, base, peak = measure(data, cfg._replace(spec=espec))
+            out["engines"][name] = {"peak_bytes": int(peak),
+                                    "baseline_bytes": int(base),
+                                    "n_clusters": res.n_clusters}
+            csv_line(f"mem/{name}", float(peak),
+                     f"peak_bytes={peak};clusters={res.n_clusters}")
+
+    streamed_peak = out["engines"]["streamed"]["peak_bytes"]
+    replicated_peak = out["engines"]["replicated"]["peak_bytes"]
+    bound = 2 * shard_bytes + cap_terms + common
+    out["streamed_bound_bytes"] = int(bound)
+    out["streamed_within_bound"] = bool(streamed_peak <= bound)
+    out["streamed_vs_replicated"] = (float(streamed_peak / replicated_peak)
+                                     if replicated_peak else None)
+    csv_line("mem/streamed_bound", float(bound),
+             f"within={out['streamed_within_bound']};"
+             f"vs_replicated={out['streamed_vs_replicated']:.3f}")
+    with open("BENCH_mem_footprint.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    main(quick=True)

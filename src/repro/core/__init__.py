@@ -1,7 +1,11 @@
 # The paper's primary contribution — the ALID dominant-cluster system.
-# Public facade: one config (ALIDConfig + EngineSpec), one driver (fit),
-# one result object (Clustering, with predict() and npz serialization).
+# Public facade: one config (ALIDConfig + EngineSpec), one ingestion
+# protocol (DataSource and friends), one driver (fit), one result object
+# (Clustering, with predict() and npz serialization).
 from repro.core.alid import ALIDConfig, Clustering, EngineSpec  # noqa: F401
 from repro.core.engine import (Engine, MeshEngine, ReplicatedEngine,  # noqa: F401
-                               ShardedEngine, fit, make_engine,
-                               resolve_claims)
+                               ShardedEngine, StreamedEngine, fit,
+                               make_engine, resolve_claims)
+from repro.core.source import (ChunkedSource, DataSource,  # noqa: F401
+                               InMemorySource, MemmapSource, as_source,
+                               make_source)

@@ -14,6 +14,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def pairwise_distance(q: jax.Array, c: jax.Array, p: float = 2.0) -> jax.Array:
@@ -72,9 +73,22 @@ def estimate_k(v: jax.Array, sample: int = 512, target: float = 0.95,
     median-based k gives every noise pair affinity ~0.8 and the whole noise
     cloud becomes one spurious "dominant cluster". The 10th percentile tracks
     the dense (cluster) scale; noise then decays to ~0 affinity.
+
+    The subsample is STRIDED (row i·n/m with fractional striding, so the
+    picks span [0, n) for every n — an integer stride n//m truncates to 1
+    for sample <= n < 2·sample and degenerates back to the prefix), not a
+    prefix: point order is often spatially meaningful (generated
+    cluster-by-cluster, or sorted by LSH projection in the ShardedStore), so
+    a prefix is one spatially-coherent corner whose NN distances skew the
+    percentile. The indices mirror `source.strided_sample_indices`, which is
+    how chunked / out-of-core engines draw the SAME rows without
+    materializing v.
     """
-    m = min(sample, v.shape[0])
-    s = v[:m]
+    n = v.shape[0]
+    m = min(sample, n)
+    # indices are static (shape-derived) — build them host-side in int64 so
+    # i*n cannot overflow int32 for multi-million-row datasets
+    s = v[(np.arange(m, dtype=np.int64) * n) // m]
     d = pairwise_distance(s, s, 2.0)
     d = d + jnp.where(jnp.eye(m, dtype=bool), jnp.inf, 0.0)
     nn = jnp.min(d, axis=1)

@@ -43,14 +43,24 @@ class EngineSpec(NamedTuple):
               "sharded"    — out-of-core ShardedStore, CIVS streams shards;
               "mesh"       — PALID map phase sharded over a device mesh
                              (replicated store, or ShardedStore when
-                             n_shards > 0: one HBM slice per device).
-    n_shards: ShardedStore shard count (0 = replicated store).
+                             n_shards > 0: one HBM slice per device);
+              "streamed"   — host-resident StreamedStore fed by a
+                             DataSource; the CIVS shard loop runs on HOST,
+                             device_put-ing one routed shard at a time into
+                             a double-buffered slot, so peak device memory
+                             is O(shard + cap) for datasets beyond device
+                             (or even host-aggregate) HBM (DESIGN.md §3.3).
+    n_shards: ShardedStore/StreamedStore shard count (0 = replicated store;
+              streamed defaults to 8).
     mesh_ctx: MeshContext for engine="mesh" (None -> a default 1-axis "data"
               mesh over all visible devices).
+    chunk_size: host chunk length for source-chunked builds (streamed store
+              construction, chunked k estimation); 0 = default (32768 rows).
     """
     engine: str = "replicated"
     n_shards: int = 0
     mesh_ctx: Optional[MeshContext] = None
+    chunk_size: int = 0
 
 
 class ALIDConfig(NamedTuple):
@@ -111,6 +121,27 @@ def assign_labels(q, sup_v, sup_w, densities: np.ndarray, k,
     return np.where(ok, best, -1).astype(np.int32)
 
 
+def assign_labels_source(source, sup_v, sup_w, densities, k,
+                         threshold: float, batch_size: int = 0) -> np.ndarray:
+    """Streamed bulk assignment: label every row of a DataSource against the
+    stored supports in fixed-shape batches. The tail batch is zero-padded so
+    the jitted score kernel sees ONE (bs, d) shape and compiles exactly once;
+    peak memory is O(batch · C · cap), never O(n). Shared by
+    `Clustering.predict` (source/batched path) and
+    `serve.ClusterService.assign_source` (which passes pre-uploaded device
+    support tensors), so the pad/assign/slice logic exists once."""
+    from repro.core.source import iter_source_chunks
+    bs = int(batch_size) or 4096
+    out = np.empty((source.n,), np.int32)
+    for start, block in iter_source_chunks(source, bs):
+        m = block.shape[0]
+        q = block if m == bs else np.concatenate(
+            [block, np.zeros((bs - m, source.dim), np.float32)], axis=0)
+        out[start:start + m] = assign_labels(q, sup_v, sup_w, densities, k,
+                                             threshold)[:m]
+    return out
+
+
 class Clustering(NamedTuple):
     """First-class clustering result: labels + per-cluster weighted supports.
 
@@ -131,7 +162,8 @@ class Clustering(NamedTuple):
     def n_clusters(self) -> int:
         return int(len(self.densities))
 
-    def predict(self, queries, threshold: float = 0.5) -> np.ndarray:
+    def predict(self, queries, threshold: float = 0.5,
+                batch_size: int = 0) -> np.ndarray:
         """Assign queries to detected dominant clusters; -1 = none.
 
         A query joins the cluster of maximal weighted support affinity
@@ -140,12 +172,27 @@ class Clustering(NamedTuple):
         n). For a true member this score is ~pi(x) (the KKT payoff), so the
         acceptance bar is `threshold * densities[c]`; far-away noise decays
         to ~0 and stays unassigned.
+
+        `queries` may be an (m, d) array OR a `repro.core.source.DataSource`
+        (e.g. a MemmapSource over a 10M-point npy). Labeling streams through
+        fixed-size batches (`batch_size` rows; 0 = single-shot for arrays,
+        4096 for sources), so the score tensor stays O(batch · C · cap) and
+        a memmapped query set never materializes in host or device memory.
         """
-        q = np.atleast_2d(np.asarray(queries, np.float32))
+        from repro.core.source import InMemorySource, is_data_source
+        if not is_data_source(queries):
+            q = np.atleast_2d(np.asarray(queries, np.float32))
+            if self.support_v is None or self.n_clusters == 0:
+                return np.full((q.shape[0],), -1, np.int32)
+            if not batch_size or batch_size >= q.shape[0]:
+                return assign_labels(q, self.support_v, self.support_w,
+                                     self.densities, self.k, threshold)
+            queries = InMemorySource(q)
         if self.support_v is None or self.n_clusters == 0:
-            return np.full((q.shape[0],), -1, np.int32)
-        return assign_labels(q, self.support_v, self.support_w,
-                             self.densities, self.k, threshold)
+            return np.full((queries.n,), -1, np.int32)
+        return assign_labels_source(queries, self.support_v, self.support_w,
+                                    self.densities, self.k, threshold,
+                                    batch_size)
 
     def to_dict(self) -> dict:
         """NumPy-safe dict (no jax arrays; None supports dropped)."""

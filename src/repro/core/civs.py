@@ -20,7 +20,11 @@ Two retrieval engines sit behind the one `civs_update` signature:
     (`tables=None`): a fori_loop walks the shards whose bounding ball can
     intersect the ROI ball, probes the shard-local tables, and folds each
     chunk into a running top-delta candidate buffer (`jax.lax.top_k` over
-    [buffer ++ chunk]). Because shards partition the dataset and share the
+    [buffer ++ chunk]). The per-chunk math is the module-level
+    `retrieve_chunk` with an explicit carry (`init_retrieval_carry` /
+    `finalize_retrieval`), which the host-streamed engine
+    (`engine.StreamedEngine`) drives directly — one device_put shard at a
+    time — outside any jit loop. Because shards partition the dataset and share the
     LSH projections, the union over shards of the chunked retrieval equals
     the monolithic retrieval exactly when probe covers the buckets (tested
     in tests/test_sharded.py), and a GLOBAL probe budget
@@ -62,7 +66,7 @@ def _roi_distance(vc: jax.Array, center: jax.Array, p: float) -> jax.Array:
     return jnp.power(jnp.sum(jnp.abs(vc - center[None, :]) ** p, -1), 1.0 / p)
 
 
-def _compact_support(state: LIDState, a_cap: int, support_eps: float):
+def compact_support(state: LIDState, a_cap: int, support_eps: float):
     """Step 1: compact the support into the first a_cap slots (weight desc)."""
     w = jnp.where(state.beta_mask, state.x, 0.0)
     is_sup = w > support_eps
@@ -80,9 +84,9 @@ def _compact_support(state: LIDState, a_cap: int, support_eps: float):
     return sup_idx, sup_v, sup_x, sup_slot_mask, overflow
 
 
-def _rebuild(state: LIDState, sup_idx, sup_v, sup_x, sup_slot_mask,
-             psi_idx, psi_valid, psi_v, k, a_cap: int, tol: float, p: float,
-             n_candidates, overflow) -> CIVSResult:
+def rebuild_support(state: LIDState, sup_idx, sup_v, sup_x, sup_slot_mask,
+                    psi_idx, psi_valid, psi_v, k, a_cap: int, tol: float,
+                    p: float, n_candidates, overflow) -> CIVSResult:
     """Step 5: beta' = alpha ∪ psi with exact Ax refresh (Eq. 17)."""
     delta = psi_idx.shape[0]
     beta_idx = jnp.concatenate([sup_idx, psi_idx]).astype(jnp.int32)
@@ -144,6 +148,85 @@ def _retrieve_replicated(roi: ROI, points, active, tables, lsh_params,
     return psi_idx, psi_valid, psi_v, n_candidates
 
 
+# --------------------------------------------------- the shared chunk step --
+def init_retrieval_carry(delta: int, d: int, dtype=jnp.float32):
+    """Empty running top-delta candidate state: (best_neg, best_idx, best_v,
+    n_candidates). Fold shards in with `retrieve_chunk`; read the result off
+    with `finalize_retrieval`."""
+    return (jnp.full((delta,), -jnp.inf, jnp.float32),
+            jnp.full((delta,), -1, jnp.int32),
+            jnp.zeros((delta, d), dtype),
+            jnp.int32(0))
+
+
+def retrieve_chunk(carry, pts_s, sk, pm, gmap, keys, starts, lo, hi,
+                   roi_center, roi_radius, active, sup_idx, sup_slot_mask,
+                   probe: int, p: float):
+    """CIVS steps 2-4 for ONE shard/chunk, folded into the running top-delta
+    carry — THE chunk step, shared verbatim by the in-jit sharded engine
+    (`_retrieve_sharded`'s fori_loop slices the store and calls this) and the
+    host-streamed engine (which `device_put`s one shard at a time and calls
+    it through a jitted vmapped wrapper). One implementation means the
+    streamed engine is exact by construction, not by reimplementation.
+
+    pts_s (cap_s, d) / sk, pm (L, cap_s) / gmap (cap_s,): one shard's points,
+    sorted-key tables, and slot->global map. keys/starts/lo/hi (L, a_cap):
+    pre-hashed support queries + this shard's slice of the global probe
+    windows (`shard_bucket_windows`). Carry as in `init_retrieval_carry`.
+    """
+    best_neg, best_idx, best_v, n_cand = carry
+    n = active.shape[0]
+    shard_cap = pts_s.shape[0]
+    delta = best_neg.shape[0]
+
+    local = probe_tables_window(sk, pm, keys, starts, lo, hi, probe)
+    local = jnp.where(sup_slot_mask[:, None], local, -1)
+    flat = local.reshape(-1)                              # (a_cap * L * probe,)
+    safe_slot = jnp.clip(flat, 0, shard_cap - 1)
+    gidx = jnp.where(flat >= 0, gmap[safe_slot], -1)
+    vc = pts_s[safe_slot]
+    dist = _roi_distance(vc, roi_center, p)
+
+    safe_g = jnp.clip(gidx, 0, n - 1)
+    valid = (gidx >= 0) & active[safe_g]
+    member = jnp.any((safe_g[:, None] == sup_idx[None, :])
+                     & sup_slot_mask[None, :], axis=1)
+    valid &= ~member
+    valid &= dist <= roi_radius
+
+    # within-chunk dedup (a point can surface from several tables); the
+    # sort also fixes a deterministic order for exact-tie distances
+    sentinel = jnp.int32(n)
+    dkeys = jnp.where(valid, safe_g, sentinel)
+    order = jnp.argsort(dkeys)
+    sg = dkeys[order]
+    sd = dist[order]
+    sv = vc[order]
+    uniq = jnp.concatenate([jnp.array([True]), sg[1:] != sg[:-1]])
+    cvalid = uniq & (sg < sentinel)
+    n_cand = n_cand + jnp.sum(cvalid)
+
+    neg = jnp.where(cvalid, -sd, -jnp.inf)
+    cand_idx = jnp.where(cvalid, sg, -1).astype(jnp.int32)
+    # streaming top-delta merge: buffer ++ chunk -> top_k. Candidate
+    # ROWS ride along in the carry so psi needs no end-of-loop gather
+    # over the (device-sharded) store — the rows are already local here.
+    merged_neg = jnp.concatenate([best_neg, neg])
+    merged_idx = jnp.concatenate([best_idx, cand_idx])
+    merged_v = jnp.concatenate([best_v, sv], axis=0)
+    best_neg, pos = jax.lax.top_k(merged_neg, delta)
+    return best_neg, merged_idx[pos], merged_v[pos], n_cand
+
+
+def finalize_retrieval(carry):
+    """Read (psi_idx, psi_valid, psi_v, n_candidates) off a finished carry."""
+    best_neg, best_idx, best_v, n_candidates = carry
+    psi_valid = best_neg > -jnp.inf
+    psi_idx = jnp.where(psi_valid, best_idx, -1)
+    psi_v = jnp.where(psi_valid[:, None], best_v, 0.0)
+    return psi_idx, psi_valid, psi_v, n_candidates
+
+
 # Conservative slack on the ball-intersection routing test: shard radii and
 # the triangle inequality are evaluated in f32, so a candidate exactly on the
 # ROI boundary must not be lost to rounding in the shard-level test. Applied
@@ -160,10 +243,11 @@ def _retrieve_sharded(roi: ROI, store: ShardedStore, active, lsh_params,
     slice on the leading S axis — the axis a mesh shards over devices) and
     only when the shard's bounding ball intersects the ROI ball. Candidates
     live in a (delta,) running buffer; cross-shard dedup is free because the
-    shards partition the dataset.
+    shards partition the dataset. The per-shard math is `retrieve_chunk` —
+    the same function the host-streamed engine drives one device_put at a
+    time.
     """
-    n = store.n_points
-    n_shards, shard_cap, _ = store.shards.shape
+    n_shards = store.shards.shape[0]
     keys, salts = hash_queries(sup_v, store.tables.proj, store.tables.bias,
                                lsh_params.seg_len)         # (L, a_cap)
     # Global probe budget (ROADMAP item): one `probe`-wide salted window per
@@ -177,7 +261,6 @@ def _retrieve_sharded(roi: ROI, store: ShardedStore, active, lsh_params,
     d = store.shards.shape[2]
 
     def chunk_step(s, carry):
-        best_neg, best_idx, best_v, n_cand = carry
         sk = jax.lax.dynamic_index_in_dim(store.tables.sorted_keys, s, 0,
                                           keepdims=False)  # (L, cap)
         pm = jax.lax.dynamic_index_in_dim(store.tables.perm, s, 0,
@@ -189,45 +272,9 @@ def _retrieve_sharded(roi: ROI, store: ShardedStore, active, lsh_params,
         st = jax.lax.dynamic_index_in_dim(win_starts, s, 0, keepdims=False)
         lo = jax.lax.dynamic_index_in_dim(win_lo, s, 0, keepdims=False)
         hi = jax.lax.dynamic_index_in_dim(win_hi, s, 0, keepdims=False)
-        local = probe_tables_window(sk, pm, keys, st, lo, hi, lsh_params.probe)
-        local = jnp.where(sup_slot_mask[:, None], local, -1)
-        flat = local.reshape(-1)                          # (a_cap * L * probe,)
-        safe_slot = jnp.clip(flat, 0, shard_cap - 1)
-        gidx = jnp.where(flat >= 0, gmap[safe_slot], -1)
-        vc = pts_s[safe_slot]
-        dist = _roi_distance(vc, roi.center, p)
-
-        safe_g = jnp.clip(gidx, 0, n - 1)
-        valid = (gidx >= 0) & active[safe_g]
-        member = jnp.any((safe_g[:, None] == sup_idx[None, :])
-                         & sup_slot_mask[None, :], axis=1)
-        valid &= ~member
-        valid &= dist <= roi.radius
-
-        # within-chunk dedup (a point can surface from several tables); the
-        # sort also fixes a deterministic order for exact-tie distances
-        sentinel = jnp.int32(n)
-        dkeys = jnp.where(valid, safe_g, sentinel)
-        order = jnp.argsort(dkeys)
-        sg = dkeys[order]
-        sd = dist[order]
-        sv = vc[order]
-        uniq = jnp.concatenate([jnp.array([True]), sg[1:] != sg[:-1]])
-        cvalid = uniq & (sg < sentinel)
-        n_cand = n_cand + jnp.sum(cvalid)
-
-        neg = jnp.where(cvalid, -sd, -jnp.inf)
-        cand_idx = jnp.where(cvalid, sg, -1).astype(jnp.int32)
-        # streaming top-delta merge: buffer ++ chunk -> top_k. Candidate
-        # ROWS ride along in the carry so psi needs no end-of-loop gather
-        # over the (device-sharded) store — the rows are already local here.
-        merged_neg = jnp.concatenate([best_neg, neg])
-        merged_idx = jnp.concatenate([best_idx, cand_idx])
-        merged_v = jnp.concatenate([best_v, sv], axis=0)
-        best_neg, pos = jax.lax.top_k(merged_neg, delta)
-        best_idx = merged_idx[pos]
-        best_v = merged_v[pos]
-        return best_neg, best_idx, best_v, n_cand
+        return retrieve_chunk(carry, pts_s, sk, pm, gmap, keys, st, lo, hi,
+                              roi.center, roi.radius, active, sup_idx,
+                              sup_slot_mask, probe=lsh_params.probe, p=p)
 
     def shard_step(s, carry):
         if p != 2.0:
@@ -247,16 +294,10 @@ def _retrieve_sharded(roi: ROI, store: ShardedStore, active, lsh_params,
         return jax.lax.cond(touch, lambda c: chunk_step(s, c), lambda c: c,
                             carry)
 
-    best_neg0 = jnp.full((delta,), -jnp.inf, jnp.float32)
-    best_idx0 = jnp.full((delta,), -1, jnp.int32)
-    best_v0 = jnp.zeros((delta, d), store.shards.dtype)
-    best_neg, best_idx, best_v, n_candidates = jax.lax.fori_loop(
-        0, n_shards, shard_step, (best_neg0, best_idx0, best_v0, jnp.int32(0)))
-
-    psi_valid = best_neg > -jnp.inf
-    psi_idx = jnp.where(psi_valid, best_idx, -1)
-    psi_v = jnp.where(psi_valid[:, None], best_v, 0.0)
-    return psi_idx, psi_valid, psi_v, n_candidates
+    carry = jax.lax.fori_loop(
+        0, n_shards, shard_step,
+        init_retrieval_carry(delta, d, store.shards.dtype))
+    return finalize_retrieval(carry)
 
 
 @functools.partial(jax.jit, static_argnames=("a_cap", "delta", "lsh_params",
@@ -278,7 +319,7 @@ def civs_update(
     cap = a_cap + delta
     assert state.x.shape[0] == cap, (state.x.shape, cap)
 
-    sup_idx, sup_v, sup_x, sup_slot_mask, overflow = _compact_support(
+    sup_idx, sup_v, sup_x, sup_slot_mask, overflow = compact_support(
         state, a_cap, support_eps)
 
     if isinstance(points, ShardedStore):
@@ -290,6 +331,6 @@ def civs_update(
             roi, points, active, tables, lsh_params, sup_idx, sup_v,
             sup_slot_mask, delta, p)
 
-    return _rebuild(state, sup_idx, sup_v, sup_x, sup_slot_mask,
-                    psi_idx, psi_valid, psi_v, k, a_cap, tol, p,
-                    n_candidates, overflow)
+    return rebuild_support(state, sup_idx, sup_v, sup_x, sup_slot_mask,
+                           psi_idx, psi_valid, psi_v, k, a_cap, tol, p,
+                           n_candidates, overflow)

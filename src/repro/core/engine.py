@@ -1,10 +1,14 @@
-"""Unified ClusterEngine API — ONE peel-reduce driver over three engines.
+"""Unified ClusterEngine API — ONE peel-reduce driver over four engines.
 
 This module is the public face of dominant-cluster detection:
 
-    cfg = ALIDConfig(spec=EngineSpec(engine="sharded", n_shards=8), ...)
-    clustering = fit(points, cfg, rng)          # -> Clustering
+    cfg = ALIDConfig(spec=EngineSpec(engine="streamed", n_shards=8), ...)
+    clustering = fit(MemmapSource("x.npy"), cfg, rng)   # -> Clustering
     labels = clustering.predict(new_points)     # per-query assignment
+
+`fit` ingests a `repro.core.source.DataSource` (memmap / chunked / in-memory)
+or a legacy (n, d) array, auto-wrapped; only the streamed engine never
+materializes the source.
 
 `fit` runs the host-level peeling loop of paper Sec. 4.4: rounds of batched
 seeds, each resolved by the PALID reducer (Sec. 4.6) — a point belongs to
@@ -19,12 +23,18 @@ retrieval substrate lives:
 
   * ReplicatedEngine — full dataset + monolithic LSH on the local device(s);
   * ShardedEngine    — out-of-core `ShardedStore`, CIVS streams one shard at
-                       a time (DESIGN.md §3);
+                       a time inside jit (DESIGN.md §3);
   * MeshEngine       — the PALID map phase sharded over a device mesh, with
                        either a replicated store or (n_shards > 0) the
-                       ShardedStore placed one HBM slice per device.
+                       ShardedStore placed one HBM slice per device;
+  * StreamedEngine   — the ALID outer loop lifted to HOST level over a
+                       host-resident `StreamedStore`: one routed shard is
+                       device_put at a time into a double-buffered slot, so
+                       peak device memory is O(shard + cap) for datasets
+                       beyond device (or host-aggregate) HBM (DESIGN.md
+                       §3.3).
 
-All three consume the PRNG stream identically (one split for the LSH build,
+All four consume the PRNG stream identically (one split for the LSH build,
 one per round for seeding) and share seeding statistics, so on tie-free data
 they produce identical labels (tests/test_engine.py parametrizes the parity
 suite over every engine x exhaustive mode).
@@ -44,14 +54,22 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.alid import (ALIDConfig, Clustering, EngineSpec, SeedResult,
                              _sample_seeds, alid_from_seed)
 from repro.core.affinity import estimate_k
-from repro.core.store import build_store, global_bucket_sizes
+from repro.core.civs import (_ROUTE_EPS, compact_support, finalize_retrieval,
+                             init_retrieval_carry, rebuild_support,
+                             retrieve_chunk)
+from repro.core.lid import init_state_from, lid_solve
+from repro.core.roi import estimate_roi
+from repro.core.source import (DataSource, as_source, strided_sample_indices)
+from repro.core.store import (build_store, build_store_streamed,
+                              global_bucket_sizes)
 from repro.distributed.context import MeshContext, mesh_context
 from repro.distributed.shardings import logical_spec, store_specs
-from repro.lsh.pstable import bucket_sizes, build_lsh
+from repro.lsh.pstable import (bucket_sizes, build_lsh, hash_queries,
+                               shard_bucket_windows_host)
 
-__all__ = ["Engine", "EngineSpec", "Clustering", "fit", "make_engine",
-           "resolve_claims", "ReplicatedEngine", "ShardedEngine",
-           "MeshEngine"]
+__all__ = ["Engine", "EngineSpec", "Clustering", "DataSource", "fit",
+           "make_engine", "resolve_claims", "ReplicatedEngine",
+           "ShardedEngine", "MeshEngine", "StreamedEngine"]
 
 
 # ------------------------------------------------------------ the reducer --
@@ -134,15 +152,20 @@ def _map_round_mesh_sharded(store, active, seeds, k, cfg: ALIDConfig):
 class Engine(Protocol):
     """One retrieval/compute substrate behind the shared peel-reduce driver.
 
-    build() prepares the store + LSH (consuming rng exactly once), after
+    build_source() ingests a DataSource (consuming rng exactly once), after
     which `k` and `bucket_sizes` are available; run_round() maps a batch of
-    seeds and resolves their claims through `resolve_claims`.
+    seeds and resolves their claims through `resolve_claims`. build() is the
+    legacy array entry (auto-wrapped as an InMemorySource); device-resident
+    engines materialize the source, the streamed engine never does.
     """
 
     k: jax.Array
 
     def build(self, points: jax.Array, cfg: ALIDConfig,
               rng: jax.Array) -> None: ...
+
+    def build_source(self, source: DataSource, cfg: ALIDConfig,
+                     rng: jax.Array) -> None: ...
 
     def run_round(self, active: jax.Array, seeds: jax.Array,
                   seed_valid: jax.Array
@@ -152,6 +175,10 @@ class Engine(Protocol):
     def bucket_sizes(self) -> jax.Array: ...
 
 
+# rows drawn for k estimation when cfg.k is None (mirrors estimate_k default)
+_K_SAMPLE = 512
+
+
 class _EngineBase:
     def __init__(self) -> None:
         self._bsizes = None
@@ -159,11 +186,36 @@ class _EngineBase:
         self._cfg: Optional[ALIDConfig] = None
         self._n = 0
 
-    def _setup_k(self, points: jax.Array, cfg: ALIDConfig) -> None:
+    def _setup_k(self, source: DataSource, cfg: ALIDConfig) -> None:
         self._cfg = cfg
-        self._n = points.shape[0]
-        self.k = (jnp.float32(cfg.k) if cfg.k is not None
-                  else estimate_k(points))
+        self._n = source.n
+        if cfg.k is not None:
+            self.k = jnp.float32(cfg.k)
+        else:
+            # STRIDED subsample (not a prefix — point order is spatially
+            # meaningful, see affinity.estimate_k); drawn through the source
+            # interface so k estimation works chunked/out-of-core, and from
+            # the SAME indices on every engine (parity contract).
+            idx = strided_sample_indices(source.n, _K_SAMPLE)
+            self.k = estimate_k(jnp.asarray(source.sample(idx), jnp.float32))
+
+    def _setup_k_from_points(self, points, cfg: ALIDConfig) -> None:
+        """build()-side k setup: a no-op when build_source already drew the
+        sample from the ORIGINAL source (avoids bouncing the materialized
+        O(n·d) array back to host just to re-gather 512 rows)."""
+        if self._cfg is cfg and self.k is not None:
+            self._n = points.shape[0]
+            return
+        self._setup_k(as_source(np.asarray(points)), cfg)
+
+    def build_source(self, source: DataSource, cfg: ALIDConfig,
+                     rng: jax.Array) -> None:
+        """Default ingestion: sample k from the source, then materialize it
+        as one device array (the replicated/sharded/mesh engines are
+        device-resident by design; only StreamedEngine overrides this with a
+        non-materializing build)."""
+        self._setup_k(source, cfg)
+        self.build(jnp.asarray(source.as_array(), jnp.float32), cfg, rng)
 
     @property
     def bucket_sizes(self) -> jax.Array:
@@ -185,7 +237,7 @@ class ReplicatedEngine(_EngineBase):
         self.spec = spec
 
     def build(self, points, cfg, rng):
-        self._setup_k(points, cfg)
+        self._setup_k_from_points(points, cfg)
         self._points = points
         self._tables = build_lsh(points, cfg.lsh, rng)
         self._bsizes = bucket_sizes(self._tables)
@@ -205,7 +257,7 @@ class ShardedEngine(_EngineBase):
         self.spec = spec
 
     def build(self, points, cfg, rng):
-        self._setup_k(points, cfg)
+        self._setup_k_from_points(points, cfg)
         self._store = build_store(points, cfg.lsh, rng,
                                   n_shards=max(1, self.spec.n_shards))
         self._bsizes = global_bucket_sizes(self._store)
@@ -231,7 +283,7 @@ class MeshEngine(_EngineBase):
         self.ctx = spec.mesh_ctx
 
     def build(self, points, cfg, rng):
-        self._setup_k(points, cfg)
+        self._setup_k_from_points(points, cfg)
         if self.ctx is None:
             mesh = jax.make_mesh((jax.device_count(),), ("data",))
             self.ctx = MeshContext(mesh=mesh, data_axes=("data",),
@@ -271,10 +323,252 @@ class MeshEngine(_EngineBase):
         return self._reduce(results, seed_valid)
 
 
+# ------------------------------------------- streamed (host-driven) engine --
+# The jitted stages of the host-level ALID loop. Each mirrors one piece of
+# `alid_from_seed`'s while-loop body, vmapped over the seed batch; the host
+# driver composes them with per-lane select masks — the explicit analogue of
+# what vmap-of-while_loop does implicitly — so the math (and therefore the
+# labels, on tie-free data) is identical to the in-jit engines.
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _init_states_batch(seed_rows, seeds, cap: int):
+    return jax.vmap(lambda v, s: init_state_from(v, s, cap))(seed_rows, seeds)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _lid_batch(state, k, cfg: ALIDConfig):
+    return jax.vmap(lambda s: lid_solve(s, k, max_iters=cfg.t_lid,
+                                        tol=cfg.tol, p=cfg.p))(state)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _roi_batch(state, k, c, cfg: ALIDConfig):
+    return jax.vmap(
+        lambda s, ci: estimate_roi(s.v_beta, s.beta_idx, s.beta_mask, s.x,
+                                   k, ci, r0=cfg.r0, p=cfg.p,
+                                   support_eps=cfg.support_eps))(state, c)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _civs_begin_batch(state, cfg: ALIDConfig):
+    return jax.vmap(
+        lambda s: compact_support(s, cfg.a_cap, cfg.support_eps))(state)
+
+
+@functools.partial(jax.jit, static_argnames=("seg_len",))
+def _hash_queries_batch(sup_v, proj, bias, seg_len: float):
+    return jax.vmap(
+        lambda q: hash_queries(q, proj, bias, seg_len))(sup_v)
+
+
+@functools.partial(jax.jit, static_argnames=("b", "delta", "d"))
+def _init_carry_batch(b: int, delta: int, d: int):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (b,) + x.shape),
+                        init_retrieval_carry(delta, d))
+
+
+@functools.partial(jax.jit, static_argnames=("probe", "p"))
+def _stream_chunk_batch(carry, pts_s, sk, pm, gmap, keys, starts, lo, hi,
+                        center, radius, active, sup_idx, sup_slot_mask,
+                        touch, probe: int, p: float):
+    """One device-resident shard folded into every seed lane's carry.
+
+    The shard leaves (pts_s/sk/pm/gmap) broadcast; everything per-seed maps.
+    `touch` replays the lax.cond-under-vmap select of `_retrieve_sharded`:
+    lanes whose ROI ball misses the shard ball keep their carry untouched.
+    """
+    def one(carry1, keys1, st1, lo1, hi1, cen1, rad1, sidx1, smask1, t1):
+        new = retrieve_chunk(carry1, pts_s, sk, pm, gmap, keys1, st1, lo1,
+                             hi1, cen1, rad1, active, sidx1, smask1,
+                             probe=probe, p=p)
+        return jax.tree.map(lambda a, b_: jnp.where(t1, a, b_), new, carry1)
+
+    return jax.vmap(one)(carry, keys, starts, lo, hi, center, radius,
+                         sup_idx, sup_slot_mask, touch)
+
+
+@jax.jit
+def _finalize_batch(carry):
+    return jax.vmap(finalize_retrieval)(carry)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _civs_finish_batch(state, sup_idx, sup_v, sup_x, sup_mask, psi_idx,
+                       psi_valid, psi_v, k, n_cand, overflow,
+                       cfg: ALIDConfig):
+    return jax.vmap(
+        lambda st, si, sv, sx, sm, pidx, pval, pv, nc, ov: rebuild_support(
+            st, si, sv, sx, sm, pidx, pval, pv, k, cfg.a_cap, cfg.tol,
+            cfg.p, nc, ov))(
+        state, sup_idx, sup_v, sup_x, sup_mask, psi_idx, psi_valid, psi_v,
+        n_cand, overflow)
+
+
+@jax.jit
+def _select_lanes(lane, new_tree, old_tree):
+    """Per-lane select over batched pytrees (lane (B,) bool broadcasts over
+    each leaf's trailing dims) — the host analogue of vmapped-while masking."""
+    def sel(a, b):
+        shape = (lane.shape[0],) + (1,) * (a.ndim - 1)
+        return jnp.where(lane.reshape(shape), a, b)
+    return jax.tree.map(sel, new_tree, old_tree)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _seed_results_batch(state, c, overflow, cfg: ALIDConfig):
+    sup = state.beta_mask & (state.x > cfg.support_eps)
+    return SeedResult(
+        member_idx=jnp.where(sup, state.beta_idx, -1),
+        member_w=jnp.where(sup, state.x, 0.0),
+        member_mask=sup,
+        density=jnp.sum(state.x * state.ax, axis=-1),
+        n_outer=c - 1,
+        overflow=overflow,
+    )
+
+
+class StreamedEngine(_EngineBase):
+    """Host-streamed out-of-core engine: the dataset stays behind a
+    DataSource, the store (`core.store.StreamedStore`) is built shard-by-
+    shard from source chunks, and the ALID outer loop runs at HOST level —
+    each CIVS pass device_puts one ROUTED shard at a time into a double-
+    buffered device slot (device_put is async, so shard s+1 uploads while
+    shard s probes). Peak device memory is O(shard + cap) — two in-flight
+    shard bundles plus the per-seed LID/candidate state — and peak host
+    memory is O(chunk) for memmap sources (DESIGN.md §3.3).
+
+    The PRNG schedule (one split for the store build, one per round for
+    seeding), the seeding statistics (exact global bucket sizes), the chunk
+    math (`civs.retrieve_chunk` — shared with ShardedEngine), and the claim
+    reducer are all identical to the other engines, so on tie-free data the
+    streamed engine produces the same labels as the replicated one and joins
+    the parity suite."""
+
+    def __init__(self, spec: EngineSpec):
+        super().__init__()
+        self.spec = spec
+        self._slots: list = [None, None]
+        self._slot = 0
+
+    def build_source(self, source, cfg, rng):
+        self._setup_k(source, cfg)
+        self._store = build_store_streamed(
+            source, cfg.lsh, rng, n_shards=max(1, self.spec.n_shards or 8),
+            chunk_size=self.spec.chunk_size)
+        self._bsizes = jnp.asarray(self._store.bucket_sizes)
+
+    def build(self, points, cfg, rng):
+        self.build_source(as_source(np.asarray(points)), cfg, rng)
+
+    def run_round(self, active, seeds, seed_valid):
+        results = self._alid_batch(active, seeds)
+        return self._reduce(results, seed_valid)
+
+    # -- internals ---------------------------------------------------------
+    def _put_shard(self, bundle):
+        """device_put into the next of TWO slots; overwriting a slot drops
+        the 2-generations-old buffer, so at most two shard bundles are ever
+        device-live while upload and probe overlap."""
+        self._slot ^= 1
+        self._slots[self._slot] = jax.device_put(bundle)
+        return self._slots[self._slot]
+
+    def _route(self, roi, p: float) -> np.ndarray:
+        """(B, S) ball-intersection routing matrix, evaluated on HOST from
+        the store's f64 metadata. Conservative exactly like the in-jit test:
+        a skipped (lane, shard) pair contains no point inside that lane's
+        ROI ball, so skipping cannot change the retrieved set."""
+        store = self._store
+        b = np.asarray(roi.radius).shape[0]
+        if p != 2.0:
+            return np.ones((b, store.n_shards), bool)
+        cen = np.asarray(roi.center, np.float64)          # (B, d)
+        rad = np.asarray(roi.radius, np.float64)          # (B,)
+        dist = np.sqrt(
+            ((cen[:, None, :] - store.centers[None]) ** 2).sum(-1))
+        reach = rad[:, None] + store.radii[None]
+        return dist <= reach + _ROUTE_EPS * (1.0 + reach)
+
+    def _alid_batch(self, active, seeds) -> SeedResult:
+        cfg, store, k = self._cfg, self._store, self.k
+        b, d = int(seeds.shape[0]), store.dim
+        probe = cfg.lsh.probe
+
+        seed_rows = jnp.asarray(store.source.sample(np.asarray(seeds)),
+                                jnp.float32)
+        state = _init_states_batch(seed_rows, seeds, cfg.cap)
+        c_np = np.ones((b,), np.int64)
+        done_np = np.zeros((b,), bool)
+        overflow_np = np.zeros((b,), bool)
+
+        while True:
+            lane_np = (~done_np) & (c_np <= cfg.c_outer)
+            if not lane_np.any():
+                break
+            new_state = _lid_batch(state, k, cfg)
+            roi = _roi_batch(new_state, k, jnp.asarray(c_np, jnp.int32), cfg)
+            sup_idx, sup_v, sup_x, sup_mask, ovf = _civs_begin_batch(
+                new_state, cfg)
+
+            # global probe windows, carved on host from the host tables
+            keys, salts = _hash_queries_batch(sup_v, store.proj, store.bias,
+                                              cfg.lsh.seg_len)
+            keys_np, salts_np = np.asarray(keys), np.asarray(salts)
+            n_tables, q = keys_np.shape[1], keys_np.shape[2]
+            st, lo, hi = shard_bucket_windows_host(
+                store.sorted_keys,
+                keys_np.transpose(1, 0, 2).reshape(n_tables, b * q),
+                salts_np.transpose(1, 0, 2).reshape(n_tables, b * q), probe)
+            # (S, L, B*q) -> (S, B, L, q)
+            st = st.reshape(-1, n_tables, b, q).transpose(0, 2, 1, 3)
+            lo = lo.reshape(-1, n_tables, b, q).transpose(0, 2, 1, 3)
+            hi = hi.reshape(-1, n_tables, b, q).transpose(0, 2, 1, 3)
+
+            # frozen lanes' results are discarded by the lane select below,
+            # so don't let their stale ROIs force shard uploads
+            touch = self._route(roi, cfg.p) & lane_np[:, None]
+            carry = _init_carry_batch(b, cfg.delta, d)
+            for s in range(store.n_shards):
+                if not bool(touch[:, s].any()):
+                    continue
+                pts_s, sk, pm, gmap = self._put_shard(
+                    (store.shard_points(s), store.sorted_keys[s],
+                     store.perm[s], store.global_idx[s]))
+                carry = _stream_chunk_batch(
+                    carry, pts_s, sk, pm, gmap, keys, jnp.asarray(st[s]),
+                    jnp.asarray(lo[s]), jnp.asarray(hi[s]), roi.center,
+                    roi.radius, active, sup_idx, sup_mask,
+                    jnp.asarray(touch[:, s]), probe, cfg.p)
+            psi_idx, psi_valid, psi_v, n_cand = _finalize_batch(carry)
+
+            res = _civs_finish_batch(new_state, sup_idx, sup_v, sup_x,
+                                     sup_mask, psi_idx, psi_valid, psi_v, k,
+                                     n_cand, ovf, cfg)
+            grown = roi.radius >= cfg.stop_frac * roi.r_out
+            new_done = np.asarray(
+                (~res.infective_found) & (grown | (res.n_candidates == 0)))
+
+            state = _select_lanes(jnp.asarray(lane_np), res.state, state)
+            overflow_np |= lane_np & np.asarray(res.overflow)
+            done_np = np.where(lane_np, new_done & (c_np > 1), done_np)
+            c_np = np.where(lane_np, c_np + 1, c_np)
+            # drop this iteration's device intermediates NOW — otherwise a
+            # second generation stays live until the next iteration rebinds
+            # the names, doubling the O(cap) working set this engine exists
+            # to bound
+            del new_state, roi, sup_idx, sup_v, sup_x, sup_mask, carry
+            del psi_idx, psi_valid, psi_v, n_cand, res, grown, keys, salts
+
+        state = _lid_batch(state, k, cfg)   # final polish, as alid_from_seed
+        return _seed_results_batch(state, jnp.asarray(c_np, jnp.int32),
+                                   jnp.asarray(overflow_np), cfg)
+
+
 _ENGINES = {
     "replicated": ReplicatedEngine,
     "sharded": ShardedEngine,
     "mesh": MeshEngine,
+    "streamed": StreamedEngine,
 }
 
 
@@ -289,9 +583,15 @@ def make_engine(spec: EngineSpec) -> Engine:
 
 
 # ------------------------------------------------------------- the driver --
-def fit(points: jax.Array, cfg: ALIDConfig = ALIDConfig(),
+def fit(data, cfg: ALIDConfig = ALIDConfig(),
         rng: Optional[jax.Array] = None) -> Clustering:
     """Dominant-cluster detection: THE host peel-reduce loop (Sec. 4.4).
+
+    `data` is a `DataSource` (InMemorySource / MemmapSource / ChunkedSource,
+    see `repro.core.source`) or a legacy (n, d) array, which is auto-wrapped
+    — the driver itself only touches rows through the source interface, so
+    with `EngineSpec(engine="streamed")` a memmapped dataset never
+    materializes in host or device memory.
 
     Rounds of batched seeds (sampled from large LSH buckets) run on the
     engine `cfg.spec` selects; claims resolve through `resolve_claims`;
@@ -303,14 +603,13 @@ def fit(points: jax.Array, cfg: ALIDConfig = ALIDConfig(),
     Returns a `Clustering` carrying per-cluster weighted supports, so the
     result can `predict` new points and serialize without the dataset.
     """
-    points = jnp.asarray(points, jnp.float32)
+    source = as_source(data)
     rng = jax.random.PRNGKey(0) if rng is None else rng
-    n = points.shape[0]
-    pts_np = np.asarray(points)
+    n = source.n
 
     engine = make_engine(cfg.spec)
     rng, kb = jax.random.split(rng)
-    engine.build(points, cfg, kb)
+    engine.build_source(source, cfg, kb)
 
     active = jnp.ones((n,), bool)
     labels = np.full((n,), -1, np.int32)
@@ -337,23 +636,32 @@ def fit(points: jax.Array, cfg: ALIDConfig = ALIDConfig(),
         dens_np = np.asarray(results.density)
         member_np = np.asarray(results.member_idx)
         weight_np = np.asarray(results.member_w)
-        # assign labels for winning rows that clear the density threshold
-        for row in np.unique(row_np[claimed_np]):
-            pts = np.where(claimed_np & (row_np == row))[0]
-            if pts.size == 0:
-                continue
-            if dens_np[row] >= cfg.density_min and pts.size > 1:
-                labels[pts] = next_label
-                densities.append(float(dens_np[row]))
-                midx, mw = member_np[row], weight_np[row]
-                valid = (midx >= 0) & (mw > 0)
-                w = np.where(valid, mw, 0.0).astype(np.float32)
-                w /= max(float(w.sum()), 1e-12)
-                sup_idx.append(np.where(valid, midx, -1).astype(np.int32))
-                sup_w.append(w)
-                sup_v.append(pts_np[np.clip(midx, 0, n - 1)]
-                             * valid[:, None])
-                next_label += 1
+        # Assign labels for winning rows that clear the density threshold —
+        # ONE segment pass (stable argsort groups claimed points by winning
+        # row; np.unique yields the rows in ascending order, matching the
+        # label numbering of the historical per-row Python loop, which was
+        # O(rounds·seeds) host work and would bottleneck streamed rounds).
+        claimed_pts = np.where(claimed_np)[0]
+        grp = np.argsort(row_np[claimed_pts], kind="stable")
+        sorted_pts = claimed_pts[grp]
+        uniq_rows, counts = np.unique(row_np[claimed_pts],
+                                      return_counts=True)
+        keep = (dens_np[uniq_rows] >= cfg.density_min) & (counts > 1)
+        lab = np.full(uniq_rows.shape[0], -1, np.int32)
+        lab[keep] = next_label + np.arange(int(keep.sum()), dtype=np.int32)
+        labels[sorted_pts] = np.repeat(lab, counts)
+        for row in uniq_rows[keep]:
+            densities.append(float(dens_np[row]))
+            midx, mw = member_np[row], weight_np[row]
+            valid = (midx >= 0) & (mw > 0)
+            w = np.where(valid, mw, 0.0).astype(np.float32)
+            w /= max(float(w.sum()), 1e-12)
+            sup_idx.append(np.where(valid, midx, -1).astype(np.int32))
+            sup_w.append(w)
+            sup_v.append(np.asarray(
+                source.sample(np.clip(midx, 0, n - 1)), np.float32)
+                * valid[:, None])
+        next_label += int(keep.sum())
         # peel everything claimed + the seeds themselves (guarantees progress)
         seeds_np = np.asarray(seeds)[np.asarray(seed_valid)]
         new_inactive = claimed_np.copy()
@@ -362,7 +670,7 @@ def fit(points: jax.Array, cfg: ALIDConfig = ALIDConfig(),
         if not bool(jnp.any(active)):
             break
 
-    cap, d = cfg.cap, points.shape[1]
+    cap, d = cfg.cap, source.dim
     return Clustering(
         labels=labels,
         densities=np.asarray(densities, np.float32),

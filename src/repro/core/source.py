@@ -1,0 +1,223 @@
+"""DataSource — the ingestion protocol behind `engine.fit`.
+
+ALID's space bound is O(a*(a* + δ)): only the LOCAL affinity graph is ever
+materialized (paper Sec. 4.5). Local-range methods scale precisely because
+they touch the dataset through a narrow access interface rather than a
+resident matrix — so the public API must not demand the full dataset as one
+dense in-HBM array. A `DataSource` is that narrow interface:
+
+    n                       — number of rows
+    dim                     — row dimensionality
+    get_chunk(start, size)  — contiguous block [start, start+size) as f32
+    sample(idx)             — arbitrary row gather (seed rows, shard builds)
+
+Everything a source returns is host numpy float32; the engines decide what
+(and how much) goes to device. Three implementations:
+
+  * InMemorySource — wraps an ndarray (the legacy `fit(points, ...)` path;
+    `as_source` auto-wraps raw arrays so old call sites keep working);
+  * MemmapSource   — an .npy file opened with numpy memmap: `get_chunk` and
+    `sample` read only the touched rows, so peak host memory is O(chunk)
+    even for a 10M-point file;
+  * ChunkedSource  — any indexable sequence of row blocks (e.g. the output
+    of a batch feature extractor), concatenated logically via prefix sums.
+
+`make_source("memmap:path.npy")` parses the CLI spec strings used by
+`repro.launch.run_palid --source`.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class DataSource(Protocol):
+    """Narrow row-access interface the engines ingest from.
+
+    Implementations return host numpy float32 arrays; they must be cheap to
+    call repeatedly with small requests (the streamed engine re-reads shard
+    rows every time a shard is routed).
+    """
+
+    @property
+    def n(self) -> int: ...
+
+    @property
+    def dim(self) -> int: ...
+
+    def get_chunk(self, start: int, size: int) -> np.ndarray: ...
+
+    def sample(self, idx: np.ndarray) -> np.ndarray: ...
+
+
+class _SourceBase:
+    def get_chunk(self, start: int, size: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def sample(self, idx: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def iter_chunks(self, chunk_size: int):
+        """Yield (start, block) pairs covering [0, n) in order."""
+        return iter_source_chunks(self, chunk_size)
+
+    def as_array(self) -> np.ndarray:
+        """Materialize every row on host — O(n·d); out-of-core engines never
+        call this, it exists so legacy (replicated/mesh) engines can ingest
+        any source."""
+        return self.get_chunk(0, self.n)
+
+
+class InMemorySource(_SourceBase):
+    """A resident ndarray behind the DataSource interface."""
+
+    def __init__(self, points: np.ndarray):
+        pts = np.asarray(points, np.float32)
+        assert pts.ndim == 2, f"expected (n, d) points, got {pts.shape}"
+        self._pts = pts
+
+    @property
+    def n(self) -> int:
+        return self._pts.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self._pts.shape[1]
+
+    def get_chunk(self, start: int, size: int) -> np.ndarray:
+        return self._pts[start:start + size]
+
+    def sample(self, idx: np.ndarray) -> np.ndarray:
+        return self._pts[np.asarray(idx, np.int64)]
+
+
+class MemmapSource(_SourceBase):
+    """An on-disk .npy file read through numpy memmap.
+
+    Only the requested rows are ever paged in, so host memory stays O(chunk)
+    regardless of the file size. Non-f32 files are converted per request.
+    """
+
+    def __init__(self, path):
+        self.path = str(path)
+        self._mm = np.load(self.path, mmap_mode="r")
+        assert self._mm.ndim == 2, \
+            f"expected a 2-d .npy of shape (n, d), got {self._mm.shape}"
+
+    @property
+    def n(self) -> int:
+        return self._mm.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self._mm.shape[1]
+
+    def get_chunk(self, start: int, size: int) -> np.ndarray:
+        return np.asarray(self._mm[start:start + size], np.float32)
+
+    def sample(self, idx: np.ndarray) -> np.ndarray:
+        return np.asarray(self._mm[np.asarray(idx, np.int64)], np.float32)
+
+
+class ChunkedSource(_SourceBase):
+    """Any indexable sequence of (m_i, d) row blocks, concatenated logically.
+
+    Blocks are addressed through prefix sums; `get_chunk`/`sample` touch only
+    the blocks a request spans, so a lazily-loading block sequence keeps host
+    memory at O(block).
+    """
+
+    def __init__(self, blocks: Sequence[np.ndarray]):
+        assert len(blocks) > 0, "ChunkedSource needs at least one block"
+        self._blocks = blocks
+        sizes = [int(np.asarray(b).shape[0]) for b in blocks]
+        self._starts = np.concatenate([[0], np.cumsum(sizes)])
+        self._dim = int(np.asarray(blocks[0]).shape[1])
+
+    @property
+    def n(self) -> int:
+        return int(self._starts[-1])
+
+    @property
+    def dim(self) -> int:
+        return self._dim
+
+    def get_chunk(self, start: int, size: int) -> np.ndarray:
+        stop = min(start + size, self.n)
+        b0 = int(np.searchsorted(self._starts, start, side="right")) - 1
+        out = []
+        pos = start
+        while pos < stop:
+            blk = np.asarray(self._blocks[b0], np.float32)
+            lo = pos - int(self._starts[b0])
+            take = min(stop - pos, blk.shape[0] - lo)
+            out.append(blk[lo:lo + take])
+            pos += take
+            b0 += 1
+        return np.concatenate(out, axis=0) if len(out) != 1 else out[0]
+
+    def sample(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx, np.int64)
+        blk_of = np.searchsorted(self._starts, idx, side="right") - 1
+        out = np.empty((idx.shape[0], self._dim), np.float32)
+        for b in np.unique(blk_of):
+            m = blk_of == b
+            blk = np.asarray(self._blocks[int(b)], np.float32)
+            out[m] = blk[idx[m] - int(self._starts[int(b)])]
+        return out
+
+
+def iter_source_chunks(source: DataSource, chunk_size: int):
+    """Yield (start, block) pairs covering [0, n) in order — works for ANY
+    DataSource (the protocol only requires get_chunk/sample)."""
+    for start in range(0, source.n, chunk_size):
+        yield start, source.get_chunk(start,
+                                      min(chunk_size, source.n - start))
+
+
+def is_data_source(obj) -> bool:
+    """True for DataSource-shaped objects. Duck-typed (any object with
+    get_chunk + sample qualifies — no array type carries both), so user
+    sources need not inherit anything and MAY expose extra attributes like
+    .shape without being mistaken for an array."""
+    return hasattr(obj, "get_chunk") and hasattr(obj, "sample")
+
+
+def as_source(data) -> DataSource:
+    """Coerce `fit`'s first argument: DataSource pass-through, anything
+    array-like (numpy / jax / lists) wrapped as an InMemorySource."""
+    if is_data_source(data):
+        return data
+    return InMemorySource(np.asarray(data, np.float32))
+
+
+def make_source(spec: str) -> DataSource:
+    """Parse a CLI source spec: "memmap:path.npy" (out-of-core memmap) or
+    "npy:path.npy" (load fully into host RAM). A bare path defaults to
+    memmap — the conservative choice for large files."""
+    kind, sep, path = spec.partition(":")
+    if not sep:
+        kind, path = "memmap", spec
+    if kind == "memmap":
+        return MemmapSource(path)
+    if kind == "npy":
+        return InMemorySource(np.load(path))
+    raise ValueError(f"unknown source spec {spec!r}; expected "
+                     "'memmap:<file.npy>' or 'npy:<file.npy>'")
+
+
+def strided_sample_indices(n: int, sample: int) -> np.ndarray:
+    """Evenly-strided row indices covering [0, n) — the subsample used for
+    k estimation (`affinity.estimate_k`) and LSH scale calibration. A strided
+    pick is unbiased under ANY spatial ordering of the rows, unlike a prefix
+    `v[:m]` (the store orders points by LSH projection, so a prefix is one
+    spatially-coherent corner of the data). Fractional striding (i·n // m)
+    spans [0, n) for every n — an integer stride n//m truncates to 1 when
+    sample <= n < 2·sample and degenerates to the prefix. Kept in one place
+    so every engine derives the SAME indices from (n, sample) — that
+    equality is part of the engine-parity contract."""
+    m = min(int(sample), int(n))
+    return (np.arange(m, dtype=np.int64) * n) // m

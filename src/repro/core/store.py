@@ -31,9 +31,11 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.source import DataSource, iter_source_chunks
 from repro.lsh.pstable import (LSHParams, ShardedLSHTables, build_lsh_sharded,
-                               make_projections)
+                               hash_chunk, make_projections)
 
 
 class ShardedStore(NamedTuple):
@@ -115,6 +117,147 @@ def build_store(points: jax.Array, params: LSHParams, rng: jax.Array,
     points = jnp.asarray(points, jnp.float32)
     n_shards = max(1, min(int(n_shards), points.shape[0]))
     return _build_store_impl(points, params, rng, n_shards)
+
+
+# ----------------------------------------------------- host-streamed store --
+_PAD_KEY_NP = np.uint32(0xFFFFFFFF)
+_DEFAULT_CHUNK = 32768
+
+
+class StreamedStore(NamedTuple):
+    """Host-resident analogue of ShardedStore for the streamed engine.
+
+    The O(n·d) payload never leaves the source: shard point rows are fetched
+    on demand (`shard_points`) and `device_put` one shard at a time by the
+    host CIVS loop. What the store keeps resident is metadata only — the
+    spatial order, per-shard sorted-key LSH tables ((S, L, cap) uint32, the
+    same scale as the O(n) int32 maps DESIGN.md already budgets), bounding
+    balls for routing, and the global table-0 bucket sizes for seeding. The
+    tiny (L, m, d) projections live on device so query hashing matches the
+    other engines bit-for-bit.
+    """
+    source: DataSource
+    order: np.ndarray        # (n,) int32 — spatial (LSH-projection) order
+    global_idx: np.ndarray   # (S, cap) int32 — shard slot -> original index
+    valid: np.ndarray        # (S, cap) bool
+    sorted_keys: np.ndarray  # (S, L, cap) uint32, ascending per (shard, table)
+    perm: np.ndarray         # (S, L, cap) int32 sorted pos -> local slot, -1 pad
+    centers: np.ndarray      # (S, d) f64 shard centroids
+    radii: np.ndarray        # (S,) f64 bounding radii
+    bucket_sizes: np.ndarray  # (n,) int32 global table-0 bucket sizes
+    proj: jax.Array          # (L, m, d) — device, shared with query hashing
+    bias: jax.Array          # (L, m)
+
+    @property
+    def n_shards(self) -> int:
+        return self.global_idx.shape[0]
+
+    @property
+    def shard_cap(self) -> int:
+        return self.global_idx.shape[1]
+
+    @property
+    def n_points(self) -> int:
+        return self.order.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.source.dim
+
+    def shard_count(self, s: int) -> int:
+        return int(self.valid[s].sum())
+
+    def shard_points(self, s: int) -> np.ndarray:
+        """Fetch one shard's point rows from the source, zero-padded to
+        (shard_cap, d). Peak host memory O(shard) — for a MemmapSource only
+        the touched file rows are paged in."""
+        m = self.shard_count(s)
+        out = np.zeros((self.shard_cap, self.dim), np.float32)
+        out[:m] = self.source.sample(self.global_idx[s, :m])
+        return out
+
+
+def build_store_streamed(source: DataSource, params: LSHParams,
+                         rng: jax.Array, n_shards: int = 8,
+                         chunk_size: int = 0) -> StreamedStore:
+    """Build the streamed store shard-by-shard from source chunks.
+
+    Two passes, neither materializing more than O(chunk) rows on device or
+    host (beyond the int32/uint32 metadata):
+
+      1. chunked hashing: each chunk is hashed ONCE on DEVICE through
+         `pstable.hash_chunk` — the einsum rounds per element, so chunked
+         keys/scores are bit-identical to a monolithic `build_lsh` pass —
+         keys land in a host (L, n) uint32 table (metadata scale, the same
+         O(L·n) as the per-shard sorted tables below) and the host argsorts
+         the (n,) score array into the shard order;
+      2. per shard: gather its ≤cap rows from the source (for the bounding
+         ball only — keys are re-gathered from the pass-1 table, no
+         rehash), stable-sort the per-table keys into shard-local sorted
+         tables, and take the bounding ball (f64 centroid + exact max
+         radius, so the routing test stays conservative).
+
+    Consumes `rng` exactly like `build_lsh`/`build_store` (one
+    `make_projections`), preserving the engine-parity PRNG schedule; the
+    global table-0 bucket sizes are re-aggregated host-side from the
+    per-shard tables, so seeding statistics match the replicated engine
+    integer-for-integer.
+    """
+    chunk_size = int(chunk_size) or _DEFAULT_CHUNK
+    n, d = source.n, source.dim
+    n_shards = max(1, min(int(n_shards), n))
+    cap = -(-n // n_shards)
+    n_tables = params.n_tables
+    proj, bias = make_projections(rng, params, d, jnp.float32)
+
+    scores = np.empty((n,), np.float32)
+    keys_full = np.empty((n_tables, n), np.uint32)
+    for start, block in iter_source_chunks(source, chunk_size):
+        kk, sc = hash_chunk(jnp.asarray(block, jnp.float32), proj, bias,
+                            params.seg_len)
+        stop = start + block.shape[0]
+        keys_full[:, start:stop] = np.asarray(kk)
+        scores[start:stop] = np.asarray(sc)
+    order = np.argsort(scores, kind="stable").astype(np.int32)
+
+    global_idx = np.full((n_shards, cap), -1, np.int32)
+    valid = np.zeros((n_shards, cap), bool)
+    sorted_keys = np.full((n_shards, n_tables, cap), _PAD_KEY_NP, np.uint32)
+    perm = np.full((n_shards, n_tables, cap), -1, np.int32)
+    centers = np.zeros((n_shards, d), np.float64)
+    radii = np.zeros((n_shards,), np.float64)
+
+    slot = np.arange(cap)
+    for s in range(n_shards):
+        idx = order[s * cap:min((s + 1) * cap, n)]
+        m = idx.shape[0]
+        rows = np.asarray(source.sample(idx), np.float32)
+        global_idx[s, :m] = idx
+        valid[s, :m] = True
+        kfull = np.full((n_tables, cap), _PAD_KEY_NP, np.uint32)
+        kfull[:, :m] = keys_full[:, idx]
+        o = np.argsort(kfull, axis=1, kind="stable").astype(np.int32)
+        sorted_keys[s] = np.take_along_axis(kfull, o, axis=1)
+        perm[s] = np.where(np.take_along_axis(
+            np.broadcast_to((slot < m)[None], (n_tables, cap)), o, axis=1),
+            o, -1)
+        rows64 = rows.astype(np.float64)
+        centers[s] = rows64.mean(axis=0)
+        radii[s] = float(np.sqrt(
+            ((rows64 - centers[s]) ** 2).sum(-1)).max())
+
+    keys0 = keys_full[0]
+    bsizes = np.zeros((n,), np.int64)
+    for s in range(n_shards):
+        sk0 = sorted_keys[s, 0]
+        bsizes += (np.searchsorted(sk0, keys0, side="right")
+                   - np.searchsorted(sk0, keys0, side="left"))
+
+    return StreamedStore(source=source, order=order, global_idx=global_idx,
+                         valid=valid, sorted_keys=sorted_keys, perm=perm,
+                         centers=centers, radii=radii,
+                         bucket_sizes=bsizes.astype(np.int32),
+                         proj=proj, bias=bias)
 
 
 @jax.jit

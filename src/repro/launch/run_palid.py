@@ -1,7 +1,8 @@
 """PALID launcher — the paper's headline workload (Sec. 5.3): dominant-cluster
 detection over SIFT-like descriptor collections, parallelized over a mesh.
-Drives the unified engine facade (`repro.core.engine.fit`); --devices and
---shards select the EngineSpec.
+Drives the unified engine facade (`repro.core.engine.fit`); --engine (or the
+legacy --devices/--shards pair) selects the EngineSpec, --source feeds a real
+dataset through the DataSource ingestion API instead of the synthetic blobs.
 
   # 8 virtual devices (the Spark-executor analogue of Table 2):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
@@ -11,6 +12,11 @@ Drives the unified engine facade (`repro.core.engine.fit`); --devices and
   # (the >HBM path, DESIGN.md §3):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
       python -m repro.launch.run_palid --n 20000 --d 32 --devices 8 --shards 16
+
+  # host-streamed over an on-disk npy that never materializes in RAM/HBM
+  # (DESIGN.md §3.3 — peak device memory O(shard + cap)):
+  PYTHONPATH=src python -m repro.launch.run_palid \\
+      --source memmap:descriptors.npy --engine streamed --shards 16
 """
 
 from __future__ import annotations
@@ -22,20 +28,36 @@ import jax
 
 from repro.core.alid import ALIDConfig, EngineSpec
 from repro.core.engine import fit
+from repro.core.source import make_source, strided_sample_indices
 from repro.data import auto_lsh_params, make_blobs_with_noise
 from repro.distributed.context import MeshContext
 from repro.utils import avg_f1_score
 
 
-def engine_spec(devices: int, shards: int) -> EngineSpec:
-    """Map the legacy --devices/--shards CLI onto an EngineSpec."""
-    if devices > 1:
-        mesh = jax.make_mesh((devices,), ("data",))
+def engine_spec(engine: str, devices: int, shards: int,
+                chunk_size: int) -> EngineSpec:
+    """Resolve --engine (+ legacy --devices/--shards) into an EngineSpec."""
+    if engine == "auto":
+        if devices > 1:
+            engine = "mesh"
+        elif shards > 0:
+            engine = "sharded"
+        else:
+            engine = "replicated"
+    if engine == "mesh":
+        mesh = jax.make_mesh((max(devices, 1),), ("data",))
         ctx = MeshContext(mesh=mesh, data_axes=("data",), model_axis="data")
-        return EngineSpec(engine="mesh", n_shards=shards, mesh_ctx=ctx)
-    if shards > 0:
-        return EngineSpec(engine="sharded", n_shards=shards)
-    return EngineSpec(engine="replicated")
+        return EngineSpec(engine="mesh", n_shards=shards, mesh_ctx=ctx,
+                          chunk_size=chunk_size)
+    if engine == "streamed":
+        # 0 lets StreamedEngine apply its own default (8) — forcing 1 here
+        # would stream the whole dataset as a single O(n·d) bundle
+        return EngineSpec(engine="streamed", n_shards=shards,
+                          chunk_size=chunk_size)
+    if engine == "sharded":
+        return EngineSpec(engine="sharded", n_shards=max(1, shards),
+                          chunk_size=chunk_size)
+    return EngineSpec(engine="replicated", chunk_size=chunk_size)
 
 
 def main():
@@ -46,31 +68,61 @@ def main():
     ap.add_argument("--devices", type=int, default=0,  # 0 = serial ALID
                     help="data-axis size for the mesh engine (0 = serial)")
     ap.add_argument("--shards", type=int, default=0,
-                    help="ShardedStore shard count for out-of-core CIVS "
-                         "(0 = replicated dataset + LSH; must divide evenly "
-                         "over --devices when both are set)")
+                    help="ShardedStore/StreamedStore shard count for "
+                         "out-of-core CIVS (0 = replicated dataset + LSH; "
+                         "must divide evenly over --devices when both are "
+                         "set)")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "replicated", "sharded", "mesh",
+                             "streamed"],
+                    help="EngineSpec.engine; 'auto' keeps the legacy "
+                         "--devices/--shards mapping")
+    ap.add_argument("--source", default="",
+                    help="ingest a real dataset instead of synthetic blobs: "
+                         "'memmap:path.npy' (out-of-core) or 'npy:path.npy' "
+                         "(in host RAM); --n/--d/--clusters are ignored")
+    ap.add_argument("--chunk-size", type=int, default=0,
+                    help="host chunk rows for source-chunked builds "
+                         "(0 = default)")
+    ap.add_argument("--a-cap", type=int, default=0,
+                    help="support capacity override (0 = auto)")
     ap.add_argument("--seeds-per-round", type=int, default=32)
     ap.add_argument("--rounds", type=int, default=64)
     args = ap.parse_args()
 
-    cluster_size = max(4, int(args.n * 0.4) // args.clusters)
-    noise = args.n - args.clusters * cluster_size
-    spec = make_blobs_with_noise(args.clusters, cluster_size, noise,
-                                 d=args.d, seed=0)
-    lshp = auto_lsh_params(spec.points)
-    cfg = ALIDConfig(a_cap=max(64, cluster_size + 32), delta=128, lsh=lshp,
+    spec = None
+    if args.source:
+        source = make_source(args.source)
+        # calibrate LSH scale on a strided subsample — never the full file
+        calib = source.sample(strided_sample_indices(source.n, 512))
+        lshp = auto_lsh_params(calib)
+        a_cap = args.a_cap or 128
+        n, d = source.n, source.dim
+    else:
+        cluster_size = max(4, int(args.n * 0.4) // args.clusters)
+        noise = args.n - args.clusters * cluster_size
+        spec = make_blobs_with_noise(args.clusters, cluster_size, noise,
+                                     d=args.d, seed=0)
+        source = spec.points
+        lshp = auto_lsh_params(spec.points)
+        a_cap = args.a_cap or max(64, cluster_size + 32)
+        n, d = spec.points.shape
+
+    cfg = ALIDConfig(a_cap=a_cap, delta=128, lsh=lshp,
                      seeds_per_round=args.seeds_per_round,
                      max_rounds=args.rounds,
-                     spec=engine_spec(args.devices, args.shards))
+                     spec=engine_spec(args.engine, args.devices, args.shards,
+                                      args.chunk_size))
     t0 = time.time()
-    res = fit(spec.points, cfg, jax.random.PRNGKey(0))
+    res = fit(source, cfg, jax.random.PRNGKey(0))
     dt = time.time() - t0
-    f = avg_f1_score(spec.labels, res.labels)
     n_members = int((res.labels >= 0).sum())
-    print(f"[palid] n={args.n} engine={cfg.spec.engine} "
-          f"devices={max(args.devices, 1)} shards={args.shards} "
-          f"time={dt:.2f}s clusters={res.n_clusters} "
-          f"members={n_members} AVG-F={f:.3f}")
+    line = (f"[palid] n={n} d={d} engine={cfg.spec.engine} "
+            f"devices={max(args.devices, 1)} shards={args.shards} "
+            f"time={dt:.2f}s clusters={res.n_clusters} members={n_members}")
+    if spec is not None:
+        line += f" AVG-F={avg_f1_score(spec.labels, res.labels):.3f}"
+    print(line)
 
 
 if __name__ == "__main__":

@@ -173,6 +173,55 @@ def shard_bucket_windows(sorted_keys: jax.Array, keys: jax.Array,
     return starts, lo, hi
 
 
+@functools.partial(jax.jit, static_argnames=("seg_len",))
+def hash_chunk(chunk: jax.Array, proj: jax.Array, bias: jax.Array,
+               seg_len: float) -> tuple[jax.Array, jax.Array]:
+    """Bucket keys + spatial-ordering score for ONE host chunk of rows.
+
+    The streamed store build (`store.build_store_streamed`) hashes the
+    dataset chunk-by-chunk through this: `keys` (L, m) are the same einsum +
+    floor + mix as `hash_points` — per-element over rows, so chunked keys are
+    bit-identical to a monolithic `build_lsh` pass — and `score` (m,) is the
+    projection onto the first LSH direction, the ordering `_build_store_impl`
+    shards by. Only O(chunk) rows are ever device-resident.
+    """
+    keys = hash_points(chunk, proj, bias, seg_len)
+    score = chunk @ proj[0, 0]
+    return keys, score
+
+
+def shard_bucket_windows_host(sorted_keys, keys, salts, probe: int):
+    """Numpy mirror of `shard_bucket_windows` for HOST-resident shard tables.
+
+    sorted_keys: (S, L, cap) uint32 numpy; keys/salts: (L, Q) uint32 numpy.
+    Integer-for-integer identical to the jax version (searchsorted + the same
+    salted-offset formula in uint32), so a host-streamed driver carves the
+    exact same global probe windows as the in-jit sharded engine — without
+    ever shipping the (S, L, cap) key tables to device.
+    Returns (starts, lo, hi), each (S, L, Q) int32.
+    """
+    import numpy as np
+
+    s_n, l_n, _ = sorted_keys.shape
+    q_n = keys.shape[1]
+    starts = np.empty((s_n, l_n, q_n), np.int64)
+    ends = np.empty((s_n, l_n, q_n), np.int64)
+    for s in range(s_n):
+        for l in range(l_n):
+            starts[s, l] = np.searchsorted(sorted_keys[s, l], keys[l], "left")
+            ends[s, l] = np.searchsorted(sorted_keys[s, l], keys[l], "right")
+    sizes = ends - starts
+    total = sizes.sum(axis=0)                             # (L, Q)
+    prefix = np.cumsum(sizes, axis=0) - sizes
+    span = np.maximum(total - probe, 0)
+    offset = (np.asarray(salts, np.uint32)
+              % (span.astype(np.uint32) + np.uint32(1))).astype(np.int64)
+    lo = np.clip(offset[None] - prefix, 0, sizes)
+    hi = np.clip(offset[None] + probe - prefix, 0, sizes)
+    return (starts.astype(np.int32), lo.astype(np.int32),
+            hi.astype(np.int32))
+
+
 def _window_one_table(sorted_keys: jax.Array, perm: jax.Array, key: jax.Array,
                       start: jax.Array, lo: jax.Array, hi: jax.Array,
                       probe: int) -> jax.Array:

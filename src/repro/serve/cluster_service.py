@@ -22,7 +22,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.alid import Clustering, assign_labels
+from repro.core.alid import Clustering, assign_labels, assign_labels_source
+from repro.core.source import as_source
 
 
 class ClusterService:
@@ -58,6 +59,20 @@ class ClusterService:
         self._next_id += 1
         self.queue.append((rid, q))
         return rid
+
+    def assign_source(self, source, batch_size: int = 0) -> np.ndarray:
+        """Bulk assignment over a whole DataSource (or array, auto-wrapped):
+        labels for every row, streamed through fixed-shape batches against
+        the pre-uploaded support tensors. This is the offline counterpart of
+        submit/serve — labeling a 10M-point memmap costs O(batch · C · cap)
+        peak memory, never O(n)."""
+        src = as_source(source)
+        if self.clustering.n_clusters == 0:
+            return np.full((src.n,), -1, np.int32)
+        return assign_labels_source(
+            src, self._sup_v, self._sup_w, self.clustering.densities,
+            self.clustering.k, self.threshold,
+            batch_size=int(batch_size) or max(self.batch_slots, 256))
 
     def serve(self) -> dict[int, int]:
         results: dict[int, int] = {}

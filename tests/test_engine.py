@@ -41,6 +41,10 @@ _SPECS = {
     "sharded": EngineSpec(engine="sharded", n_shards=5),
     "mesh": EngineSpec(engine="mesh"),
     "mesh_sharded": EngineSpec(engine="mesh", n_shards=4),
+    # host-streamed: store built from source chunks (odd chunk_size on
+    # purpose — chunking must not change anything), CIVS driven one
+    # device_put shard at a time
+    "streamed": EngineSpec(engine="streamed", n_shards=5, chunk_size=37),
 }
 
 
@@ -57,11 +61,12 @@ def reference(blobs, cfg):
 
 @pytest.mark.parametrize("exhaustive", [False, True])
 @pytest.mark.parametrize("engine", ["replicated", "sharded", "mesh",
-                                    "mesh_sharded"])
+                                    "mesh_sharded", "streamed"])
 def test_engine_parity(blobs, cfg, reference, engine, exhaustive):
     """The tentpole acceptance: every EngineSpec yields identical labels on
     tie-free data — same rng stream, same seeding statistics, exact
-    retrieval parity, one shared reducer."""
+    retrieval parity, one shared reducer. n_rounds equality doubles as the
+    rng-consumption check (one split per round, all engines in lockstep)."""
     ref = reference[exhaustive]
     res = fit(blobs.points,
               cfg._replace(exhaustive=exhaustive, spec=_SPECS[engine]),

@@ -1,0 +1,172 @@
+"""The DataSource ingestion surface: source primitives, memmap round-trips
+through `fit`, the streamed predict path, the strided k-estimation fix, and
+the bulk `ClusterService.assign_source` entry.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.affinity import estimate_k
+from repro.core.alid import ALIDConfig, EngineSpec
+from repro.core.engine import fit
+from repro.core.source import (ChunkedSource, InMemorySource, MemmapSource,
+                               as_source, is_data_source, make_source,
+                               strided_sample_indices)
+from repro.data import auto_lsh_params, make_blobs_with_noise
+from repro.serve.cluster_service import ClusterService
+from repro.utils import avg_f1_score
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return make_blobs_with_noise(n_clusters=4, cluster_size=25, n_noise=80,
+                                 d=10, seed=7, overlap_pairs=0)
+
+
+@pytest.fixture(scope="module")
+def cfg(blobs):
+    lshp = auto_lsh_params(blobs.points, probe=128)
+    return ALIDConfig(a_cap=48, delta=48, lsh=lshp, seeds_per_round=16,
+                      max_rounds=20,
+                      spec=EngineSpec(engine="streamed", n_shards=5,
+                                      chunk_size=37))
+
+
+@pytest.fixture(scope="module")
+def streamed(blobs, cfg):
+    return fit(blobs.points, cfg, jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------- source primitives --
+def test_in_memory_source_chunks_and_sample(blobs):
+    src = InMemorySource(blobs.points)
+    assert (src.n, src.dim) == blobs.points.shape
+    np.testing.assert_array_equal(src.get_chunk(30, 50),
+                                  blobs.points[30:80])
+    idx = np.array([5, 99, 5, 0])
+    np.testing.assert_array_equal(src.sample(idx), blobs.points[idx])
+
+
+def test_chunked_source_matches_concatenation(blobs):
+    pts = blobs.points
+    blocks = [pts[:37], pts[37:90], pts[90:]]
+    src = ChunkedSource(blocks)
+    assert src.n == pts.shape[0] and src.dim == pts.shape[1]
+    # chunk requests spanning block boundaries
+    np.testing.assert_array_equal(src.get_chunk(30, 70), pts[30:100])
+    np.testing.assert_array_equal(src.get_chunk(0, src.n), pts)
+    idx = np.array([0, 36, 37, 89, 90, src.n - 1, 12])
+    np.testing.assert_array_equal(src.sample(idx), pts[idx])
+
+
+def test_memmap_source_reads_file(tmp_path, blobs):
+    path = tmp_path / "pts.npy"
+    np.save(path, blobs.points)
+    src = MemmapSource(path)
+    assert (src.n, src.dim) == blobs.points.shape
+    np.testing.assert_array_equal(src.get_chunk(10, 40),
+                                  blobs.points[10:50])
+    np.testing.assert_array_equal(src.sample(np.array([170, 3])),
+                                  blobs.points[[170, 3]])
+
+
+def test_as_source_and_make_source(tmp_path, blobs):
+    assert is_data_source(InMemorySource(blobs.points))
+    assert not is_data_source(blobs.points)
+    src = as_source(blobs.points)
+    assert isinstance(src, InMemorySource)
+    assert as_source(src) is src
+    path = tmp_path / "pts.npy"
+    np.save(path, blobs.points)
+    assert isinstance(make_source(f"memmap:{path}"), MemmapSource)
+    assert isinstance(make_source(str(path)), MemmapSource)  # bare path
+    assert isinstance(make_source(f"npy:{path}"), InMemorySource)
+    with pytest.raises(ValueError, match="unknown source spec"):
+        make_source("s3:bucket/pts.npy")
+
+
+def test_strided_sample_indices_cover_range():
+    idx = strided_sample_indices(1000, 100)
+    assert idx.shape == (100,) and idx[0] == 0 and idx[-1] == 990
+    assert np.unique(idx).size == 100
+    # n <= sample degenerates to all rows
+    np.testing.assert_array_equal(strided_sample_indices(7, 512),
+                                  np.arange(7))
+
+
+# ----------------------------------------------------- estimate_k sampling --
+def test_estimate_k_not_prefix_biased():
+    """Prefix rows form one tight blob (the situation after spatial sorting):
+    a prefix sample sees only tiny NN distances and inflates k; the strided
+    sample must see the whole range. Also pins the engine contract: k from
+    the full array == k from the `strided_sample_indices` subsample."""
+    rng = np.random.default_rng(0)
+    tight = rng.normal(0.0, 1e-3, size=(100, 8))        # one dense corner...
+    spread = rng.uniform(-50.0, 50.0, size=(4900, 8))   # ...of a wide cloud
+    pts = np.concatenate([tight, spread]).astype(np.float32)
+    k = float(estimate_k(jnp.asarray(pts)))
+    idx = strided_sample_indices(pts.shape[0], 512)
+    k_sub = float(estimate_k(jnp.asarray(pts[idx])))
+    assert k == pytest.approx(k_sub, rel=1e-5)
+    k_prefix = float(estimate_k(jnp.asarray(pts[:512])))  # the old v[:m] pick
+    assert k < 0.5 * k_prefix
+
+
+# --------------------------------------------------- fit over real sources --
+def test_fit_memmap_round_trip(tmp_path, blobs, cfg, streamed):
+    """ISSUE acceptance: fit from an on-disk npy == fit from the in-memory
+    array, streamed engine on both sides."""
+    path = tmp_path / "pts.npy"
+    np.save(path, blobs.points)
+    res = fit(MemmapSource(path), cfg, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(res.labels, streamed.labels)
+    np.testing.assert_allclose(res.densities, streamed.densities)
+    assert res.n_rounds == streamed.n_rounds
+
+
+def test_fit_chunked_source(blobs, cfg, streamed):
+    blocks = [blobs.points[:50], blobs.points[50:130], blobs.points[130:]]
+    res = fit(ChunkedSource(blocks), cfg, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(res.labels, streamed.labels)
+
+
+# ------------------------------------------------------- streamed predict --
+def test_predict_streaming_batches_match(blobs, streamed):
+    assert streamed.n_clusters > 0
+    q = blobs.points[:57]
+    ref = streamed.predict(q)
+    np.testing.assert_array_equal(streamed.predict(q, batch_size=13), ref)
+    np.testing.assert_array_equal(
+        streamed.predict(InMemorySource(q), batch_size=13), ref)
+    np.testing.assert_array_equal(
+        streamed.predict(ChunkedSource([q[:20], q[20:]])), ref)
+
+
+def test_cluster_service_assign_source(blobs, streamed):
+    svc = ClusterService(streamed, batch_slots=8)
+    labels = svc.assign_source(InMemorySource(blobs.points), batch_size=32)
+    np.testing.assert_array_equal(labels, streamed.predict(blobs.points))
+
+
+# ------------------------------------------------------------ end to end --
+@pytest.mark.slow
+def test_streamed_end_to_end_memmap(tmp_path):
+    """Multi-minute full-size case: a memmapped dataset clustered by the
+    streamed engine recovers the planted clusters."""
+    spec = make_blobs_with_noise(n_clusters=8, cluster_size=40, n_noise=400,
+                                 d=16, seed=3, overlap_pairs=0)
+    path = tmp_path / "big.npy"
+    np.save(path, spec.points)
+    cfg = ALIDConfig(a_cap=96, delta=96,
+                     lsh=auto_lsh_params(spec.points, probe=192),
+                     seeds_per_round=16, max_rounds=40,
+                     spec=EngineSpec(engine="streamed", n_shards=8))
+    res = fit(MemmapSource(path), cfg, jax.random.PRNGKey(0))
+    assert res.n_clusters >= 6
+    assert avg_f1_score(spec.labels, res.labels) > 0.8
+    # streamed labeling of the same memmap agrees with in-memory predict
+    np.testing.assert_array_equal(
+        res.predict(MemmapSource(path), batch_size=256),
+        res.predict(spec.points))
