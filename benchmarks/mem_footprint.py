@@ -13,11 +13,17 @@ streamed engine reads the dataset from an on-disk memmap, so neither host
 nor device ever holds the full payload. Results print as csv lines and land
 in BENCH_mem_footprint.json, including the acceptance inequality
 
-    streamed_peak - common_overhead  <  2·shard_bytes + cap_terms
+    streamed_peak  <  (prefetch_depth + 1)·shard_bytes + cap_terms + common
 
-(common_overhead = the O(n) int32/bool metadata every engine carries:
-bucket sizes + active mask; cap_terms = the seeds_per_round·cap·d working
-state of one round batch, with a small constant for the carry/psi buffers).
+— with the shard pipeline (DESIGN.md §3.3) up to `prefetch_depth` bundles
+sit device-resident in the slot ring while one is being consumed, so the
+PR 3 "2·shard" term generalizes to (depth+1)·shard; the scratch memmap and
+the LRU payload cache are HOST memory and never appear in live device
+bytes. Both the pipelined default and the synchronous (depth=0, two-slot)
+path are measured. (common = the O(n) int32/bool metadata every engine
+carries: bucket sizes + active mask; cap_terms = the seeds_per_round·cap·d
+working state of one round batch, with a small constant for the carry/psi
+buffers.)
 """
 
 from __future__ import annotations
@@ -111,6 +117,9 @@ def main(quick: bool = True):
     out = {"n": n, "d": d, "n_shards": n_shards, "shard_bytes": shard_bytes,
            "cap_terms": cap_terms, "common_overhead": common, "engines": {}}
 
+    prefetch_depth = EngineSpec._field_defaults["prefetch_depth"]
+    out["prefetch_depth"] = int(prefetch_depth)
+
     with tempfile.TemporaryDirectory() as td:
         path = os.path.join(td, "points.npy")
         np.save(path, spec.points)
@@ -118,6 +127,11 @@ def main(quick: bool = True):
             ("replicated", spec.points, EngineSpec(engine="replicated")),
             ("sharded", spec.points,
              EngineSpec(engine="sharded", n_shards=n_shards)),
+            # PR 3 synchronous streaming: two alternating slots, no pipeline
+            ("streamed_sync", MemmapSource(path),
+             EngineSpec(engine="streamed", n_shards=n_shards,
+                        cache_bytes=0, prefetch_depth=0, scratch_dir=None)),
+            # pipelined default: scratch + LRU (host RAM) + depth-k ring
             ("streamed", MemmapSource(path),
              EngineSpec(engine="streamed", n_shards=n_shards)),
         ]
@@ -130,14 +144,19 @@ def main(quick: bool = True):
                      f"peak_bytes={peak};clusters={res.n_clusters}")
 
     streamed_peak = out["engines"]["streamed"]["peak_bytes"]
+    sync_peak = out["engines"]["streamed_sync"]["peak_bytes"]
     replicated_peak = out["engines"]["replicated"]["peak_bytes"]
-    bound = 2 * shard_bytes + cap_terms + common
+    bound = (prefetch_depth + 1) * shard_bytes + cap_terms + common
+    sync_bound = 2 * shard_bytes + cap_terms + common
     out["streamed_bound_bytes"] = int(bound)
     out["streamed_within_bound"] = bool(streamed_peak <= bound)
+    out["streamed_sync_bound_bytes"] = int(sync_bound)
+    out["streamed_sync_within_bound"] = bool(sync_peak <= sync_bound)
     out["streamed_vs_replicated"] = (float(streamed_peak / replicated_peak)
                                      if replicated_peak else None)
     csv_line("mem/streamed_bound", float(bound),
              f"within={out['streamed_within_bound']};"
+             f"sync_within={out['streamed_sync_within_bound']};"
              f"vs_replicated={out['streamed_vs_replicated']:.3f}")
     with open("BENCH_mem_footprint.json", "w") as f:
         json.dump(out, f, indent=2)

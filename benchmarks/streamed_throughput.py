@@ -1,0 +1,135 @@
+"""Wall-clock throughput of the streamed engine: synchronous vs pipelined.
+
+This is the perf counterpart of `benchmarks/mem_footprint.py` — PR 3 bought
+the O(shard + cap) device-memory bound, this benchmark measures what the
+shard pipeline (DESIGN.md §3.3: scratch persistence + host LRU + prefetching
+reader + round-level seed overlap) buys back in speed. Both arms cluster the
+SAME on-disk memmap with the SAME config and PRNG key:
+
+  * sync      — the PR 3 path: no scratch, no cache, no reader thread; every
+                routed shard of every CIVS iteration re-gathers its rows
+                from the source (a scattered fancy-index memmap read);
+  * pipelined — scratch memmap written once at build, bounded LRU of hot
+                bundles, depth-k prefetch ring, speculative next-round seed
+                fetch.
+
+Reported per arm: end-to-end wall seconds (fit, store build included),
+points/sec (n / wall), and the pipeline stage breakdown (read / put /
+compute / wait seconds plus cache + source counters). The pipeline is
+determinism-preserving, so the run asserts labels are BIT-IDENTICAL across
+arms — the speedup is free of any semantic drift. Results land in
+BENCH_streamed_throughput.json; `--quick` shrinks the dataset to a CI-sized
+smoke (the tier-1 workflow runs it and checks the JSON).
+
+A compile warmup with the same shapes runs before either timed arm, so
+neither pays jit tracing and the comparison is pure steady-state.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.core.alid import ALIDConfig, EngineSpec
+from repro.core.engine import fit, make_engine
+from repro.core.source import CountingSource, MemmapSource
+from repro.data import auto_lsh_params, make_blobs_with_noise
+
+
+def _run_arm(path: str, cfg: ALIDConfig, espec: EngineSpec) -> dict:
+    source = CountingSource(MemmapSource(path))
+    engine = make_engine(espec)
+    try:
+        t0 = time.perf_counter()
+        res = fit(source, cfg._replace(spec=espec), jax.random.PRNGKey(0),
+                  engine=engine)
+        wall = time.perf_counter() - t0
+        stages = engine.stats.snapshot()
+    finally:
+        engine.close()
+    return {
+        "wall_s": wall,
+        "points_per_sec": source.n / wall,
+        "n_rounds": int(res.n_rounds),
+        "n_clusters": int(res.n_clusters),
+        "source_sample_rows": int(source.sample_rows),
+        "source_chunk_rows": int(source.chunk_rows),
+        "stages": stages,
+        "labels": res.labels,
+    }
+
+
+def main(quick: bool = True) -> dict:
+    # fetch-heavy geometry, the regime the pipeline targets: SIFT-like wide
+    # rows (d=128, the paper's descriptor workload) over few large shards
+    # make the per-iteration re-gather the sync arm's dominant cost. jax's
+    # async dispatch already hides host reads behind QUEUED device work, so
+    # the pipeline's edge only shows once fetch volume outweighs the XLA
+    # stream — hence light per-seed compute (small batch/probe/t_lid) and
+    # enough rounds to amortize the (identical) store build.
+    if quick:
+        n_clusters, cluster_size, n_noise, d = 6, 40, 5760, 48
+        n_shards, seeds, rounds = 4, 4, 6
+    else:
+        n_clusters, cluster_size, n_noise, d = 12, 40, 159520, 128
+        n_shards, seeds, rounds = 4, 4, 20
+    spec = make_blobs_with_noise(n_clusters=n_clusters,
+                                 cluster_size=cluster_size, n_noise=n_noise,
+                                 d=d, seed=2)
+    n = spec.points.shape[0]
+    lshp = auto_lsh_params(spec.points, probe=8)
+    cfg = ALIDConfig(a_cap=64, delta=64, t_lid=16, c_outer=8, lsh=lshp,
+                     seeds_per_round=seeds, max_rounds=rounds)
+
+    sync_spec = EngineSpec(engine="streamed", n_shards=n_shards,
+                           cache_bytes=0, prefetch_depth=0, scratch_dir=None)
+    pipe_spec = EngineSpec(engine="streamed", n_shards=n_shards)
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "points.npy")
+        np.save(path, spec.points)
+        # warmup: compile every jitted stage at the benchmark shapes (the
+        # shapes depend only on (n, d, shards, cfg), shared by both arms)
+        _run_arm(path, cfg._replace(max_rounds=1), sync_spec)
+        sync = _run_arm(path, cfg, sync_spec)
+        pipe = _run_arm(path, cfg, pipe_spec)
+
+    identical = bool(np.array_equal(sync.pop("labels"),
+                                    pipe.pop("labels")))
+    out = {
+        "n": n, "d": d, "n_shards": n_shards,
+        "seeds_per_round": seeds, "max_rounds": rounds, "quick": quick,
+        "cache_bytes": pipe_spec.cache_bytes,
+        "prefetch_depth": pipe_spec.prefetch_depth,
+        "sync": sync,
+        "pipelined": pipe,
+        "speedup": sync["wall_s"] / pipe["wall_s"],
+        "labels_identical": identical,
+    }
+    csv_line("streamed_tput/sync", sync["wall_s"] * 1e6,
+             f"pps={sync['points_per_sec']:.0f};"
+             f"read_s={sync['stages']['read_s']:.3f}")
+    csv_line("streamed_tput/pipelined", pipe["wall_s"] * 1e6,
+             f"pps={pipe['points_per_sec']:.0f};"
+             f"read_s={pipe['stages']['read_s']:.3f};"
+             f"cache_hits={pipe['stages']['cache_hits']}")
+    csv_line("streamed_tput/speedup", out["speedup"] * 1e6,
+             f"x={out['speedup']:.2f};labels_identical={identical}")
+    with open("BENCH_streamed_throughput.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    main(quick=not args.full)

@@ -30,6 +30,7 @@ from repro.core.affinity import affinity_block, estimate_k
 from repro.core.civs import civs_update
 from repro.core.lid import (LIDState, density, init_state, init_state_from,
                             lid_solve)
+from repro.core.pipeline import DEFAULT_CACHE_BYTES
 from repro.core.roi import estimate_roi
 from repro.core.store import ShardedStore, take
 from repro.distributed.context import MeshContext
@@ -56,11 +57,28 @@ class EngineSpec(NamedTuple):
               mesh over all visible devices).
     chunk_size: host chunk length for source-chunked builds (streamed store
               construction, chunked k estimation); 0 = default (32768 rows).
+    cache_bytes: host LRU budget for streamed shard bundles (points + keys
+              + perm + global map; core.pipeline.ShardBundleCache). Default
+              256 MiB; <= 0 disables the cache (every routed shard re-reads
+              scratch/source).
+    prefetch_depth: slot-ring depth of the streamed engine's background
+              reader thread — disk read + H2D upload of shard s+1 overlap
+              device compute of shard s; peak device bytes grow to
+              (depth+1)·shard (DESIGN.md §3.3). 0 = the synchronous PR 3
+              double-buffer path (no reader thread).
+    scratch_dir: where the streamed store persists its spatially-reordered
+              shard payloads at build ("" = system temp dir), turning
+              steady-state shard reads into sequential slab reads; None
+              disables scratch persistence (shards re-gather from the
+              source). The file is unlinked by the engine's close().
     """
     engine: str = "replicated"
     n_shards: int = 0
     mesh_ctx: Optional[MeshContext] = None
     chunk_size: int = 0
+    cache_bytes: int = DEFAULT_CACHE_BYTES
+    prefetch_depth: int = 2
+    scratch_dir: Optional[str] = ""
 
 
 class ALIDConfig(NamedTuple):

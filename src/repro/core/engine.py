@@ -43,6 +43,7 @@ suite over every engine x exhaustive mode).
 from __future__ import annotations
 
 import functools
+import time
 from typing import Optional, Protocol
 
 import jax
@@ -58,6 +59,7 @@ from repro.core.civs import (_ROUTE_EPS, compact_support, finalize_retrieval,
                              init_retrieval_carry, rebuild_support,
                              retrieve_chunk)
 from repro.core.lid import init_state_from, lid_solve
+from repro.core.pipeline import PipelineStats, ShardPipeline
 from repro.core.roi import estimate_roi
 from repro.core.source import (DataSource, as_source, strided_sample_indices)
 from repro.core.store import (build_store, build_store_streamed,
@@ -171,6 +173,10 @@ class Engine(Protocol):
                   seed_valid: jax.Array
                   ) -> tuple[jax.Array, jax.Array, SeedResult]: ...
 
+    def prepare_round(self, seeds: jax.Array) -> None: ...
+
+    def close(self) -> None: ...
+
     @property
     def bucket_sizes(self) -> jax.Array: ...
 
@@ -221,6 +227,17 @@ class _EngineBase:
     def bucket_sizes(self) -> jax.Array:
         assert self._bsizes is not None, "call build() first"
         return self._bsizes
+
+    def prepare_round(self, seeds) -> None:
+        """Optional round-level overlap hook: the driver announces the seed
+        batch it SPECULATES the next round will use while the current round
+        still runs. Default: nothing to prepare (device-resident engines
+        gather seed rows inside jit)."""
+
+    def close(self) -> None:
+        """Release engine-held resources (device slots, caches, scratch
+        files, worker threads). The `fit` driver calls this on the way out;
+        default engines hold nothing that outlives their arrays."""
 
     def _reduce(self, results: SeedResult, seed_valid: jax.Array):
         claimed, best_row, _ = resolve_claims(
@@ -430,32 +447,46 @@ def _seed_results_batch(state, c, overflow, cfg: ALIDConfig):
 class StreamedEngine(_EngineBase):
     """Host-streamed out-of-core engine: the dataset stays behind a
     DataSource, the store (`core.store.StreamedStore`) is built shard-by-
-    shard from source chunks, and the ALID outer loop runs at HOST level —
-    each CIVS pass device_puts one ROUTED shard at a time into a double-
-    buffered device slot (device_put is async, so shard s+1 uploads while
-    shard s probes). Peak device memory is O(shard + cap) — two in-flight
-    shard bundles plus the per-seed LID/candidate state — and peak host
-    memory is O(chunk) for memmap sources (DESIGN.md §3.3).
+    shard from source chunks, and the ALID outer loop runs at HOST level.
+    Shard I/O goes through `core.pipeline.ShardPipeline`: payloads persist
+    once to a scratch memmap at build, hot bundles sit in a bounded host
+    LRU, and (prefetch_depth >= 1) a background reader walks each CIVS
+    pass's ROUTED shard list ahead of the compute loop, device_put-ing
+    bundles into a depth-k slot ring so disk read + H2D upload of shard s+1
+    overlap the device compute of shard s. Peak device memory is
+    O((prefetch_depth+1)·shard + cap); peak host memory adds the LRU budget
+    (DESIGN.md §3.3).
 
     The PRNG schedule (one split for the store build, one per round for
     seeding), the seeding statistics (exact global bucket sizes), the chunk
     math (`civs.retrieve_chunk` — shared with ShardedEngine), and the claim
-    reducer are all identical to the other engines, so on tie-free data the
-    streamed engine produces the same labels as the replicated one and joins
-    the parity suite."""
+    reducer are all identical to the other engines — and the pipeline
+    consumes shards in routed order regardless of arrival — so on tie-free
+    data the streamed engine produces the same labels as the replicated one
+    (pipelined or not) and stays in the parity suite."""
 
     def __init__(self, spec: EngineSpec):
         super().__init__()
         self.spec = spec
-        self._slots: list = [None, None]
-        self._slot = 0
+        self.stats = PipelineStats()
+        self._pipeline: Optional[ShardPipeline] = None
+        self._store = None
+        self._executor = None               # round-overlap seed prefetch
+        # pending (seeds_np, Future[device rows]) pairs, newest last. Two
+        # can be in flight at once: round r's rows (ready to consume) and
+        # round r+1's speculation (announced before round r runs)
+        self._prepared: list = []
 
     def build_source(self, source, cfg, rng):
         self._setup_k(source, cfg)
         self._store = build_store_streamed(
             source, cfg.lsh, rng, n_shards=max(1, self.spec.n_shards or 8),
-            chunk_size=self.spec.chunk_size)
+            chunk_size=self.spec.chunk_size,
+            scratch_dir=self.spec.scratch_dir)
         self._bsizes = jnp.asarray(self._store.bucket_sizes)
+        self._pipeline = ShardPipeline(
+            self._store, cache_bytes=self.spec.cache_bytes,
+            prefetch_depth=self.spec.prefetch_depth, stats=self.stats)
 
     def build(self, points, cfg, rng):
         self.build_source(as_source(np.asarray(points)), cfg, rng)
@@ -464,14 +495,57 @@ class StreamedEngine(_EngineBase):
         results = self._alid_batch(active, seeds)
         return self._reduce(results, seed_valid)
 
+    def prepare_round(self, seeds) -> None:
+        """Round-level overlap: fetch the NEXT round's seed rows (a
+        scattered source read) and upload them in the background while the
+        CURRENT round's shards stream. The driver calls this with its
+        speculative seed batch; `_alid_batch` consumes the prepared rows
+        only when the batch it receives matches bit-for-bit, so a resampled
+        round simply falls back to the inline fetch."""
+        if self._executor is None:
+            import concurrent.futures
+            self._executor = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="alid-seed-prefetch")
+        seeds_np = np.array(seeds, copy=True)
+
+        def fetch(idx=seeds_np):
+            rows = np.asarray(self._store.source.sample(idx), np.float32)
+            return jax.device_put(rows)
+
+        self._prepared.append((seeds_np, self._executor.submit(fetch)))
+        del self._prepared[:-2]     # current round + one speculation ahead
+
+    def close(self) -> None:
+        """Release everything fit left device-live or on disk: the slot
+        ring / double buffer and host LRU, the seed-prefetch executor, and
+        the scratch memmap (unlinked). Invoked by the `fit` driver on the
+        way out; idempotent."""
+        self._prepared.clear()
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+        if self._pipeline is not None:
+            self._pipeline.release()
+        store = self._store
+        if store is not None and store.scratch is not None:
+            store.scratch.close()
+
     # -- internals ---------------------------------------------------------
-    def _put_shard(self, bundle):
-        """device_put into the next of TWO slots; overwriting a slot drops
-        the 2-generations-old buffer, so at most two shard bundles are ever
-        device-live while upload and probe overlap."""
-        self._slot ^= 1
-        self._slots[self._slot] = jax.device_put(bundle)
-        return self._slots[self._slot]
+    def _seed_rows(self, seeds) -> jax.Array:
+        seeds_np = np.asarray(seeds)
+        for i, (prep_np, fut) in enumerate(self._prepared):
+            if np.array_equal(prep_np, seeds_np):
+                # drop older entries too — rounds only move forward, so an
+                # unconsumed elder (an invalidated speculation) cannot match
+                # any future batch
+                self._prepared = self._prepared[i + 1:]
+                self.stats.add("seed_prefetch_hits")
+                return fut.result()
+        # no match: an invalidated speculation (the driver resampled and
+        # re-prepared, so its stale sibling simply ages out of the list)
+        # or the very first round, which nothing preceded
+        self.stats.add("seed_prefetch_misses")
+        return jnp.asarray(self._store.source.sample(seeds_np), jnp.float32)
 
     def _route(self, roi, p: float) -> np.ndarray:
         """(B, S) ball-intersection routing matrix, evaluated on HOST from
@@ -494,9 +568,7 @@ class StreamedEngine(_EngineBase):
         b, d = int(seeds.shape[0]), store.dim
         probe = cfg.lsh.probe
 
-        seed_rows = jnp.asarray(store.source.sample(np.asarray(seeds)),
-                                jnp.float32)
-        state = _init_states_batch(seed_rows, seeds, cfg.cap)
+        state = _init_states_batch(self._seed_rows(seeds), seeds, cfg.cap)
         c_np = np.ones((b,), np.int64)
         done_np = np.zeros((b,), bool)
         overflow_np = np.zeros((b,), bool)
@@ -510,35 +582,46 @@ class StreamedEngine(_EngineBase):
             sup_idx, sup_v, sup_x, sup_mask, ovf = _civs_begin_batch(
                 new_state, cfg)
 
-            # global probe windows, carved on host from the host tables
             keys, salts = _hash_queries_batch(sup_v, store.proj, store.bias,
                                               cfg.lsh.seg_len)
-            keys_np, salts_np = np.asarray(keys), np.asarray(salts)
-            n_tables, q = keys_np.shape[1], keys_np.shape[2]
-            st, lo, hi = shard_bucket_windows_host(
-                store.sorted_keys,
-                keys_np.transpose(1, 0, 2).reshape(n_tables, b * q),
-                salts_np.transpose(1, 0, 2).reshape(n_tables, b * q), probe)
-            # (S, L, B*q) -> (S, B, L, q)
-            st = st.reshape(-1, n_tables, b, q).transpose(0, 2, 1, 3)
-            lo = lo.reshape(-1, n_tables, b, q).transpose(0, 2, 1, 3)
-            hi = hi.reshape(-1, n_tables, b, q).transpose(0, 2, 1, 3)
-
             # frozen lanes' results are discarded by the lane select below,
             # so don't let their stale ROIs force shard uploads
             touch = self._route(roi, cfg.p) & lane_np[:, None]
+            routed = np.flatnonzero(touch.any(axis=0))
             carry = _init_carry_batch(b, cfg.delta, d)
-            for s in range(store.n_shards):
-                if not bool(touch[:, s].any()):
-                    continue
-                pts_s, sk, pm, gmap = self._put_shard(
-                    (store.shard_points(s), store.sorted_keys[s],
-                     store.perm[s], store.global_idx[s]))
-                carry = _stream_chunk_batch(
-                    carry, pts_s, sk, pm, gmap, keys, jnp.asarray(st[s]),
-                    jnp.asarray(lo[s]), jnp.asarray(hi[s]), roi.center,
-                    roi.radius, active, sup_idx, sup_mask,
-                    jnp.asarray(touch[:, s]), probe, cfg.p)
+            if routed.size:
+                # global probe windows, carved on host from the host tables
+                # — ROUTED shards only: an untouched shard holds no point
+                # inside any lane's ROI ball, so its bucket members could
+                # never survive the ROI filter; spending the probe budget on
+                # the reachable shards alone keeps min(bucket∩routed, probe)
+                # candidates and skips the S−T unused searchsorted passes
+                keys_np, salts_np = np.asarray(keys), np.asarray(salts)
+                n_tables, q = keys_np.shape[1], keys_np.shape[2]
+                st, lo, hi = shard_bucket_windows_host(
+                    store.sorted_keys[routed],
+                    keys_np.transpose(1, 0, 2).reshape(n_tables, b * q),
+                    salts_np.transpose(1, 0, 2).reshape(n_tables, b * q),
+                    probe)
+                # (T, L, B*q) -> (T, B, L, q)
+                st = st.reshape(-1, n_tables, b, q).transpose(0, 2, 1, 3)
+                lo = lo.reshape(-1, n_tables, b, q).transpose(0, 2, 1, 3)
+                hi = hi.reshape(-1, n_tables, b, q).transpose(0, 2, 1, 3)
+
+                # stream the routed shards through the pipeline (prefetched
+                # bundles arrive in routed order, so the carry folds are
+                # identical to the synchronous path)
+                for pos, s, bundle in self._pipeline.stream(routed):
+                    pts_s, sk, pm, gmap = bundle
+                    t0 = time.perf_counter()
+                    carry = _stream_chunk_batch(
+                        carry, pts_s, sk, pm, gmap, keys,
+                        jnp.asarray(st[pos]), jnp.asarray(lo[pos]),
+                        jnp.asarray(hi[pos]), roi.center, roi.radius,
+                        active, sup_idx, sup_mask,
+                        jnp.asarray(touch[:, s]), probe, cfg.p)
+                    self.stats.add("compute_s", time.perf_counter() - t0)
+                del pts_s, sk, pm, gmap, bundle, st, lo, hi
             psi_idx, psi_valid, psi_v, n_cand = _finalize_batch(carry)
 
             res = _civs_finish_batch(new_state, sup_idx, sup_v, sup_x,
@@ -584,7 +667,8 @@ def make_engine(spec: EngineSpec) -> Engine:
 
 # ------------------------------------------------------------- the driver --
 def fit(data, cfg: ALIDConfig = ALIDConfig(),
-        rng: Optional[jax.Array] = None) -> Clustering:
+        rng: Optional[jax.Array] = None,
+        engine: Optional[Engine] = None) -> Clustering:
     """Dominant-cluster detection: THE host peel-reduce loop (Sec. 4.4).
 
     `data` is a `DataSource` (InMemorySource / MemmapSource / ChunkedSource,
@@ -600,6 +684,23 @@ def fit(data, cfg: ALIDConfig = ALIDConfig(),
     consume rng identically, so on tie-free data the engine choice does not
     change the clustering.
 
+    Round-level overlap: while round r runs, the driver SPECULATIVELY
+    samples round r+1's seeds against `active` minus round r's seed batch
+    and announces them to the engine (`prepare_round` — the streamed engine
+    fetches + uploads the seed rows in the background while its shards
+    stream). The speculation is exact, not approximate: peeling only ever
+    LOWERS seed-sampling scores (deactivated points drop to -inf), so the
+    Gumbel top-k is unchanged unless one of the speculated winners itself
+    got claimed — which the driver checks, resampling with the true active
+    mask (same PRNG key) on a hit. Labels are therefore bit-identical to
+    the sequential schedule on every engine.
+
+    Pass a pre-made `engine` to keep it alive after fit returns (e.g. to
+    read `StreamedEngine.stats`) — the caller then owns `engine.close()`;
+    otherwise the driver builds one from `cfg.spec` and closes it on the
+    way out (releasing the streamed engine's device slots, cache, scratch
+    file, and worker threads).
+
     Returns a `Clustering` carrying per-cluster weighted supports, so the
     result can `predict` new points and serialize without the dataset.
     """
@@ -607,11 +708,27 @@ def fit(data, cfg: ALIDConfig = ALIDConfig(),
     rng = jax.random.PRNGKey(0) if rng is None else rng
     n = source.n
 
-    engine = make_engine(cfg.spec)
+    owns_engine = engine is None
+    if engine is None:
+        engine = make_engine(cfg.spec)
     rng, kb = jax.random.split(rng)
     engine.build_source(source, cfg, kb)
+    try:
+        return _fit_loop(source, cfg, rng, engine)
+    finally:
+        if owns_engine:
+            engine.close()
 
-    active = jnp.ones((n,), bool)
+
+def _fit_loop(source: DataSource, cfg: ALIDConfig, rng: jax.Array,
+              engine: Engine) -> Clustering:
+    n = source.n
+    bsizes = engine.bucket_sizes
+    bsizes_np = np.asarray(bsizes)
+    stats = getattr(engine, "stats", None)
+
+    active_np = np.ones((n,), bool)
+    active = jnp.asarray(active_np)
     labels = np.full((n,), -1, np.int32)
     densities: list[float] = []
     sup_idx: list[np.ndarray] = []
@@ -620,14 +737,30 @@ def fit(data, cfg: ALIDConfig = ALIDConfig(),
     next_label = 0
     rounds = 0
 
+    rng, kr = jax.random.split(rng)
+    seeds, seed_valid, any_eligible = _sample_seeds(active, bsizes, kr, cfg)
+    any_eligible = bool(any_eligible)
+
     for rounds in range(1, cfg.max_rounds + 1):
-        rng, kr = jax.random.split(rng)
-        seeds, seed_valid, any_eligible = _sample_seeds(
-            active, engine.bucket_sizes, kr, cfg)
         if not bool(jnp.any(seed_valid)):
             break
-        if not cfg.exhaustive and not bool(any_eligible):
+        if not cfg.exhaustive and not any_eligible:
             break
+        seeds_np = np.asarray(seeds)
+        valid_np = np.asarray(seed_valid)
+        peeled_seeds = seeds_np[valid_np]
+
+        # ---- speculative round r+1 sampling, launched BEFORE round r runs:
+        # the seeds themselves are guaranteed to peel, claims are not known
+        # yet — validated against the actual claims below
+        rng, kr_next = jax.random.split(rng)
+        spec_active = active.at[jnp.asarray(peeled_seeds)].set(False)
+        spec_seeds, spec_valid, _ = _sample_seeds(spec_active, bsizes,
+                                                  kr_next, cfg)
+        engine.prepare_round(spec_seeds)
+        if stats is not None:
+            stats.add("rounds_speculated")
+
         claimed, best_row, results = engine.run_round(active, seeds,
                                                       seed_valid)
 
@@ -636,6 +769,29 @@ def fit(data, cfg: ALIDConfig = ALIDConfig(),
         dens_np = np.asarray(results.density)
         member_np = np.asarray(results.member_idx)
         weight_np = np.asarray(results.member_w)
+        # peel everything claimed + the seeds themselves (guarantees
+        # progress); done FIRST so next round's seeds finalize — and the
+        # engine's background seed fetch keeps running — while the label
+        # bookkeeping below touches the source
+        new_inactive = claimed_np.copy()
+        new_inactive[peeled_seeds] = True
+        active_np &= ~new_inactive
+        active = jnp.asarray(active_np)
+
+        # ---- validate the speculation: exact unless a speculated winner
+        # was claimed away (scores elsewhere only dropped to -inf, which
+        # cannot change a Gumbel top-k it did not win)
+        spec_seeds_np = np.asarray(spec_seeds)
+        if claimed_np[spec_seeds_np[np.asarray(spec_valid)]].any():
+            spec_seeds, spec_valid, _ = _sample_seeds(active, bsizes,
+                                                      kr_next, cfg)
+            engine.prepare_round(spec_seeds)
+            if stats is not None:
+                stats.add("rounds_resampled")
+        seeds, seed_valid = spec_seeds, spec_valid
+        any_eligible = bool((active_np
+                             & (bsizes_np > cfg.min_bucket)).any())
+
         # Assign labels for winning rows that clear the density threshold —
         # ONE segment pass (stable argsort groups claimed points by winning
         # row; np.unique yields the rows in ascending order, matching the
@@ -662,12 +818,7 @@ def fit(data, cfg: ALIDConfig = ALIDConfig(),
                 source.sample(np.clip(midx, 0, n - 1)), np.float32)
                 * valid[:, None])
         next_label += int(keep.sum())
-        # peel everything claimed + the seeds themselves (guarantees progress)
-        seeds_np = np.asarray(seeds)[np.asarray(seed_valid)]
-        new_inactive = claimed_np.copy()
-        new_inactive[seeds_np] = True
-        active = active & jnp.asarray(~new_inactive)
-        if not bool(jnp.any(active)):
+        if not active_np.any():
             break
 
     cap, d = cfg.cap, source.dim

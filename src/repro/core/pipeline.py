@@ -1,0 +1,342 @@
+"""Shard pipeline — the I/O subsystem behind the streamed engine.
+
+PR 3's StreamedEngine bounded device memory (O(shard + cap)) but left the
+host loop fully synchronous: every routed shard of every CIVS iteration
+re-gathered its rows from the DataSource (a scattered fancy-index read for
+memmap sources), and nothing overlapped the device compute. This module
+supplies the three layers that hide that I/O, mirroring how local-clustering
+systems hide graph access behind computation — an ALID instance's ROI only
+ever touches a handful of shards, which is exactly what makes a small cache
+and a short prefetch ring effective:
+
+  * ScratchShards   — the spatially-reordered shard payloads written ONCE at
+                      build time to a scratch memmap, so a steady-state shard
+                      read is one sequential (cap, d) slab instead of a
+                      scattered per-row gather from the source;
+  * ShardBundleCache— a bounded host LRU of shard bundles (points +
+                      sorted_keys + perm + global_idx). Hot shards — the
+                      ones every ROI intersects — skip disk entirely. Only
+                      the points slab owns memory; the three metadata leaves
+                      are zero-copy views of the StreamedStore arrays, so
+                      the budget is charged for points bytes only;
+  * ShardPipeline   — fetch orchestration (cache -> scratch -> source) plus
+                      a background READER thread that walks the routed shard
+                      list, pulls bundles and `device_put`s them into a
+                      depth-k slot ring, so the disk read + H2D upload of
+                      shard s+1 overlap the device compute of shard s.
+
+Determinism contract: shards are CONSUMED in routed order regardless of
+arrival order (the ring is a FIFO fed in routed order), bundles are
+bit-identical whichever tier served them (the scratch slab and the cache
+entry hold exactly the bytes `store.shard_points` would re-gather), and the
+window math is shared — so the pipelined engine's labels are bit-identical
+to the synchronous path and the engine stays in the parity suite
+(tests/test_pipeline.py).
+
+Device-memory bound: at most `prefetch_depth` bundles sit in the ring while
+one is being consumed, so peak device bytes are
+(prefetch_depth + 1) * shard_bytes + the O(cap) per-seed state — verified by
+`benchmarks/mem_footprint.py`; `prefetch_depth=0` falls back to the PR 3
+two-slot synchronous rotation.
+"""
+
+from __future__ import annotations
+
+import os
+import queue
+import tempfile
+import threading
+import time
+from collections import OrderedDict
+from typing import Iterable, Iterator, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["PipelineStats", "ScratchShards", "ShardBundleCache",
+           "ShardPipeline", "DEFAULT_CACHE_BYTES"]
+
+DEFAULT_CACHE_BYTES = 256 * 2**20          # 256 MiB of hot shard payloads
+
+
+class PipelineStats:
+    """Per-engine counters for the read / put / compute stage breakdown.
+
+    Stage seconds are HOST-SIDE times, accumulated where the work is issued:
+    `read_s` on the host fetch (cache/scratch/source — synchronous, so this
+    is true read time), `put_s` around `jax.device_put`, `compute_s` around
+    the engine's chunk-fold call, and `wait_s` on the consumer side of the
+    ring (time the compute loop spent starved — the I/O-bound indicator).
+    Caveat: device_put and jitted calls are ASYNC dispatches, so put_s /
+    compute_s measure issue cost, not device occupancy — the device-bound
+    share of an engine run is wall − read_s − put_s (the XLA stream drains
+    behind the host loop's sync points). With the prefetch thread on,
+    read_s + put_s accrue CONCURRENTLY with the main loop, so read_s
+    shrinking to ~0 while wall drops is the signature of successful overlap.
+    """
+
+    _FIELDS = ("read_s", "put_s", "compute_s", "wait_s", "cache_hits",
+               "cache_misses", "scratch_reads", "source_reads",
+               "shards_streamed", "seed_prefetch_hits", "seed_prefetch_misses",
+               "rounds_speculated", "rounds_resampled")
+
+    def __init__(self) -> None:
+        for f in self._FIELDS:
+            setattr(self, f, 0.0 if f.endswith("_s") else 0)
+        self._lock = threading.Lock()
+
+    def add(self, field: str, amount=1) -> None:
+        with self._lock:
+            setattr(self, field, getattr(self, field) + amount)
+
+    def snapshot(self) -> dict:
+        return {f: (float(v) if isinstance(v := getattr(self, f), float)
+                    else int(v)) for f in self._FIELDS}
+
+    def report(self) -> str:
+        s = self.snapshot()
+        return ("pipeline stages: "
+                f"read={s['read_s']:.3f}s put={s['put_s']:.3f}s "
+                f"compute={s['compute_s']:.3f}s wait={s['wait_s']:.3f}s | "
+                f"shards={s['shards_streamed']} "
+                f"cache={s['cache_hits']}/{s['cache_hits'] + s['cache_misses']}"
+                f" hit | reads: scratch={s['scratch_reads']} "
+                f"source={s['source_reads']} | seed-prefetch "
+                f"{s['seed_prefetch_hits']}/{s['seed_prefetch_hits'] + s['seed_prefetch_misses']}"
+                f" hit, rounds speculated={s['rounds_speculated']} "
+                f"resampled={s['rounds_resampled']}")
+
+
+class ScratchShards:
+    """(S, cap, d) f32 scratch memmap of the spatially-reordered payloads.
+
+    `build_store_streamed` writes each shard's rows exactly once (zero-padded
+    to cap, the same bytes `shard_points` would re-gather), after which a
+    shard read is one contiguous slab — sequential disk I/O instead of a
+    scattered per-row gather through the source. The file is unlinked by
+    `close()` (invoked from the engine's teardown).
+    """
+
+    def __init__(self, path: str, mm: np.memmap):
+        self.path = path
+        self._mm = mm
+
+    @classmethod
+    def create(cls, n_shards: int, cap: int, dim: int,
+               scratch_dir: str = "") -> "ScratchShards":
+        """Open a fresh zero-filled scratch file. Empty `scratch_dir` uses
+        the system temp dir; the file name is unique per store build."""
+        directory = scratch_dir or None
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+        fd, path = tempfile.mkstemp(suffix=".npy", prefix="alid_scratch_",
+                                    dir=directory)
+        os.close(fd)
+        mm = np.lib.format.open_memmap(path, mode="w+", dtype=np.float32,
+                                       shape=(n_shards, cap, dim))
+        return cls(path, mm)
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self._mm.shape)) * 4
+
+    def write(self, s: int, rows: np.ndarray) -> None:
+        self._mm[s, :rows.shape[0]] = rows
+
+    def read(self, s: int) -> np.ndarray:
+        """One sequential (cap, d) slab read, returned as an OWNED array so
+        callers (the LRU, device_put) never hold views into the file."""
+        return np.array(self._mm[s], np.float32)
+
+    def flush(self) -> None:
+        self._mm.flush()
+
+    def close(self) -> None:
+        """Drop the mapping and unlink the backing file (idempotent)."""
+        if self._mm is not None:
+            del self._mm
+            self._mm = None
+        if self.path is not None:
+            try:
+                os.unlink(self.path)
+            except OSError:
+                pass
+            self.path = None
+
+
+class ShardBundleCache:
+    """Bounded host LRU of shard bundles keyed by shard id.
+
+    A bundle is the 4-tuple (points, sorted_keys, perm, global_idx) exactly
+    as the engine device_puts it. Only `points` owns bytes (the metadata
+    leaves are views of the store's resident arrays), so the budget charges
+    points bytes; an entry larger than the whole budget is simply never
+    cached (the forced-eviction degenerate the tests pin). Hits return the
+    SAME arrays that were stored — bit-identical by construction.
+    """
+
+    def __init__(self, budget_bytes: int):
+        self.budget = int(budget_bytes)
+        self._entries: OrderedDict[int, tuple] = OrderedDict()
+        self._bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def get(self, s: int):
+        bundle = self._entries.get(s)
+        if bundle is not None:
+            self._entries.move_to_end(s)
+        return bundle
+
+    def put(self, s: int, bundle: tuple) -> None:
+        cost = int(bundle[0].nbytes)
+        if cost > self.budget:
+            return                          # one shard exceeds the budget
+        if s in self._entries:
+            self._entries.move_to_end(s)
+            return
+        while self._bytes + cost > self.budget and self._entries:
+            _, old = self._entries.popitem(last=False)
+            self._bytes -= int(old[0].nbytes)
+        self._entries[s] = bundle
+        self._bytes += cost
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._bytes = 0
+
+
+class _ProducerError:
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+class ShardPipeline:
+    """Fetch + prefetch orchestrator over a StreamedStore-shaped object.
+
+    `store` must expose `shard_points(s)` (scratch-aware), plus the host
+    metadata arrays `sorted_keys` / `perm` / `global_idx` with a leading S
+    axis. `stream(routed)` yields `(pos, s, device_bundle)` strictly in
+    routed order:
+
+      * prefetch_depth == 0 — the PR 3 synchronous path: fetch + device_put
+        inline into two alternating slots (upload of s+1 still overlaps the
+        probe of s via device_put's async copy);
+      * prefetch_depth >= 1 — a reader thread walks the routed list, pulls
+        bundles (cache -> scratch -> source) and device_puts them into a
+        bounded FIFO ring of `prefetch_depth` slots; the consumer blocks on
+        the ring head, so consumption order — and therefore every carry
+        fold — is identical to the synchronous path.
+    """
+
+    def __init__(self, store, cache_bytes: int = 0, prefetch_depth: int = 0,
+                 stats: Optional[PipelineStats] = None):
+        self.store = store
+        self.depth = max(0, int(prefetch_depth))
+        self.cache = (ShardBundleCache(cache_bytes)
+                      if cache_bytes > 0 else None)
+        self.stats = stats if stats is not None else PipelineStats()
+        self._slots: list = [None, None]    # sync-mode double buffer
+        self._slot = 0
+
+    # -- host fetch tier: cache -> scratch -> source -----------------------
+    def fetch_bundle(self, s: int) -> tuple:
+        stats = self.stats
+        if self.cache is not None:
+            bundle = self.cache.get(s)
+            if bundle is not None:
+                stats.add("cache_hits")
+                return bundle
+            stats.add("cache_misses")
+        t0 = time.perf_counter()
+        pts = self.store.shard_points(int(s))
+        stats.add("read_s", time.perf_counter() - t0)
+        stats.add("scratch_reads" if getattr(self.store, "scratch", None)
+                  is not None else "source_reads")
+        bundle = (pts, self.store.sorted_keys[s], self.store.perm[s],
+                  self.store.global_idx[s])
+        if self.cache is not None:
+            self.cache.put(s, bundle)
+        return bundle
+
+    def _device_put(self, bundle: tuple):
+        t0 = time.perf_counter()
+        dev = jax.device_put(bundle)
+        self.stats.add("put_s", time.perf_counter() - t0)
+        return dev
+
+    # -- streaming ---------------------------------------------------------
+    def stream(self, routed: Iterable[int]) -> Iterator[tuple]:
+        routed = [int(s) for s in routed]
+        self.stats.add("shards_streamed", len(routed))
+        if self.depth <= 0:
+            yield from self._stream_sync(routed)
+        else:
+            yield from self._stream_prefetched(routed)
+
+    def _stream_sync(self, routed) -> Iterator[tuple]:
+        for pos, s in enumerate(routed):
+            dev = self._device_put(self.fetch_bundle(s))
+            # two alternating slots: overwriting drops the 2-generations-old
+            # buffer, so at most two bundles are device-live (PR 3 behavior)
+            self._slot ^= 1
+            self._slots[self._slot] = dev
+            yield pos, s, dev
+
+    def _stream_prefetched(self, routed) -> Iterator[tuple]:
+        # the ring itself is unbounded; `slots` bounds how many bundles are
+        # produced-but-unconsumed. The reader RESERVES a slot before it
+        # fetches or uploads, so at most `depth` bundles sit device-live in
+        # the ring while the consumer holds one more — the documented
+        # (depth+1)·shard peak, with no transient (depth+2)-th bundle parked
+        # in the reader's hand behind a full queue
+        ring: queue.Queue = queue.Queue()
+        slots = threading.Semaphore(self.depth)
+        cancel = threading.Event()
+
+        def acquire_cancellable() -> bool:
+            # bounded wait that gives up if the consumer is gone — otherwise
+            # an aborted compute loop would leave the reader blocked forever
+            while not cancel.is_set():
+                if slots.acquire(timeout=0.05):
+                    return True
+            return False
+
+        def producer():
+            try:
+                for s in routed:
+                    if not acquire_cancellable():
+                        return
+                    ring.put(self._device_put(self.fetch_bundle(s)))
+            except BaseException as exc:    # surfaced on the consumer side
+                ring.put(_ProducerError(exc))
+
+        reader = threading.Thread(target=producer, daemon=True,
+                                  name="alid-shard-prefetch")
+        reader.start()
+        try:
+            for pos, s in enumerate(routed):
+                t0 = time.perf_counter()
+                item = ring.get()
+                self.stats.add("wait_s", time.perf_counter() - t0)
+                if isinstance(item, _ProducerError):
+                    raise item.exc
+                # the popped bundle is now the consumer-held "+1"; free its
+                # ring slot so the reader can run one further ahead
+                slots.release()
+                yield pos, s, item
+        finally:
+            cancel.set()
+            reader.join()
+
+    def release(self) -> None:
+        """Drop every reference the pipeline holds (device slots + host
+        cache) — the engine's close() path."""
+        self._slots = [None, None]
+        if self.cache is not None:
+            self.cache.clear()

@@ -38,8 +38,11 @@ class DataSource(Protocol):
     """Narrow row-access interface the engines ingest from.
 
     Implementations return host numpy float32 arrays; they must be cheap to
-    call repeatedly with small requests (the streamed engine re-reads shard
-    rows every time a shard is routed).
+    call repeatedly with small requests, and READS MUST BE THREAD-SAFE: the
+    streamed engine's shard pipeline issues `sample` calls from its prefetch
+    reader and seed-prefetch worker concurrently with the fit loop
+    (`core.pipeline`). Stateless numpy/memmap-backed sources qualify as-is;
+    a source wrapping a stateful loader must add its own locking.
     """
 
     @property
@@ -168,6 +171,50 @@ class ChunkedSource(_SourceBase):
             blk = np.asarray(self._blocks[int(b)], np.float32)
             out[m] = blk[idx[m] - int(self._starts[int(b)])]
         return out
+
+
+class CountingSource(_SourceBase):
+    """Transparent DataSource wrapper that counts rows served per entry
+    point — the observability hook behind the shard-pipeline tests and the
+    throughput benchmark (e.g. "with the LRU + scratch on, steady-state
+    `sample` traffic is zero"). Forwards bytes untouched, so wrapping can
+    never change a clustering; counters are lock-protected because the
+    streamed engine reads sources from several threads."""
+
+    def __init__(self, inner: DataSource):
+        import threading
+        self.inner = inner
+        self._lock = threading.Lock()
+        self.chunk_calls = 0
+        self.chunk_rows = 0
+        self.sample_calls = 0
+        self.sample_rows = 0
+
+    @property
+    def n(self) -> int:
+        return self.inner.n
+
+    @property
+    def dim(self) -> int:
+        return self.inner.dim
+
+    def get_chunk(self, start: int, size: int) -> np.ndarray:
+        out = self.inner.get_chunk(start, size)
+        with self._lock:
+            self.chunk_calls += 1
+            self.chunk_rows += int(out.shape[0])
+        return out
+
+    def sample(self, idx: np.ndarray) -> np.ndarray:
+        with self._lock:
+            self.sample_calls += 1
+            self.sample_rows += int(np.asarray(idx).shape[0])
+        return self.inner.sample(idx)
+
+    def reset(self) -> None:
+        with self._lock:
+            self.chunk_calls = self.chunk_rows = 0
+            self.sample_calls = self.sample_rows = 0
 
 
 def iter_source_chunks(source: DataSource, chunk_size: int):

@@ -27,12 +27,13 @@ the sharding keeps out of the working set (DESIGN.md has the full model).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.pipeline import ScratchShards
 from repro.core.source import DataSource, iter_source_chunks
 from repro.lsh.pstable import (LSHParams, ShardedLSHTables, build_lsh_sharded,
                                hash_chunk, make_projections)
@@ -147,6 +148,10 @@ class StreamedStore(NamedTuple):
     bucket_sizes: np.ndarray  # (n,) int32 global table-0 bucket sizes
     proj: jax.Array          # (L, m, d) — device, shared with query hashing
     bias: jax.Array          # (L, m)
+    # scratch persistence of the reordered payloads (core.pipeline): written
+    # once at build, turns steady-state shard reads into sequential slab
+    # reads; None = re-gather from the source on every fetch (PR 3 behavior)
+    scratch: Optional[ScratchShards] = None
 
     @property
     def n_shards(self) -> int:
@@ -168,9 +173,16 @@ class StreamedStore(NamedTuple):
         return int(self.valid[s].sum())
 
     def shard_points(self, s: int) -> np.ndarray:
-        """Fetch one shard's point rows from the source, zero-padded to
-        (shard_cap, d). Peak host memory O(shard) — for a MemmapSource only
-        the touched file rows are paged in."""
+        """Fetch one shard's point rows, zero-padded to (shard_cap, d).
+
+        With scratch persistence this is ONE sequential slab read of the
+        reordered payload; without it, rows re-gather from the source (a
+        scattered fancy-index read for memmap sources — the spatial order is
+        a near-random permutation of file order). Either way the bytes are
+        identical, so downstream retrieval cannot tell the tiers apart.
+        Peak host memory O(shard)."""
+        if self.scratch is not None:
+            return self.scratch.read(s)
         m = self.shard_count(s)
         out = np.zeros((self.shard_cap, self.dim), np.float32)
         out[:m] = self.source.sample(self.global_idx[s, :m])
@@ -179,7 +191,8 @@ class StreamedStore(NamedTuple):
 
 def build_store_streamed(source: DataSource, params: LSHParams,
                          rng: jax.Array, n_shards: int = 8,
-                         chunk_size: int = 0) -> StreamedStore:
+                         chunk_size: int = 0,
+                         scratch_dir: Optional[str] = None) -> StreamedStore:
     """Build the streamed store shard-by-shard from source chunks.
 
     Two passes, neither materializing more than O(chunk) rows on device or
@@ -196,6 +209,13 @@ def build_store_streamed(source: DataSource, params: LSHParams,
          rehash), stable-sort the per-table keys into shard-local sorted
          tables, and take the bounding ball (f64 centroid + exact max
          radius, so the routing test stays conservative).
+
+    `scratch_dir` (non-None) additionally persists each shard's reordered
+    rows — already in hand for the bounding ball — to a scratch memmap
+    (`core.pipeline.ScratchShards`, "" = system temp dir): the one
+    spatially-scattered source gather the build pays anyway buys sequential
+    slab reads for every later `shard_points` call. The scratch bytes are
+    exactly the re-gather bytes, so persistence cannot change retrieval.
 
     Consumes `rng` exactly like `build_lsh`/`build_store` (one
     `make_projections`), preserving the engine-parity PRNG schedule; the
@@ -227,11 +247,16 @@ def build_store_streamed(source: DataSource, params: LSHParams,
     centers = np.zeros((n_shards, d), np.float64)
     radii = np.zeros((n_shards,), np.float64)
 
+    scratch = (ScratchShards.create(n_shards, cap, d, scratch_dir)
+               if scratch_dir is not None else None)
+
     slot = np.arange(cap)
     for s in range(n_shards):
         idx = order[s * cap:min((s + 1) * cap, n)]
         m = idx.shape[0]
         rows = np.asarray(source.sample(idx), np.float32)
+        if scratch is not None:
+            scratch.write(s, rows)
         global_idx[s, :m] = idx
         valid[s, :m] = True
         kfull = np.full((n_tables, cap), _PAD_KEY_NP, np.uint32)
@@ -253,11 +278,13 @@ def build_store_streamed(source: DataSource, params: LSHParams,
         bsizes += (np.searchsorted(sk0, keys0, side="right")
                    - np.searchsorted(sk0, keys0, side="left"))
 
+    if scratch is not None:
+        scratch.flush()
     return StreamedStore(source=source, order=order, global_idx=global_idx,
                          valid=valid, sorted_keys=sorted_keys, perm=perm,
                          centers=centers, radii=radii,
                          bucket_sizes=bsizes.astype(np.int32),
-                         proj=proj, bias=bias)
+                         proj=proj, bias=bias, scratch=scratch)
 
 
 @jax.jit

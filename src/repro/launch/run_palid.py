@@ -27,16 +27,26 @@ import time
 import jax
 
 from repro.core.alid import ALIDConfig, EngineSpec
-from repro.core.engine import fit
+from repro.core.engine import fit, make_engine
 from repro.core.source import make_source, strided_sample_indices
 from repro.data import auto_lsh_params, make_blobs_with_noise
 from repro.distributed.context import MeshContext
 from repro.utils import avg_f1_score
 
 
-def engine_spec(engine: str, devices: int, shards: int,
-                chunk_size: int) -> EngineSpec:
-    """Resolve --engine (+ legacy --devices/--shards) into an EngineSpec."""
+def engine_spec(engine: str, devices: int, shards: int, chunk_size: int,
+                cache_bytes: int = EngineSpec._field_defaults["cache_bytes"],
+                prefetch_depth: int = (
+                    EngineSpec._field_defaults["prefetch_depth"]),
+                scratch_dir: str = "") -> EngineSpec:
+    """Resolve --engine (+ legacy --devices/--shards) into an EngineSpec.
+
+    The pipeline knobs only matter for engine="streamed": `cache_bytes`
+    bounds the host LRU of shard bundles, `prefetch_depth` sizes the
+    background reader's slot ring (0 = synchronous double-buffer), and
+    `scratch_dir` places the build-time scratch memmap ("" = system temp
+    dir, "none" disables persistence)."""
+    scratch: str | None = None if scratch_dir == "none" else scratch_dir
     if engine == "auto":
         if devices > 1:
             engine = "mesh"
@@ -53,7 +63,8 @@ def engine_spec(engine: str, devices: int, shards: int,
         # 0 lets StreamedEngine apply its own default (8) — forcing 1 here
         # would stream the whole dataset as a single O(n·d) bundle
         return EngineSpec(engine="streamed", n_shards=shards,
-                          chunk_size=chunk_size)
+                          chunk_size=chunk_size, cache_bytes=cache_bytes,
+                          prefetch_depth=prefetch_depth, scratch_dir=scratch)
     if engine == "sharded":
         return EngineSpec(engine="sharded", n_shards=max(1, shards),
                           chunk_size=chunk_size)
@@ -84,6 +95,24 @@ def main():
     ap.add_argument("--chunk-size", type=int, default=0,
                     help="host chunk rows for source-chunked builds "
                          "(0 = default)")
+    ap.add_argument("--cache-bytes", type=int,
+                    default=EngineSpec._field_defaults["cache_bytes"],
+                    help="streamed engine: host LRU budget for shard "
+                         "bundles in bytes (<=0 disables the cache)")
+    ap.add_argument("--prefetch-depth", type=int,
+                    default=EngineSpec._field_defaults["prefetch_depth"],
+                    help="streamed engine: slot-ring depth of the "
+                         "background shard reader (0 = synchronous "
+                         "double-buffer, no reader thread)")
+    ap.add_argument("--scratch-dir", default="",
+                    help="streamed engine: directory for the build-time "
+                         "scratch memmap of reordered shard payloads "
+                         "('' = system temp dir, 'none' = disable "
+                         "persistence)")
+    ap.add_argument("--profile", action="store_true",
+                    help="print the pipeline stage report (read/put/"
+                         "compute/wait seconds, cache + prefetch hit "
+                         "rates) after the fit")
     ap.add_argument("--a-cap", type=int, default=0,
                     help="support capacity override (0 = auto)")
     ap.add_argument("--seeds-per-round", type=int, default=32)
@@ -112,17 +141,30 @@ def main():
                      seeds_per_round=args.seeds_per_round,
                      max_rounds=args.rounds,
                      spec=engine_spec(args.engine, args.devices, args.shards,
-                                      args.chunk_size))
-    t0 = time.time()
-    res = fit(source, cfg, jax.random.PRNGKey(0))
-    dt = time.time() - t0
-    n_members = int((res.labels >= 0).sum())
-    line = (f"[palid] n={n} d={d} engine={cfg.spec.engine} "
-            f"devices={max(args.devices, 1)} shards={args.shards} "
-            f"time={dt:.2f}s clusters={res.n_clusters} members={n_members}")
-    if spec is not None:
-        line += f" AVG-F={avg_f1_score(spec.labels, res.labels):.3f}"
-    print(line)
+                                      args.chunk_size, args.cache_bytes,
+                                      args.prefetch_depth, args.scratch_dir))
+    # build the engine here (instead of letting fit do it) so --profile can
+    # read its stage counters after the run; we own close() in exchange
+    engine = make_engine(cfg.spec)
+    try:
+        t0 = time.time()
+        res = fit(source, cfg, jax.random.PRNGKey(0), engine=engine)
+        dt = time.time() - t0
+        n_members = int((res.labels >= 0).sum())
+        line = (f"[palid] n={n} d={d} engine={cfg.spec.engine} "
+                f"devices={max(args.devices, 1)} shards={args.shards} "
+                f"time={dt:.2f}s clusters={res.n_clusters} "
+                f"members={n_members}")
+        if spec is not None:
+            line += f" AVG-F={avg_f1_score(spec.labels, res.labels):.3f}"
+        print(line)
+        if args.profile:
+            stats = getattr(engine, "stats", None)
+            print(f"[palid] {stats.report()}" if stats is not None else
+                  f"[palid] --profile: engine {cfg.spec.engine!r} has no "
+                  "pipeline stats (streamed only)")
+    finally:
+        engine.close()
 
 
 if __name__ == "__main__":

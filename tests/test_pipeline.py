@@ -1,0 +1,227 @@
+"""The shard pipeline behind StreamedEngine: pipelined/sync/replicated label
+parity, scratch-slab fidelity, LRU semantics (bit-identical hits, bounded
+eviction, forced-eviction exactness), prefetch-ring degenerate depths, the
+steady-state I/O contract, and engine teardown.
+"""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.alid import ALIDConfig, EngineSpec
+from repro.core.engine import StreamedEngine, fit, make_engine
+from repro.core.pipeline import ScratchShards, ShardBundleCache, ShardPipeline
+from repro.core.source import CountingSource, InMemorySource
+from repro.core.store import build_store_streamed
+from repro.data import auto_lsh_params, make_blobs_with_noise
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return make_blobs_with_noise(n_clusters=4, cluster_size=25, n_noise=80,
+                                 d=10, seed=7, overlap_pairs=0)
+
+
+@pytest.fixture(scope="module")
+def cfg(blobs):
+    # probe >= max bucket -> retrieval exhaustive, all engines bit-compatible
+    lshp = auto_lsh_params(blobs.points, probe=128)
+    return ALIDConfig(a_cap=48, delta=48, lsh=lshp, seeds_per_round=16,
+                      max_rounds=20)
+
+
+def _sync_spec(**kw):
+    """The PR 3 path: no scratch, no cache, no reader thread."""
+    return EngineSpec(engine="streamed", n_shards=5, cache_bytes=0,
+                      prefetch_depth=0, scratch_dir=None, **kw)
+
+
+@pytest.fixture(scope="module")
+def reference(blobs, cfg):
+    """Replicated + synchronous-streamed baselines (identical by the PR 3
+    parity suite; everything here must match them bit-for-bit)."""
+    rep = fit(blobs.points, cfg, jax.random.PRNGKey(0))
+    sync = fit(blobs.points, cfg._replace(spec=_sync_spec()),
+               jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(rep.labels, sync.labels)
+    assert rep.n_rounds == sync.n_rounds
+    return rep
+
+
+# ------------------------------------------------------------ label parity --
+@pytest.mark.parametrize("espec", [
+    # the pipelined default: scratch + LRU + depth-2 ring
+    EngineSpec(engine="streamed", n_shards=5),
+    # prefetch-depth=1: a one-slot ring must degenerate to sync behavior
+    EngineSpec(engine="streamed", n_shards=5, prefetch_depth=1),
+    # deeper ring than shards
+    EngineSpec(engine="streamed", n_shards=5, prefetch_depth=7),
+    # cache without prefetch, prefetch without cache, scratch alone
+    EngineSpec(engine="streamed", n_shards=5, prefetch_depth=0),
+    EngineSpec(engine="streamed", n_shards=5, cache_bytes=0,
+               scratch_dir=None),
+    EngineSpec(engine="streamed", n_shards=5, cache_bytes=0,
+               prefetch_depth=0),
+], ids=["pipelined", "depth1", "depth7", "cache_only", "prefetch_only",
+        "scratch_only"])
+def test_pipeline_parity(blobs, cfg, reference, espec):
+    """Every pipeline configuration yields labels BIT-IDENTICAL to the
+    replicated engine: consumption order is routed order regardless of
+    arrival, and every tier serves the same bytes."""
+    res = fit(blobs.points, cfg._replace(spec=espec), jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(reference.labels, res.labels)
+    np.testing.assert_allclose(reference.densities, res.densities, rtol=1e-6)
+    assert res.n_rounds == reference.n_rounds
+
+
+def test_forced_eviction_exact_labels(blobs, cfg, reference):
+    """cache_bytes smaller than ONE shard: every put is refused, every fetch
+    falls through to scratch — labels must still be exact."""
+    espec = EngineSpec(engine="streamed", n_shards=5, cache_bytes=64)
+    engine = make_engine(espec)
+    res = fit(blobs.points, cfg._replace(spec=espec), jax.random.PRNGKey(0),
+              engine=engine)
+    try:
+        np.testing.assert_array_equal(reference.labels, res.labels)
+        assert engine.stats.cache_hits == 0
+        assert len(engine._pipeline.cache) == 0
+        assert engine.stats.scratch_reads == engine.stats.shards_streamed
+    finally:
+        engine.close()
+
+
+# ------------------------------------------------------- scratch + bundles --
+@pytest.fixture()
+def store(blobs, cfg, tmp_path):
+    src = CountingSource(InMemorySource(blobs.points))
+    st = build_store_streamed(src, cfg.lsh, jax.random.PRNGKey(3),
+                              n_shards=5, scratch_dir=str(tmp_path))
+    yield st
+    st.scratch.close()
+
+
+def test_scratch_slab_matches_source_gather(store):
+    """The persisted slab is byte-for-byte the re-gather `shard_points` would
+    do without scratch — so tier choice can never change retrieval."""
+    for s in range(store.n_shards):
+        m = store.shard_count(s)
+        expect = np.zeros((store.shard_cap, store.dim), np.float32)
+        expect[:m] = store.source.sample(store.global_idx[s, :m])
+        got = store.scratch.read(s)
+        assert got.dtype == np.float32
+        np.testing.assert_array_equal(got, expect)
+        assert got.base is None          # owned copy, not a memmap view
+
+
+def test_lru_hit_is_bit_identical_and_skips_io(store):
+    pipe = ShardPipeline(store, cache_bytes=1 << 30)
+    first = pipe.fetch_bundle(2)
+    src = store.source
+    src.reset()
+    again = pipe.fetch_bundle(2)
+    assert src.sample_calls == 0 and src.chunk_calls == 0
+    assert pipe.stats.cache_hits == 1
+    for a, b in zip(first, again):
+        assert a is b                    # the very same arrays, not copies
+        np.testing.assert_array_equal(a, b)
+
+
+def test_lru_budget_evicts_least_recent(store):
+    shard_nbytes = store.scratch.read(0).nbytes
+    cache = ShardBundleCache(budget_bytes=2 * shard_nbytes)
+    pipe = ShardPipeline(store, cache_bytes=0)
+    for s in (0, 1):
+        cache.put(s, pipe.fetch_bundle(s))
+    assert cache.get(0) is not None      # 0 becomes most-recent
+    cache.put(2, pipe.fetch_bundle(2))   # evicts 1, the least-recent
+    assert cache.get(1) is None
+    assert cache.get(0) is not None and cache.get(2) is not None
+    assert cache.nbytes <= 2 * shard_nbytes
+    # an entry larger than the whole budget is never admitted
+    small = ShardBundleCache(budget_bytes=shard_nbytes - 1)
+    small.put(3, pipe.fetch_bundle(3))
+    assert len(small) == 0
+
+
+def test_prefetch_stream_order_and_bytes(store):
+    """Prefetched streaming yields (pos, shard, device bundle) in routed
+    order with exactly the host bundle's bytes."""
+    pipe = ShardPipeline(store, cache_bytes=0, prefetch_depth=2)
+    routed = [3, 0, 4]
+    seen = []
+    for pos, s, dev in pipe.stream(routed):
+        seen.append((pos, s))
+        np.testing.assert_array_equal(np.asarray(dev[0]),
+                                      pipe.fetch_bundle(s)[0])
+    assert seen == [(0, 3), (1, 0), (2, 4)]
+    assert pipe.stats.shards_streamed == 3
+
+
+def test_prefetch_propagates_reader_errors(store):
+    pipe = ShardPipeline(store, cache_bytes=0, prefetch_depth=2)
+    with pytest.raises(IndexError):
+        list(pipe.stream([0, store.n_shards + 17]))
+
+
+# -------------------------------------------------- steady-state I/O + close --
+def test_steady_state_reads_source_only_at_build(blobs, cfg):
+    """With scratch + LRU, the source is touched for the BUILD (hash chunks
+    + one reordered gather) and per-round seed/support rows — never for
+    steady-state shard re-reads (those hit cache/scratch)."""
+    src = CountingSource(InMemorySource(blobs.points))
+    espec = EngineSpec(engine="streamed", n_shards=5)
+    engine = make_engine(espec)
+    try:
+        res = fit(src, cfg._replace(spec=espec), jax.random.PRNGKey(0),
+                  engine=engine)
+        assert res.n_clusters > 0
+        assert engine.stats.source_reads == 0
+        assert engine.stats.scratch_reads <= 5   # at most once per shard
+        assert engine.stats.cache_hits > 0
+        # build gathers each row once (shard build) + k-sample; steady-state
+        # sample traffic is only seed rows + support gathers, a small
+        # multiple of rounds * cap — far below one full re-read per round
+        n = blobs.points.shape[0]
+        build_rows = n + 512
+        assert src.sample_rows - build_rows < res.n_rounds * 3 * cfg.cap
+        # round-level overlap engaged: every EXECUTED round speculated the
+        # next one (n_rounds also counts a final round that broke at the
+        # loop top without running), and every round after the first
+        # consumed its prefetched seed rows (or was resampled exactly)
+        st = engine.stats
+        executed = st.seed_prefetch_hits + st.seed_prefetch_misses
+        assert res.n_rounds - 1 <= executed <= res.n_rounds
+        assert st.rounds_speculated == executed
+        assert st.seed_prefetch_misses <= 1 + st.rounds_resampled
+    finally:
+        engine.close()
+
+
+def test_close_releases_device_state_and_scratch(blobs, cfg, tmp_path):
+    espec = EngineSpec(engine="streamed", n_shards=5,
+                       scratch_dir=str(tmp_path))
+    engine = make_engine(espec)
+    fit(blobs.points, cfg._replace(spec=espec), jax.random.PRNGKey(0),
+        engine=engine)
+    scratch_path = engine._store.scratch.path
+    assert os.path.exists(scratch_path)
+    assert len(engine._pipeline.cache) > 0
+    engine.close()
+    assert not os.path.exists(scratch_path)      # scratch memmap unlinked
+    assert engine._pipeline._slots == [None, None]
+    assert len(engine._pipeline.cache) == 0
+    assert engine._prepared == [] and engine._executor is None
+    engine.close()                               # idempotent
+
+
+def test_fit_closes_its_own_engine(blobs, cfg, monkeypatch):
+    closed = []
+    orig = StreamedEngine.close
+    monkeypatch.setattr(StreamedEngine, "close",
+                        lambda self: (closed.append(True), orig(self)))
+    fit(blobs.points,
+        cfg._replace(spec=EngineSpec(engine="streamed", n_shards=5)),
+        jax.random.PRNGKey(0))
+    assert closed == [True]
