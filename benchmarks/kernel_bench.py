@@ -1,10 +1,18 @@
 """Kernel micro-benchmarks. On this CPU container the production dispatch is
 the jnp reference path (what XLA lowers for the dry-run); Pallas interpret
 mode is a correctness vehicle, not a speed one — wall numbers here are the
-CPU ref path, per call, after jit warmup."""
+CPU ref path, per call, after jit warmup.
+
+The fused-op section times each PR-5 fused kernel (ref path) against the
+historical UNFUSED composition it replaced (separate affinity block + mask
+multiplies + matvec, separate distance + mask + score sweeps, per-cluster
+vmapped scores + host argmax) and writes the pairs to BENCH_kernels.json —
+on CPU the win is fewer XLA sweeps / no (cap, cap) intermediate; on TPU the
+same call sites dispatch the single-VMEM-pass Pallas kernels."""
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -24,8 +32,99 @@ def timeit(fn, *args, iters=5):
     return (time.time() - t0) / iters * 1e6
 
 
+def _bench_fused(rng) -> dict:
+    """Fused vs unfused ref timings for the three PR-5 ops -> dict."""
+    out = {}
+    cap, a_cap, d = 192, 64, 64
+    k = jnp.float32(0.4)
+
+    # --- Ax refresh: masked affinity x weights matvec ----------------------
+    v = jnp.asarray(rng.normal(size=(cap, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 4096, cap), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, cap).astype(bool))
+    w = jnp.where(mask, jnp.asarray(rng.uniform(0, 1, cap), jnp.float32), 0.0)
+
+    def unfused_mv(v, idx, mask, w):
+        a = ref.affinity_ref(v, v, k)
+        a = jnp.where(idx[:, None] == idx[None, :], 0.0, a)
+        a = a * (mask[:, None] & mask[None, :])
+        return a @ w
+
+    def fused_mv(v, idx, mask, w):
+        return jnp.where(mask, ref.affinity_matvec_ref(v, idx, v, idx, w, k),
+                         0.0)
+
+    us_u = timeit(jax.jit(unfused_mv), v, idx, mask, w, iters=100)
+    us_f = timeit(jax.jit(fused_mv), v, idx, mask, w, iters=100)
+    csv_line("kernel/affinity_matvec_192_unfused", us_u, "cap=192,d=64")
+    csv_line("kernel/affinity_matvec_192_fused", us_f,
+             f"speedup={us_u / us_f:.2f}x")
+    out["affinity_matvec"] = {"shape": [cap, d], "unfused_us": us_u,
+                              "fused_us": us_f}
+
+    # --- CIVS ROI filter ---------------------------------------------------
+    n_cand = a_cap * 4 * 16                       # a_cap * L * probe
+    vc = jnp.asarray(rng.normal(size=(n_cand, d)), jnp.float32)
+    cen = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    val = jnp.asarray(rng.integers(0, 2, n_cand).astype(bool))
+    rad = jnp.float32(0.8 * np.sqrt(d))
+
+    def unfused_roi(vc, cen, val):
+        dist = jnp.sqrt(jnp.maximum(
+            jnp.sum((vc - cen[None, :]) ** 2, -1), 0.0))
+        ok = val & (dist <= rad)
+        return dist, ok, jnp.where(ok, -dist, -jnp.inf)
+
+    def fused_roi(vc, cen, val):
+        return ref.roi_filter_ref(vc, cen, rad, val)
+
+    us_u = timeit(jax.jit(unfused_roi), vc, cen, val, iters=100)
+    us_f = timeit(jax.jit(fused_roi), vc, cen, val, iters=100)
+    csv_line("kernel/roi_filter_4k_unfused", us_u, f"cands={n_cand},d=64")
+    csv_line("kernel/roi_filter_4k_fused", us_f,
+             f"speedup={us_u / us_f:.2f}x")
+    out["roi_filter"] = {"shape": [n_cand, d], "unfused_us": us_u,
+                         "fused_us": us_f}
+
+    # --- batched assignment ------------------------------------------------
+    n_clusters, m = 32, 4096
+    sup_v = jnp.asarray(rng.normal(size=(n_clusters, a_cap, d)), jnp.float32)
+    sup_w = jnp.asarray(rng.uniform(0, 1, (n_clusters, a_cap)), jnp.float32)
+    dens = jnp.asarray(rng.uniform(0.5, 1.0, n_clusters), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    thr = jnp.float32(0.5)
+
+    def unfused_assign(q, sup_v, sup_w, dens):
+        scores = jax.vmap(lambda v, wc: ref.affinity_ref(q, v, k) @ wc,
+                          in_axes=(0, 0), out_axes=1)(sup_v, sup_w)
+        best = jnp.argmax(scores, axis=1)
+        ok = jnp.max(scores, axis=1) >= thr * dens[best]
+        return jnp.where(ok, best, -1).astype(jnp.int32)
+
+    sup_flat = sup_v.reshape(-1, d)
+    w_mat = ref.assign_weight_matrix(sup_w)
+
+    def fused_assign(q, sup_flat, w_mat, dens):
+        return ref.assign_ref(q, sup_flat, w_mat, dens, k, thr)[0]
+
+    us_u = timeit(jax.jit(unfused_assign), q, sup_v, sup_w, dens)
+    us_f = timeit(jax.jit(fused_assign), q, sup_flat, w_mat, dens)
+    csv_line("kernel/assign_4kx32_unfused", us_u,
+             f"q={m},C={n_clusters},A={a_cap}")
+    csv_line("kernel/assign_4kx32_fused", us_f,
+             f"speedup={us_u / us_f:.2f}x")
+    out["assign"] = {"shape": [m, n_clusters, a_cap, d], "unfused_us": us_u,
+                     "fused_us": us_f}
+    return out
+
+
 def main(quick: bool = True):
     rng = np.random.default_rng(0)
+
+    fused = _bench_fused(rng)
+    with open("BENCH_kernels.json", "w") as f:
+        json.dump({"backend": "ref (CPU container; Pallas on TPU)",
+                   "fused_ops": fused}, f, indent=2)
 
     q = jnp.asarray(rng.normal(size=(1024, 64)), jnp.float32)
     c = jnp.asarray(rng.normal(size=(4096, 64)), jnp.float32)

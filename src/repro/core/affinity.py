@@ -3,9 +3,11 @@
 This is the paper's Eq. (1). Everything in ALID is phrased against this kernel;
 the triangle-inequality ROI bounds (Prop. 1) require a *norm*, so p >= 1.
 
-The blocked pairwise computation here is the pure-jnp reference; the Pallas TPU
-kernel (repro.kernels.affinity) implements the same contraction with explicit
-VMEM tiling and is validated against these functions.
+These functions are thin facades over `repro.kernels.ops` — the single
+compute backend (ref / Pallas / interpret, selected by the `backend` knob or
+the environment). The distance contraction itself exists exactly once, in
+`repro.kernels.ref.pairwise_distance_ref`, shared with the CIVS ROI filter
+and the Pallas kernels' tile math.
 """
 
 from __future__ import annotations
@@ -16,30 +18,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-def pairwise_distance(q: jax.Array, c: jax.Array, p: float = 2.0) -> jax.Array:
-    """||q_i - c_j||_p for q:(m,d), c:(n,d) -> (m,n).
-
-    p=2 uses the MXU-friendly expansion |q|^2 + |c|^2 - 2 q c^T; other p fall
-    back to broadcast abs-power (O(m*n*d) memory — small blocks only).
-    """
-    if p == 2.0:
-        q2 = jnp.sum(q * q, axis=-1)[:, None]
-        c2 = jnp.sum(c * c, axis=-1)[None, :]
-        d2 = q2 + c2 - 2.0 * (q @ c.T)
-        return jnp.sqrt(jnp.maximum(d2, 0.0))
-    diff = jnp.abs(q[:, None, :] - c[None, :, :])
-    return jnp.power(jnp.sum(jnp.power(diff, p), axis=-1), 1.0 / p)
+from repro.kernels import ops
 
 
-def affinity_block(q: jax.Array, c: jax.Array, k: float, p: float = 2.0) -> jax.Array:
+def pairwise_distance(q: jax.Array, c: jax.Array, p: float = 2.0,
+                      backend: str = "auto") -> jax.Array:
+    """||q_i - c_j||_p for q:(m,d), c:(n,d) -> (m,n) f32 (see
+    `kernels.ref.pairwise_distance_ref` — THE distance implementation)."""
+    return ops.pairwise_distance(q, c, p, backend=backend)
+
+
+def affinity_block(q: jax.Array, c: jax.Array, k: float, p: float = 2.0,
+                   backend: str = "auto") -> jax.Array:
     """exp(-k * ||q_i - c_j||_p) for blocks, WITHOUT diagonal zeroing."""
-    return jnp.exp(-k * pairwise_distance(q, c, p))
+    return ops.affinity(q, c, k, p, backend=backend)
 
 
-def affinity_matrix(v: jax.Array, k: float, p: float = 2.0) -> jax.Array:
+def affinity_matrix(v: jax.Array, k: float, p: float = 2.0,
+                    backend: str = "auto") -> jax.Array:
     """Full affinity matrix with zero diagonal (baselines only: O(n^2))."""
-    a = affinity_block(v, v, k, p)
+    a = affinity_block(v, v, k, p, backend)
     return a * (1.0 - jnp.eye(v.shape[0], dtype=a.dtype))
 
 
@@ -50,19 +48,21 @@ def affinity_column(
     i: jax.Array,
     k: float,
     p: float = 2.0,
+    backend: str = "auto",
 ) -> jax.Array:
     """A[beta, i]: affinity of one vertex v_i against the local range.
 
     Zeroes the self entry (a_ii = 0) by comparing global indices, which also
     handles duplicate occurrences defensively.
     """
-    col = affinity_block(v_beta, v_i[None, :], k, p)[:, 0]
+    col = affinity_block(v_beta, v_i[None, :], k, p, backend)[:, 0]
     return jnp.where(beta_idx == i, 0.0, col)
 
 
-@functools.partial(jax.jit, static_argnames=("sample", "target", "percentile"))
+@functools.partial(jax.jit, static_argnames=("sample", "target", "percentile",
+                                             "backend"))
 def estimate_k(v: jax.Array, sample: int = 512, target: float = 0.95,
-               percentile: float = 10.0) -> jax.Array:
+               percentile: float = 10.0, backend: str = "auto") -> jax.Array:
     """Pick the Laplacian scale k so that a CLUSTER-SCALE nearest-neighbour
     pair has affinity ~= target. The paper tunes k per data set but never
     states values; the critical property is that intra-cluster pairs clear
@@ -89,7 +89,7 @@ def estimate_k(v: jax.Array, sample: int = 512, target: float = 0.95,
     # indices are static (shape-derived) — build them host-side in int64 so
     # i*n cannot overflow int32 for multi-million-row datasets
     s = v[(np.arange(m, dtype=np.int64) * n) // m]
-    d = pairwise_distance(s, s, 2.0)
+    d = pairwise_distance(s, s, 2.0, backend)
     d = d + jnp.where(jnp.eye(m, dtype=bool), jnp.inf, 0.0)
     nn = jnp.min(d, axis=1)
     ref = jnp.percentile(nn, percentile)

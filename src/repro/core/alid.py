@@ -26,8 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.affinity import affinity_block, estimate_k
+from repro.core.affinity import estimate_k
 from repro.core.civs import civs_update
+from repro.kernels import ops
 from repro.core.lid import (LIDState, density, init_state, init_state_from,
                             lid_solve)
 from repro.core.pipeline import DEFAULT_CACHE_BYTES
@@ -71,6 +72,13 @@ class EngineSpec(NamedTuple):
               steady-state shard reads into sequential slab reads; None
               disables scratch persistence (shards re-gather from the
               source). The file is unlinked by the engine's close().
+    backend:  kernel backend for every hot-path op (affinity, Ax refresh,
+              ROI filter, LSH hashing, assignment) — "auto" (env /
+              platform dispatch, the default), "ref" (pure-jnp oracles),
+              "pallas" (compiled TPU kernels), or "interpret" (Pallas
+              kernels emulated as jax ops; the engine-parity suite runs
+              interpret-vs-ref fits and asserts bit-identical labels). See
+              `repro.kernels.ops.resolve_backend`.
     """
     engine: str = "replicated"
     n_shards: int = 0
@@ -79,6 +87,7 @@ class EngineSpec(NamedTuple):
     cache_bytes: int = DEFAULT_CACHE_BYTES
     prefetch_depth: int = 2
     scratch_dir: Optional[str] = ""
+    backend: str = "auto"
 
 
 class ALIDConfig(NamedTuple):
@@ -105,6 +114,11 @@ class ALIDConfig(NamedTuple):
     def cap(self) -> int:
         return self.a_cap + self.delta
 
+    @property
+    def backend(self) -> str:
+        """Kernel backend (EngineSpec.backend — one knob for every op)."""
+        return self.spec.backend
+
 
 class SeedResult(NamedTuple):
     member_idx: jax.Array   # (cap,) global indices of the final beta
@@ -115,32 +129,34 @@ class SeedResult(NamedTuple):
     overflow: jax.Array     # () support hit a_cap
 
 
-@jax.jit
-def _predict_scores(q, sup_v, sup_w, k):
-    """Weighted affinity of queries to every cluster's support (the CIVS
-    affinity kernel): q:(m,d), sup_v:(C,A,d), sup_w:(C,A) -> (m,C)."""
-    def one(v, w):
-        return affinity_block(q, v, k) @ w
-    return jax.vmap(one, in_axes=(0, 0), out_axes=1)(sup_v, sup_w)
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _assign_batch(q, sup_v, sup_w, dens, k, threshold, backend: str = "auto"):
+    """One fused assignment call (`ops.assign_clusters`): weighted support
+    affinity + argmax + density-threshold accept, q:(m,d) -> (m,) int32."""
+    labels, _ = ops.assign_clusters(q, sup_v, sup_w, dens, k, threshold,
+                                    backend=backend)
+    return labels
 
 
-def assign_labels(q, sup_v, sup_w, densities: np.ndarray, k,
-                  threshold: float) -> np.ndarray:
+def assign_labels(q, sup_v, sup_w, densities, k, threshold: float,
+                  backend: str = "auto") -> np.ndarray:
     """Label queries by max weighted support affinity, -1 below the bar.
 
     Shared by `Clustering.predict` and `serve.ClusterService` (the service
     passes pre-converted device arrays so the support tensor is uploaded
-    once, not per batch). Array args may be numpy or jax arrays.
+    once, not per batch). Array args may be numpy or jax arrays. The whole
+    score/argmax/threshold chain is ONE kernel-layer op
+    (`ops.assign_clusters`), so serving runs fused on every backend.
     """
-    scores = np.asarray(_predict_scores(q, sup_v, sup_w, jnp.float32(k)))
-    best = scores.argmax(axis=1)
-    ok = scores[np.arange(scores.shape[0]), best] >= \
-        threshold * np.asarray(densities)[best]
-    return np.where(ok, best, -1).astype(np.int32)
+    return np.asarray(_assign_batch(
+        jnp.asarray(q), jnp.asarray(sup_v), jnp.asarray(sup_w),
+        jnp.asarray(densities, jnp.float32), jnp.float32(k),
+        jnp.float32(threshold), backend=backend))
 
 
 def assign_labels_source(source, sup_v, sup_w, densities, k,
-                         threshold: float, batch_size: int = 0) -> np.ndarray:
+                         threshold: float, batch_size: int = 0,
+                         backend: str = "auto") -> np.ndarray:
     """Streamed bulk assignment: label every row of a DataSource against the
     stored supports in fixed-shape batches. The tail batch is zero-padded so
     the jitted score kernel sees ONE (bs, d) shape and compiles exactly once;
@@ -156,7 +172,7 @@ def assign_labels_source(source, sup_v, sup_w, densities, k,
         q = block if m == bs else np.concatenate(
             [block, np.zeros((bs - m, source.dim), np.float32)], axis=0)
         out[start:start + m] = assign_labels(q, sup_v, sup_w, densities, k,
-                                             threshold)[:m]
+                                             threshold, backend)[:m]
     return out
 
 
@@ -181,7 +197,7 @@ class Clustering(NamedTuple):
         return int(len(self.densities))
 
     def predict(self, queries, threshold: float = 0.5,
-                batch_size: int = 0) -> np.ndarray:
+                batch_size: int = 0, backend: str = "auto") -> np.ndarray:
         """Assign queries to detected dominant clusters; -1 = none.
 
         A query joins the cluster of maximal weighted support affinity
@@ -204,13 +220,14 @@ class Clustering(NamedTuple):
                 return np.full((q.shape[0],), -1, np.int32)
             if not batch_size or batch_size >= q.shape[0]:
                 return assign_labels(q, self.support_v, self.support_w,
-                                     self.densities, self.k, threshold)
+                                     self.densities, self.k, threshold,
+                                     backend)
             queries = InMemorySource(q)
         if self.support_v is None or self.n_clusters == 0:
             return np.full((queries.n,), -1, np.int32)
         return assign_labels_source(queries, self.support_v, self.support_w,
                                     self.densities, self.k, threshold,
-                                    batch_size)
+                                    batch_size, backend)
 
     def to_dict(self) -> dict:
         """NumPy-safe dict (no jax arrays; None supports dropped)."""
@@ -270,12 +287,15 @@ def alid_from_seed(
 
     def body(carry):
         state, c, _, overflow = carry
-        state = lid_solve(state, k, max_iters=cfg.t_lid, tol=cfg.tol, p=cfg.p)
+        state = lid_solve(state, k, max_iters=cfg.t_lid, tol=cfg.tol, p=cfg.p,
+                          backend=cfg.backend)
         roi = estimate_roi(state.v_beta, state.beta_idx, state.beta_mask, state.x,
-                           k, c, r0=cfg.r0, p=cfg.p, support_eps=cfg.support_eps)
+                           k, c, r0=cfg.r0, p=cfg.p, support_eps=cfg.support_eps,
+                           backend=cfg.backend)
         res = civs_update(state, roi, points, active, tables, cfg.lsh, k,
                           a_cap=cfg.a_cap, delta=cfg.delta, tol=cfg.tol,
-                          support_eps=cfg.support_eps, p=cfg.p)
+                          support_eps=cfg.support_eps, p=cfg.p,
+                          backend=cfg.backend)
         # Global immunity: nothing infective was retrievable AND the ROI has
         # essentially reached the outer ball (Prop. 1 then guarantees no
         # infective vertex exists anywhere).
@@ -291,7 +311,8 @@ def alid_from_seed(
     state, c, done, overflow = jax.lax.while_loop(
         cond, body, (state0, jnp.int32(1), jnp.array(False), jnp.array(False)))
     # final polish: converge LID on the last beta
-    state = lid_solve(state, k, max_iters=cfg.t_lid, tol=cfg.tol, p=cfg.p)
+    state = lid_solve(state, k, max_iters=cfg.t_lid, tol=cfg.tol, p=cfg.p,
+                      backend=cfg.backend)
 
     sup = state.beta_mask & (state.x > cfg.support_eps)
     return SeedResult(

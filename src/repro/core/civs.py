@@ -42,8 +42,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.affinity import affinity_block
 from repro.core.lid import LIDState
+from repro.kernels import ops
 from repro.core.roi import ROI
 from repro.core.store import ShardedStore
 from repro.lsh.pstable import (LSHParams, LSHTables, hash_queries,
@@ -56,14 +56,6 @@ class CIVSResult(NamedTuple):
     infective_found: jax.Array  # () bool — some psi vertex has pi(s_j,x) > pi(x)
     n_candidates: jax.Array     # () int32 — post-filter candidate count (diagnostics)
     overflow: jax.Array         # () bool — support exceeded a_cap
-
-
-def _roi_distance(vc: jax.Array, center: jax.Array, p: float) -> jax.Array:
-    """Distance of candidate rows vc:(C,d) to the ROI center (shared by both
-    engines so replicated/sharded filtering is bit-identical)."""
-    if p == 2.0:
-        return jnp.sqrt(jnp.maximum(jnp.sum((vc - center[None, :]) ** 2, -1), 0.0))
-    return jnp.power(jnp.sum(jnp.abs(vc - center[None, :]) ** p, -1), 1.0 / p)
 
 
 def compact_support(state: LIDState, a_cap: int, support_eps: float):
@@ -86,18 +78,22 @@ def compact_support(state: LIDState, a_cap: int, support_eps: float):
 
 def rebuild_support(state: LIDState, sup_idx, sup_v, sup_x, sup_slot_mask,
                     psi_idx, psi_valid, psi_v, k, a_cap: int, tol: float,
-                    p: float, n_candidates, overflow) -> CIVSResult:
-    """Step 5: beta' = alpha ∪ psi with exact Ax refresh (Eq. 17)."""
+                    p: float, n_candidates, overflow,
+                    backend: str = "auto") -> CIVSResult:
+    """Step 5: beta' = alpha ∪ psi with exact Ax refresh (Eq. 17) — ONE
+    fused masked affinity x weights matvec (`ops.affinity_matvec`): the
+    support-slot mask is already folded into `sup_x` (compact_support zeroes
+    dropped slots, exactly), the beta-side mask is a row select, so the
+    (cap, a_cap) affinity block stays in VMEM on the kernel path."""
     delta = psi_idx.shape[0]
     beta_idx = jnp.concatenate([sup_idx, psi_idx]).astype(jnp.int32)
     beta_mask = jnp.concatenate([sup_slot_mask, psi_valid])
     v_beta = jnp.concatenate([sup_v, psi_v], axis=0)
     x = jnp.concatenate([sup_x, jnp.zeros((delta,), sup_x.dtype)])
 
-    a_cols = affinity_block(v_beta, sup_v, k, p)          # (cap, a_cap)
-    a_cols = jnp.where(beta_idx[:, None] == sup_idx[None, :], 0.0, a_cols)
-    a_cols = a_cols * (beta_mask[:, None] & sup_slot_mask[None, :])
-    ax = a_cols @ sup_x
+    ax = ops.affinity_matvec(v_beta, beta_idx, sup_v, sup_idx, sup_x, k, p,
+                             backend=backend)
+    ax = jnp.where(beta_mask, ax, 0.0)
 
     pi = jnp.sum(x * ax)
     infective = jnp.any(psi_valid & (ax[a_cap:] - pi > tol))
@@ -111,10 +107,12 @@ def rebuild_support(state: LIDState, sup_idx, sup_v, sup_x, sup_slot_mask,
 
 
 def _retrieve_replicated(roi: ROI, points, active, tables, lsh_params,
-                         sup_idx, sup_v, sup_slot_mask, delta: int, p: float):
+                         sup_idx, sup_v, sup_slot_mask, delta: int, p: float,
+                         backend: str = "auto"):
     """Steps 2-4 against the full dataset + monolithic LSH tables."""
     n = points.shape[0]
-    cands = query_batch(tables, sup_v, lsh_params)        # (a_cap, L*probe)
+    cands = query_batch(tables, sup_v, lsh_params, backend=backend)
+    #                                                     (a_cap, L*probe)
     cands = jnp.where(sup_slot_mask[:, None], cands, -1)
     flat = cands.reshape(-1)                              # (a_cap * L * probe,)
 
@@ -133,13 +131,13 @@ def _retrieve_replicated(roi: ROI, points, active, tables, lsh_params,
     cvalid = uniq & (skeys < sentinel)
     cidx = jnp.clip(skeys, 0, n - 1)
 
-    # ROI filter + take the delta nearest to D
+    # ROI filter + take the delta nearest to D: distance, radius/validity
+    # mask, and the -dist scores come out of ONE fused pass
     vc = points[cidx]
-    dist = _roi_distance(vc, roi.center, p)
-    cvalid &= dist <= roi.radius
+    _, cvalid, neg = ops.roi_filter(vc, roi.center, roi.radius, cvalid, p,
+                                    backend=backend)
     n_candidates = jnp.sum(cvalid)
 
-    neg = jnp.where(cvalid, -dist, -jnp.inf)
     top_vals, top_pos = jax.lax.top_k(neg, delta)
     psi_valid = top_vals > -jnp.inf
     psi_idx = jnp.where(psi_valid, cidx[top_pos], -1)
@@ -161,7 +159,7 @@ def init_retrieval_carry(delta: int, d: int, dtype=jnp.float32):
 
 def retrieve_chunk(carry, pts_s, sk, pm, gmap, keys, starts, lo, hi,
                    roi_center, roi_radius, active, sup_idx, sup_slot_mask,
-                   probe: int, p: float):
+                   probe: int, p: float, backend: str = "auto"):
     """CIVS steps 2-4 for ONE shard/chunk, folded into the running top-delta
     carry — THE chunk step, shared verbatim by the in-jit sharded engine
     (`_retrieve_sharded`'s fori_loop slices the store and calls this) and the
@@ -185,14 +183,16 @@ def retrieve_chunk(carry, pts_s, sk, pm, gmap, keys, starts, lo, hi,
     safe_slot = jnp.clip(flat, 0, shard_cap - 1)
     gidx = jnp.where(flat >= 0, gmap[safe_slot], -1)
     vc = pts_s[safe_slot]
-    dist = _roi_distance(vc, roi_center, p)
 
     safe_g = jnp.clip(gidx, 0, n - 1)
     valid = (gidx >= 0) & active[safe_g]
     member = jnp.any((safe_g[:, None] == sup_idx[None, :])
                      & sup_slot_mask[None, :], axis=1)
     valid &= ~member
-    valid &= dist <= roi_radius
+    # fused ROI filter: distance to D, the radius+validity mask, and the
+    # -dist top-delta scores in one pass (neg is -inf exactly on ~valid)
+    _, valid, neg0 = ops.roi_filter(vc, roi_center, roi_radius, valid, p,
+                                    backend=backend)
 
     # within-chunk dedup (a point can surface from several tables); the
     # sort also fixes a deterministic order for exact-tie distances
@@ -200,13 +200,12 @@ def retrieve_chunk(carry, pts_s, sk, pm, gmap, keys, starts, lo, hi,
     dkeys = jnp.where(valid, safe_g, sentinel)
     order = jnp.argsort(dkeys)
     sg = dkeys[order]
-    sd = dist[order]
     sv = vc[order]
     uniq = jnp.concatenate([jnp.array([True]), sg[1:] != sg[:-1]])
     cvalid = uniq & (sg < sentinel)
     n_cand = n_cand + jnp.sum(cvalid)
 
-    neg = jnp.where(cvalid, -sd, -jnp.inf)
+    neg = jnp.where(uniq, neg0[order], -jnp.inf)
     cand_idx = jnp.where(cvalid, sg, -1).astype(jnp.int32)
     # streaming top-delta merge: buffer ++ chunk -> top_k. Candidate
     # ROWS ride along in the carry so psi needs no end-of-loop gather
@@ -236,7 +235,8 @@ _ROUTE_EPS = 1e-4
 
 
 def _retrieve_sharded(roi: ROI, store: ShardedStore, active, lsh_params,
-                      sup_idx, sup_v, sup_slot_mask, delta: int, p: float):
+                      sup_idx, sup_v, sup_slot_mask, delta: int, p: float,
+                      backend: str = "auto"):
     """Steps 2-4, out-of-core: stream shards through a running top-delta merge.
 
     Each fori_loop step materializes ONE shard's points + tables (a dynamic
@@ -249,7 +249,7 @@ def _retrieve_sharded(roi: ROI, store: ShardedStore, active, lsh_params,
     """
     n_shards = store.shards.shape[0]
     keys, salts = hash_queries(sup_v, store.tables.proj, store.tables.bias,
-                               lsh_params.seg_len)         # (L, a_cap)
+                               lsh_params.seg_len, backend)  # (L, a_cap)
     # Global probe budget (ROADMAP item): one `probe`-wide salted window per
     # (table, query) is split across shards proportionally to their bucket
     # spans, so an oversized bucket yields min(bucket, probe) candidates in
@@ -274,7 +274,8 @@ def _retrieve_sharded(roi: ROI, store: ShardedStore, active, lsh_params,
         hi = jax.lax.dynamic_index_in_dim(win_hi, s, 0, keepdims=False)
         return retrieve_chunk(carry, pts_s, sk, pm, gmap, keys, st, lo, hi,
                               roi.center, roi.radius, active, sup_idx,
-                              sup_slot_mask, probe=lsh_params.probe, p=p)
+                              sup_slot_mask, probe=lsh_params.probe, p=p,
+                              backend=backend)
 
     def shard_step(s, carry):
         if p != 2.0:
@@ -288,7 +289,9 @@ def _retrieve_sharded(roi: ROI, store: ShardedStore, active, lsh_params,
         # for non-intersecting shards; under vmap (batched seeds in
         # lockstep) it lowers to select, so the saving materializes in the
         # unbatched / host-streamed deployments, not the vmapped drivers.
-        c_dist = _roi_distance(store.centers[s][None, :], roi.center, p)[0]
+        c_dist = ops.pairwise_distance(store.centers[s][None, :],
+                                       roi.center[None, :], p,
+                                       backend=backend)[0, 0]
         reach = roi.radius + store.radii[s]
         touch = c_dist <= reach + _ROUTE_EPS * (1.0 + reach)
         return jax.lax.cond(touch, lambda c: chunk_step(s, c), lambda c: c,
@@ -301,7 +304,8 @@ def _retrieve_sharded(roi: ROI, store: ShardedStore, active, lsh_params,
 
 
 @functools.partial(jax.jit, static_argnames=("a_cap", "delta", "lsh_params",
-                                             "tol", "support_eps", "p"))
+                                             "tol", "support_eps", "p",
+                                             "backend"))
 def civs_update(
     state: LIDState,
     roi: ROI,
@@ -315,6 +319,7 @@ def civs_update(
     tol: float = 1e-5,
     support_eps: float = 1e-6,
     p: float = 2.0,
+    backend: str = "auto",
 ) -> CIVSResult:
     cap = a_cap + delta
     assert state.x.shape[0] == cap, (state.x.shape, cap)
@@ -325,12 +330,12 @@ def civs_update(
     if isinstance(points, ShardedStore):
         psi_idx, psi_valid, psi_v, n_candidates = _retrieve_sharded(
             roi, points, active, lsh_params, sup_idx, sup_v, sup_slot_mask,
-            delta, p)
+            delta, p, backend)
     else:
         psi_idx, psi_valid, psi_v, n_candidates = _retrieve_replicated(
             roi, points, active, tables, lsh_params, sup_idx, sup_v,
-            sup_slot_mask, delta, p)
+            sup_slot_mask, delta, p, backend)
 
     return rebuild_support(state, sup_idx, sup_v, sup_x, sup_slot_mask,
                            psi_idx, psi_valid, psi_v, k, a_cap, tol, p,
-                           n_candidates, overflow)
+                           n_candidates, overflow, backend)

@@ -203,7 +203,8 @@ class _EngineBase:
             # interface so k estimation works chunked/out-of-core, and from
             # the SAME indices on every engine (parity contract).
             idx = strided_sample_indices(source.n, _K_SAMPLE)
-            self.k = estimate_k(jnp.asarray(source.sample(idx), jnp.float32))
+            self.k = estimate_k(jnp.asarray(source.sample(idx), jnp.float32),
+                                backend=cfg.backend)
 
     def _setup_k_from_points(self, points, cfg: ALIDConfig) -> None:
         """build()-side k setup: a no-op when build_source already drew the
@@ -256,7 +257,7 @@ class ReplicatedEngine(_EngineBase):
     def build(self, points, cfg, rng):
         self._setup_k_from_points(points, cfg)
         self._points = points
-        self._tables = build_lsh(points, cfg.lsh, rng)
+        self._tables = build_lsh(points, cfg.lsh, rng, cfg.backend)
         self._bsizes = bucket_sizes(self._tables)
 
     def run_round(self, active, seeds, seed_valid):
@@ -276,7 +277,8 @@ class ShardedEngine(_EngineBase):
     def build(self, points, cfg, rng):
         self._setup_k_from_points(points, cfg)
         self._store = build_store(points, cfg.lsh, rng,
-                                  n_shards=max(1, self.spec.n_shards))
+                                  n_shards=max(1, self.spec.n_shards),
+                                  backend=cfg.backend)
         self._bsizes = global_bucket_sizes(self._store)
 
     def run_round(self, active, seeds, seed_valid):
@@ -312,7 +314,8 @@ class MeshEngine(_EngineBase):
         n_shards = self.spec.n_shards
         if n_shards > 0:
             assert n_shards % n_data == 0, (n_shards, n_data)
-            store = build_store(points, cfg.lsh, rng, n_shards=n_shards)
+            store = build_store(points, cfg.lsh, rng, n_shards=n_shards,
+                                backend=cfg.backend)
             self._store = jax.device_put(store, jax.tree.map(
                 lambda s: NamedSharding(self.ctx.mesh, s), store_specs(store),
                 is_leaf=lambda s: isinstance(s, P)))
@@ -320,7 +323,7 @@ class MeshEngine(_EngineBase):
             self._tables = None
         else:
             self._store = None
-            self._tables = build_lsh(points, cfg.lsh, rng)
+            self._tables = build_lsh(points, cfg.lsh, rng, cfg.backend)
             self._bsizes = bucket_sizes(self._tables)
 
     def run_round(self, active, seeds, seed_valid):
@@ -355,7 +358,8 @@ def _init_states_batch(seed_rows, seeds, cap: int):
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _lid_batch(state, k, cfg: ALIDConfig):
     return jax.vmap(lambda s: lid_solve(s, k, max_iters=cfg.t_lid,
-                                        tol=cfg.tol, p=cfg.p))(state)
+                                        tol=cfg.tol, p=cfg.p,
+                                        backend=cfg.backend))(state)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -363,7 +367,8 @@ def _roi_batch(state, k, c, cfg: ALIDConfig):
     return jax.vmap(
         lambda s, ci: estimate_roi(s.v_beta, s.beta_idx, s.beta_mask, s.x,
                                    k, ci, r0=cfg.r0, p=cfg.p,
-                                   support_eps=cfg.support_eps))(state, c)
+                                   support_eps=cfg.support_eps,
+                                   backend=cfg.backend))(state, c)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -372,10 +377,11 @@ def _civs_begin_batch(state, cfg: ALIDConfig):
         lambda s: compact_support(s, cfg.a_cap, cfg.support_eps))(state)
 
 
-@functools.partial(jax.jit, static_argnames=("seg_len",))
-def _hash_queries_batch(sup_v, proj, bias, seg_len: float):
+@functools.partial(jax.jit, static_argnames=("seg_len", "backend"))
+def _hash_queries_batch(sup_v, proj, bias, seg_len: float,
+                        backend: str = "auto"):
     return jax.vmap(
-        lambda q: hash_queries(q, proj, bias, seg_len))(sup_v)
+        lambda q: hash_queries(q, proj, bias, seg_len, backend))(sup_v)
 
 
 @functools.partial(jax.jit, static_argnames=("b", "delta", "d"))
@@ -384,10 +390,10 @@ def _init_carry_batch(b: int, delta: int, d: int):
                         init_retrieval_carry(delta, d))
 
 
-@functools.partial(jax.jit, static_argnames=("probe", "p"))
+@functools.partial(jax.jit, static_argnames=("probe", "p", "backend"))
 def _stream_chunk_batch(carry, pts_s, sk, pm, gmap, keys, starts, lo, hi,
                         center, radius, active, sup_idx, sup_slot_mask,
-                        touch, probe: int, p: float):
+                        touch, probe: int, p: float, backend: str = "auto"):
     """One device-resident shard folded into every seed lane's carry.
 
     The shard leaves (pts_s/sk/pm/gmap) broadcast; everything per-seed maps.
@@ -397,7 +403,7 @@ def _stream_chunk_batch(carry, pts_s, sk, pm, gmap, keys, starts, lo, hi,
     def one(carry1, keys1, st1, lo1, hi1, cen1, rad1, sidx1, smask1, t1):
         new = retrieve_chunk(carry1, pts_s, sk, pm, gmap, keys1, st1, lo1,
                              hi1, cen1, rad1, active, sidx1, smask1,
-                             probe=probe, p=p)
+                             probe=probe, p=p, backend=backend)
         return jax.tree.map(lambda a, b_: jnp.where(t1, a, b_), new, carry1)
 
     return jax.vmap(one)(carry, keys, starts, lo, hi, center, radius,
@@ -416,7 +422,7 @@ def _civs_finish_batch(state, sup_idx, sup_v, sup_x, sup_mask, psi_idx,
     return jax.vmap(
         lambda st, si, sv, sx, sm, pidx, pval, pv, nc, ov: rebuild_support(
             st, si, sv, sx, sm, pidx, pval, pv, k, cfg.a_cap, cfg.tol,
-            cfg.p, nc, ov))(
+            cfg.p, nc, ov, cfg.backend))(
         state, sup_idx, sup_v, sup_x, sup_mask, psi_idx, psi_valid, psi_v,
         n_cand, overflow)
 
@@ -482,7 +488,7 @@ class StreamedEngine(_EngineBase):
         self._store = build_store_streamed(
             source, cfg.lsh, rng, n_shards=max(1, self.spec.n_shards or 8),
             chunk_size=self.spec.chunk_size,
-            scratch_dir=self.spec.scratch_dir)
+            scratch_dir=self.spec.scratch_dir, backend=cfg.backend)
         self._bsizes = jnp.asarray(self._store.bucket_sizes)
         self._pipeline = ShardPipeline(
             self._store, cache_bytes=self.spec.cache_bytes,
@@ -583,7 +589,7 @@ class StreamedEngine(_EngineBase):
                 new_state, cfg)
 
             keys, salts = _hash_queries_batch(sup_v, store.proj, store.bias,
-                                              cfg.lsh.seg_len)
+                                              cfg.lsh.seg_len, cfg.backend)
             # frozen lanes' results are discarded by the lane select below,
             # so don't let their stale ROIs force shard uploads
             touch = self._route(roi, cfg.p) & lane_np[:, None]
@@ -619,7 +625,7 @@ class StreamedEngine(_EngineBase):
                         jnp.asarray(st[pos]), jnp.asarray(lo[pos]),
                         jnp.asarray(hi[pos]), roi.center, roi.radius,
                         active, sup_idx, sup_mask,
-                        jnp.asarray(touch[:, s]), probe, cfg.p)
+                        jnp.asarray(touch[:, s]), probe, cfg.p, cfg.backend)
                     self.stats.add("compute_s", time.perf_counter() - t0)
                 del pts_s, sk, pm, gmap, bundle, st, lo, hi
             psi_idx, psi_valid, psi_v, n_cand = _finalize_batch(carry)

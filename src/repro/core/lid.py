@@ -24,7 +24,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.affinity import affinity_block, affinity_column
+from repro.core.affinity import affinity_column
+from repro.kernels import ops
 
 
 class LIDState(NamedTuple):
@@ -54,9 +55,11 @@ def init_state(points: jax.Array, seed_idx: jax.Array, cap: int) -> LIDState:
     return init_state_from(points[seed_idx], seed_idx, cap)
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters", "tol", "p"))
+@functools.partial(jax.jit, static_argnames=("max_iters", "tol", "p",
+                                             "backend"))
 def lid_solve(state: LIDState, k: jax.Array, max_iters: int = 200,
-              tol: float = 1e-5, p: float = 2.0) -> LIDState:
+              tol: float = 1e-5, p: float = 2.0,
+              backend: str = "auto") -> LIDState:
     """Run LID to convergence within the (masked) local range."""
 
     def cond(s: LIDState):
@@ -79,7 +82,8 @@ def lid_solve(state: LIDState, k: jax.Array, max_iters: int = 200,
         eps = jnp.where(den < 0.0, jnp.minimum(-num / den, 1.0), 1.0)
         scale = eps * mu
 
-        col = affinity_column(s.v_beta, s.beta_idx, s.v_beta[i], s.beta_idx[i], k, p)
+        col = affinity_column(s.v_beta, s.beta_idx, s.v_beta[i], s.beta_idx[i],
+                              k, p, backend)
         col = jnp.where(s.beta_mask, col, 0.0)
 
         onehot = jnp.zeros_like(s.x).at[i].set(1.0)
@@ -95,15 +99,18 @@ def lid_solve(state: LIDState, k: jax.Array, max_iters: int = 200,
 
 
 def refresh_ax(state: LIDState, k: jax.Array, p: float = 2.0,
-               support_eps: float = 1e-6) -> LIDState:
+               support_eps: float = 1e-6,
+               backend: str = "auto") -> LIDState:
     """Exactly recompute (A_beta,alpha x_alpha) from the support — kills the
     f32 drift of the incremental Eq. 14 updates. O(cap^2 d), used once per
-    outer ALID iteration (not per LID step)."""
+    outer ALID iteration (not per LID step). ONE fused masked-matvec kernel:
+    the c-side slot mask folds into the (zeroed) weights, the q-side mask is
+    a row select — both exact — so the (cap, cap) affinity block never
+    round-trips HBM."""
     w = jnp.where(state.beta_mask & (state.x > support_eps), state.x, 0.0)
-    a = affinity_block(state.v_beta, state.v_beta, k, p)
-    a = jnp.where(state.beta_idx[:, None] == state.beta_idx[None, :], 0.0, a)
-    a = a * (state.beta_mask[:, None] & state.beta_mask[None, :])
-    return state._replace(ax=a @ w)
+    ax = ops.affinity_matvec(state.v_beta, state.beta_idx, state.v_beta,
+                             state.beta_idx, w, k, p, backend=backend)
+    return state._replace(ax=jnp.where(state.beta_mask, ax, 0.0))
 
 
 def support_size(state: LIDState, support_eps: float = 1e-6) -> jax.Array:

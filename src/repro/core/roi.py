@@ -14,7 +14,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.affinity import affinity_block
+from repro.kernels import ops
 
 
 class ROI(NamedTuple):
@@ -42,6 +42,7 @@ def estimate_roi(
     r0: float = 0.4,
     p: float = 2.0,
     support_eps: float = 1e-6,
+    backend: str = "auto",
 ) -> ROI:
     w = jnp.where(beta_mask & (x > support_eps), x, 0.0)
     wsum = jnp.maximum(jnp.sum(w), 1e-12)
@@ -49,16 +50,17 @@ def estimate_roi(
 
     center = w @ v_beta                                         # D = sum x_i v_i
 
-    # pi(x_hat) recomputed exactly over the support block (zero diagonal).
-    a = affinity_block(v_beta, v_beta, k, p)
-    a = jnp.where(beta_idx[:, None] == beta_idx[None, :], 0.0, a)
-    pi = w @ (a @ w)
+    # pi(x_hat) = w^T A w recomputed exactly over the support block (zero
+    # diagonal): the inner A w is the fused masked matvec — off-support
+    # columns contribute nothing because their w is exactly 0 — and the
+    # (cap, cap) block never materializes.
+    aw = ops.affinity_matvec(v_beta, beta_idx, v_beta, beta_idx, w, k, p,
+                             backend=backend)
+    pi = w @ aw
     pi = jnp.maximum(pi, 1e-12)
 
-    if p == 2.0:
-        dist = jnp.sqrt(jnp.maximum(jnp.sum((v_beta - center) ** 2, axis=-1), 0.0))
-    else:
-        dist = jnp.power(jnp.sum(jnp.abs(v_beta - center) ** p, axis=-1), 1.0 / p)
+    dist = ops.pairwise_distance(v_beta, center[None, :], p,
+                                 backend=backend)[:, 0]
 
     lam_in = jnp.sum(w * jnp.exp(-jnp.minimum(k * dist, _EXP_CLAMP)))
     lam_out = jnp.sum(w * jnp.exp(jnp.minimum(k * dist, _EXP_CLAMP)))

@@ -68,9 +68,9 @@ def take(store: ShardedStore, idx: jax.Array) -> jax.Array:
     return store.shards[store.shard_of[safe], store.slot_of[safe]]
 
 
-@functools.partial(jax.jit, static_argnames=("params", "n_shards"))
+@functools.partial(jax.jit, static_argnames=("params", "n_shards", "backend"))
 def _build_store_impl(points: jax.Array, params: LSHParams, rng: jax.Array,
-                      n_shards: int) -> ShardedStore:
+                      n_shards: int, backend: str = "auto") -> ShardedStore:
     n, d = points.shape
     cap = -(-n // n_shards)                    # ceil — last shard padded
     pad = n_shards * cap - n
@@ -101,23 +101,24 @@ def _build_store_impl(points: jax.Array, params: LSHParams, rng: jax.Array,
         jnp.sum((shards - centers[:, None, :]) ** 2, -1), 0.0))
     radii = jnp.max(jnp.where(valid, dist, 0.0), axis=1)
 
-    tables = build_lsh_sharded(shards, valid, params, rng)
+    tables = build_lsh_sharded(shards, valid, params, rng, backend)
     return ShardedStore(shards=shards, valid=valid, global_idx=gidx,
                         shard_of=shard_of, slot_of=slot_of,
                         centers=centers, radii=radii, tables=tables)
 
 
 def build_store(points: jax.Array, params: LSHParams, rng: jax.Array,
-                n_shards: int = 8) -> ShardedStore:
+                n_shards: int = 8, backend: str = "auto") -> ShardedStore:
     """Partition `points` + LSH into `n_shards` routing-aware shards.
 
     Consumes `rng` exactly like `build_lsh` (one split -> proj, bias), so a
     store built with the same key is query-for-query consistent with the
     monolithic tables — the basis of the replicated/sharded parity tests.
+    `backend` selects the hashing kernel (repro.kernels.ops.lsh_hash).
     """
     points = jnp.asarray(points, jnp.float32)
     n_shards = max(1, min(int(n_shards), points.shape[0]))
-    return _build_store_impl(points, params, rng, n_shards)
+    return _build_store_impl(points, params, rng, n_shards, backend)
 
 
 # ----------------------------------------------------- host-streamed store --
@@ -192,7 +193,8 @@ class StreamedStore(NamedTuple):
 def build_store_streamed(source: DataSource, params: LSHParams,
                          rng: jax.Array, n_shards: int = 8,
                          chunk_size: int = 0,
-                         scratch_dir: Optional[str] = None) -> StreamedStore:
+                         scratch_dir: Optional[str] = None,
+                         backend: str = "auto") -> StreamedStore:
     """Build the streamed store shard-by-shard from source chunks.
 
     Two passes, neither materializing more than O(chunk) rows on device or
@@ -234,7 +236,7 @@ def build_store_streamed(source: DataSource, params: LSHParams,
     keys_full = np.empty((n_tables, n), np.uint32)
     for start, block in iter_source_chunks(source, chunk_size):
         kk, sc = hash_chunk(jnp.asarray(block, jnp.float32), proj, bias,
-                            params.seg_len)
+                            params.seg_len, backend)
         stop = start + block.shape[0]
         keys_full[:, start:stop] = np.asarray(kk)
         scores[start:stop] = np.asarray(sc)

@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# The compute backend of the system. `ops.py` is the ONLY entry point
+# consumers use (backend="auto"|"ref"|"pallas"|"interpret" dispatch);
+# `ref.py` holds the pure-jnp oracles, <name>.py the Pallas TPU kernels.
+# See DESIGN.md §7 for the dispatch policy and the caller → op map.

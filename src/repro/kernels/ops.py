@@ -1,10 +1,27 @@
-"""Public jit'd wrappers for the kernel layer.
+"""Public jit'd wrappers for the kernel layer — THE compute backend of the
+whole system. Every hot-path consumer (`core.affinity`, `core.lid`,
+`core.civs`, `core.roi`, `lsh.pstable`, `serve`) calls these wrappers; none
+of them owns a private affinity / distance / hashing implementation.
 
-Dispatch policy: Pallas kernels are the TPU-target artifacts; off-TPU (this
-container is CPU-only) every op runs its pure-jnp reference, which is also
-what the multi-pod dry-run lowers (the roofline reads XLA HLO either way).
-Set REPRO_KERNEL_INTERPRET=1 to force the Pallas kernels in interpret mode
-(used by the kernel test-suite and debugging).
+Dispatch policy — every op takes `backend`:
+
+  "auto"      resolve from the environment: REPRO_KERNEL_BACKEND if set,
+              else interpret when REPRO_KERNEL_INTERPRET=1 (kernel test
+              suite / debugging), else "pallas" on TPU and "ref" elsewhere
+              (this container is CPU-only; the refs are also what the
+              multi-pod dry-run lowers — the roofline reads XLA HLO either
+              way).
+  "ref"       the pure-jnp oracles in `repro.kernels.ref`.
+  "pallas"    the compiled Pallas TPU kernels.
+  "interpret" the Pallas kernels in interpreter mode — same kernel code,
+              executed as jax ops, so it jits and runs anywhere. The
+              engine-parity suite runs fits under interpret vs ref and
+              asserts bit-identical labels.
+
+The knob is plumbed as `EngineSpec(backend=...)` through ALIDConfig, all
+four engines, store/pipeline builds, ClusterService, and
+`run_palid --backend`; "auto" stays the default everywhere, so the env-var
+override keeps working for code that never threads a spec.
 """
 
 from __future__ import annotations
@@ -16,30 +33,125 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.affinity import affinity_pallas
+from repro.kernels.affinity_matvec import affinity_matvec_pallas
+from repro.kernels.assign import assign_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lsh_hash import lsh_hash_pallas
+from repro.kernels.roi_filter import roi_filter_pallas
 from repro.kernels.segment_matmul import segment_matmul_pallas
 
+BACKENDS = ("auto", "ref", "pallas", "interpret")
 
-def _mode() -> str:
+
+def resolve_backend(backend: str = "auto") -> str:
+    """Collapse a backend knob to a concrete mode ("ref"/"pallas"/
+    "interpret"). The ONE dispatch decision — every op routes through it."""
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; expected one of {BACKENDS}")
+    if backend != "auto":
+        return backend
+    env = os.environ.get("REPRO_KERNEL_BACKEND", "")
+    if env:
+        if env not in BACKENDS or env == "auto":
+            raise ValueError(
+                f"REPRO_KERNEL_BACKEND={env!r}; expected ref|pallas|interpret")
+        return env
     if os.environ.get("REPRO_KERNEL_INTERPRET") == "1":
         return "interpret"
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def affinity(q: jax.Array, c: jax.Array, k_scale, **kw) -> jax.Array:
-    mode = _mode()
-    if mode == "ref":
-        return _ref.affinity_ref(q, c, jnp.asarray(k_scale, jnp.float32))
+# kept for back-compat with older call sites/tests
+def _mode() -> str:
+    return resolve_backend("auto")
+
+
+def affinity(q: jax.Array, c: jax.Array, k_scale, p: float = 2.0, *,
+             backend: str = "auto", **kw) -> jax.Array:
+    """exp(-k ||q_i - c_j||_p): (m, d), (n, d) -> (m, n), no diagonal logic.
+    The Pallas kernel implements p=2 (the paper's metric, all experiments);
+    other norms run the shared jnp reference on every backend."""
+    mode = resolve_backend(backend)
+    if mode == "ref" or p != 2.0:
+        return _ref.affinity_ref(q, c, jnp.asarray(k_scale, jnp.float32), p)
     return affinity_pallas(q, c, jnp.asarray(k_scale, jnp.float32),
                            interpret=(mode == "interpret"), **kw)
 
 
+def pairwise_distance(q: jax.Array, c: jax.Array, p: float = 2.0, *,
+                      backend: str = "auto") -> jax.Array:
+    """||q_i - c_j||_p in f32 — the ONE distance contraction (see
+    `ref.pairwise_distance_ref`). No standalone Pallas kernel: every
+    hot-path distance is fused into affinity / roi_filter / assign, and the
+    remaining callers (estimate_k, shard-routing metadata) are per-build
+    metadata passes; `backend` is validated for signature uniformity."""
+    resolve_backend(backend)
+    return _ref.pairwise_distance_ref(q, c, p)
+
+
+def affinity_matvec(q: jax.Array, q_idx: jax.Array, c: jax.Array,
+                    c_idx: jax.Array, w: jax.Array, k_scale,
+                    p: float = 2.0, *, backend: str = "auto",
+                    **kw) -> jax.Array:
+    """Masked affinity x weights matvec (Ax refresh, Eq. 13/17):
+    out_i = sum_j [q_idx_i != c_idx_j] exp(-k||q_i - c_j||) w_j, (m,) f32.
+    Slot-validity masks fold into `w` (c side) / an output row select
+    (q side) — exact, and the (m, n) block never hits HBM on the kernel
+    path."""
+    mode = resolve_backend(backend)
+    if mode == "ref" or p != 2.0:
+        return _ref.affinity_matvec_ref(q, q_idx, c, c_idx, w,
+                                        jnp.asarray(k_scale, jnp.float32), p)
+    return affinity_matvec_pallas(q, q_idx, c, c_idx, w,
+                                  jnp.asarray(k_scale, jnp.float32),
+                                  interpret=(mode == "interpret"), **kw)
+
+
+def roi_filter(vc: jax.Array, center: jax.Array, radius, valid: jax.Array,
+               p: float = 2.0, *, backend: str = "auto", **kw):
+    """Fused CIVS ROI filter: (dist (C,), valid_out (C,) bool, neg (C,))
+    with valid_out = valid & (dist <= radius), neg = -dist else -inf (the
+    score top-delta selection ranks). One pass over the candidate tile."""
+    mode = resolve_backend(backend)
+    if p != 2.0:
+        dist = _ref.pairwise_distance_ref(vc, center[None, :], p)[:, 0]
+        ok = valid & (dist <= radius)
+        return dist, ok, jnp.where(ok, -dist, -jnp.inf)
+    if mode == "ref":
+        return _ref.roi_filter_ref(vc, center, jnp.asarray(radius,
+                                                           jnp.float32), valid)
+    return roi_filter_pallas(vc, center, jnp.asarray(radius, jnp.float32),
+                             valid, interpret=(mode == "interpret"), **kw)
+
+
+def assign_clusters(q: jax.Array, sup_v: jax.Array, sup_w: jax.Array,
+                    dens: jax.Array, k_scale, threshold, *,
+                    backend: str = "auto", **kw):
+    """Fused batched cluster assignment (predict / serve): weighted support
+    affinity scores + argmax + density-threshold accept.
+
+    q:(m,d), sup_v:(C,A,d), sup_w:(C,A), dens:(C,) ->
+    (labels (m,) int32 with -1 = no cluster, best_score (m,) f32).
+    """
+    n_clusters, a, d = sup_v.shape
+    sup_flat = jnp.asarray(sup_v, jnp.float32).reshape(n_clusters * a, d)
+    w_mat = _ref.assign_weight_matrix(jnp.asarray(sup_w, jnp.float32))
+    dens = jnp.asarray(dens, jnp.float32)
+    k_scale = jnp.asarray(k_scale, jnp.float32)
+    threshold = jnp.asarray(threshold, jnp.float32)
+    mode = resolve_backend(backend)
+    if mode == "ref":
+        return _ref.assign_ref(q, sup_flat, w_mat, dens, k_scale, threshold)
+    return assign_pallas(q, sup_flat, w_mat, dens, k_scale, threshold,
+                         interpret=(mode == "interpret"), **kw)
+
+
 def flash_attention(q, k, v, q_offset=0, *, causal=True, window=None,
                     chunk=None, softcap=None, scale=None, flat_gqa=True,
-                    **kw) -> jax.Array:
-    mode = _mode()
+                    backend: str = "auto", **kw) -> jax.Array:
+    mode = resolve_backend(backend)
     if mode == "ref":
         return _ref.attention_ref(q, k, v, causal=causal, window=window,
                                   chunk=chunk, softcap=softcap,
@@ -51,8 +163,9 @@ def flash_attention(q, k, v, q_offset=0, *, causal=True, window=None,
                                   **kw)
 
 
-def segment_matmul(msg, seg_ids, n_segments: int, **kw) -> jax.Array:
-    mode = _mode()
+def segment_matmul(msg, seg_ids, n_segments: int, *, backend: str = "auto",
+                   **kw) -> jax.Array:
+    mode = resolve_backend(backend)
     if mode == "ref":
         return _ref.segment_matmul_ref(msg, seg_ids, n_segments)
     out = segment_matmul_pallas(msg, seg_ids, n_segments,
@@ -64,8 +177,9 @@ def segment_matmul(msg, seg_ids, n_segments: int, **kw) -> jax.Array:
     return jnp.where(visited[jnp.arange(n_segments) // bw][:, None], out, 0.0)
 
 
-def embedding_bag(table, idx, bag_ids, n_bags: int, mode: str = "sum", **kw):
-    kmode = _mode()
+def embedding_bag(table, idx, bag_ids, n_bags: int, mode: str = "sum", *,
+                  backend: str = "auto", **kw):
+    kmode = resolve_backend(backend)
     if kmode == "ref" or mode == "mean":
         out = _ref.embedding_bag_ref(table, idx, bag_ids, n_bags, mode=mode)
         return out
@@ -77,8 +191,13 @@ def embedding_bag(table, idx, bag_ids, n_bags: int, mode: str = "sum", **kw):
     return jnp.where(visited[jnp.arange(n_bags) // bw][:, None], out, 0.0)
 
 
-def lsh_hash(x, proj, bias, seg_len: float, **kw) -> jax.Array:
-    mode = _mode()
+def lsh_hash(x, proj, bias, seg_len: float, *, backend: str = "auto",
+             **kw) -> jax.Array:
+    """p-stable bucket keys for x:(n,d) -> (n, L) int32 (callers bitcast to
+    uint32). Convention: the projection einsum runs in f32 regardless of the
+    input dtype — `pstable.hash_points` and both kernel paths share it, so
+    Sharded/Streamed store key identity holds across dtypes."""
+    mode = resolve_backend(backend)
     if mode == "ref":
         return _ref.lsh_hash_ref(x, proj, bias, seg_len)
     return lsh_hash_pallas(x, proj, bias, seg_len,

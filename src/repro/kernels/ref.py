@@ -15,14 +15,103 @@ MASK_VALUE = -1e30
 
 
 # ---------------------------------------------------------------- affinity --
-def affinity_ref(q: jax.Array, c: jax.Array, k_scale: jax.Array) -> jax.Array:
-    """exp(-k * ||q_i - c_j||_2): (m, d), (n, d) -> (m, n). No diagonal logic."""
+def pairwise_distance_ref(q: jax.Array, c: jax.Array,
+                          p: float = 2.0) -> jax.Array:
+    """||q_i - c_j||_p in f32: (m, d), (n, d) -> (m, n).
+
+    THE distance contraction. Every consumer — `core.affinity`'s pairwise
+    distance, the CIVS ROI filter, the affinity oracles below, and the
+    Pallas kernels' per-tile math — shares this one formula, so replicated /
+    sharded / streamed filtering is bit-identical by construction (three
+    private copies used to disagree in summation form). p=2 uses the
+    MXU-friendly expansion |q|^2 + |c|^2 - 2 q c^T — the form the Pallas
+    tiles compute, which is what makes ref/pallas parity possible. The
+    expansion cancels for points far from the origin (abs error ~ |v|^2 *
+    eps_f32, vs ~ dist * eps for the direct (q-c)^2 form), the standard
+    cost of the matmul formulation; center data with |v| >> 1e2 before
+    clustering if boundary-exact ROI radii matter. Other p fall back to
+    broadcast abs-power (O(m*n*d) memory — small blocks only).
+    """
     q32 = q.astype(jnp.float32)
     c32 = c.astype(jnp.float32)
-    q2 = jnp.sum(q32 * q32, -1)[:, None]
-    c2 = jnp.sum(c32 * c32, -1)[None, :]
-    d2 = jnp.maximum(q2 + c2 - 2.0 * (q32 @ c32.T), 0.0)
-    return jnp.exp(-k_scale * jnp.sqrt(d2)).astype(q.dtype)
+    if p == 2.0:
+        q2 = jnp.sum(q32 * q32, -1)[:, None]
+        c2 = jnp.sum(c32 * c32, -1)[None, :]
+        d2 = q2 + c2 - 2.0 * (q32 @ c32.T)
+        return jnp.sqrt(jnp.maximum(d2, 0.0))
+    diff = jnp.abs(q32[:, None, :] - c32[None, :, :])
+    return jnp.power(jnp.sum(jnp.power(diff, p), axis=-1), 1.0 / p)
+
+
+def affinity_ref(q: jax.Array, c: jax.Array, k_scale: jax.Array,
+                 p: float = 2.0) -> jax.Array:
+    """exp(-k * ||q_i - c_j||_p): (m, d), (n, d) -> (m, n). No diagonal logic."""
+    dist = pairwise_distance_ref(q, c, p)
+    return jnp.exp(-k_scale * dist).astype(q.dtype)
+
+
+def affinity_matvec_ref(q: jax.Array, q_idx: jax.Array, c: jax.Array,
+                        c_idx: jax.Array, w: jax.Array, k_scale: jax.Array,
+                        p: float = 2.0) -> jax.Array:
+    """Masked affinity x weights matvec (Eq. 13/17 refresh), one pass:
+
+        out_i = sum_j [q_idx_i != c_idx_j] * exp(-k ||q_i - c_j||) * w_j
+
+    q:(m,d), q_idx:(m,), c:(n,d), c_idx:(n,), w:(n,) -> (m,) f32. The index
+    compare realizes a_ii = 0 (and dedup defensiveness) without a separate
+    mask tensor; slot-validity masks fold into `w` (c side) and a row select
+    on the output (q side), so callers never materialize the (m, n) block.
+    """
+    a = affinity_ref(q, c, k_scale, p).astype(jnp.float32)
+    a = jnp.where(q_idx[:, None] == c_idx[None, :], 0.0, a)
+    return a @ w.astype(jnp.float32)
+
+
+def roi_filter_ref(vc: jax.Array, center: jax.Array, radius: jax.Array,
+                   valid: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused ROI distance filter (CIVS step 3): distance to the ROI center,
+    radius+validity mask, and neg-distance top-k scores in one pass.
+
+    vc:(C,d), center:(d,), radius:(), valid:(C,) bool ->
+    (dist (C,) f32, valid_out (C,) bool, neg (C,) f32) with
+    valid_out = valid & (dist <= radius) and neg = -dist on valid_out else
+    -inf (the score `jax.lax.top_k` ranks, nearest-first).
+    """
+    dist = pairwise_distance_ref(vc, center[None, :], 2.0)[:, 0]
+    ok = valid & (dist <= radius)
+    neg = jnp.where(ok, -dist, -jnp.inf)
+    return dist, ok, neg
+
+
+def assign_weight_matrix(sup_w: jax.Array) -> jax.Array:
+    """(C, A) per-cluster support weights -> (C*A, C) block-diagonal matrix
+    W[c*A + a, c] = w[c, a], so the weighted per-cluster score reduction
+    becomes ONE matmul: scores = affinity(q, sup_flat) @ W. Shared by the
+    ref oracle and the Pallas wrapper so both run the identical contraction."""
+    n_clusters, a = sup_w.shape
+    flat = sup_w.reshape(-1).astype(jnp.float32)
+    rows = jnp.arange(n_clusters * a)
+    return jnp.zeros((n_clusters * a, n_clusters), jnp.float32
+                     ).at[rows, rows // a].set(flat)
+
+
+def assign_ref(q: jax.Array, sup_flat: jax.Array, w_mat: jax.Array,
+               dens: jax.Array, k_scale: jax.Array,
+               threshold: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused batched cluster assignment (Clustering.predict / ClusterService):
+    affinity against every cluster support + weighted score + argmax +
+    density-threshold accept, one pass.
+
+    q:(m,d), sup_flat:(C*A,d), w_mat:(C*A,C) (see `assign_weight_matrix`),
+    dens:(C,), threshold:() -> (labels (m,) int32 with -1 = no cluster,
+    best_score (m,) f32).
+    """
+    aff = affinity_ref(q, sup_flat, k_scale).astype(jnp.float32)
+    scores = aff @ w_mat                                   # (m, C)
+    best = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    bscore = jnp.max(scores, axis=-1)
+    ok = bscore >= threshold * dens[best]
+    return jnp.where(ok, best, -1).astype(jnp.int32), bscore
 
 
 # --------------------------------------------------------- flash attention --

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel for the fused CIVS ROI filter (paper Sec. 4.3 step 3):
+distance of every LSH candidate to the ROI center, the radius + validity
+mask, and the neg-distance scores that `jax.lax.top_k` ranks — one pass.
+
+Unfused (`retrieve_chunk` / `_retrieve_replicated` before PR 5), the
+candidate block paid three elementwise sweeps over the (C,) candidate axis
+with the (C, d) gather re-read in between. Here each program loads one
+(bc, d) candidate tile into VMEM, contracts against the (1, d) center on the
+MXU, and emits both the distance and the masked -dist score from registers.
+
+Masking rule: `valid` carries every SHAPE-side condition the caller already
+knows (real hit, active, not a support member); the kernel adds the
+`dist <= radius` geometry test. Invalid rows get score -inf, which is also
+the caller's validity signal (`neg > -inf`), so the bool mask never needs a
+separate output buffer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _roi_kernel(r_ref, cen_ref, v_ref, m_ref, dist_ref, neg_ref):
+    v = v_ref[...].astype(jnp.float32)            # (bc, d)
+    cen = cen_ref[...].astype(jnp.float32)        # (1, d)
+    v2 = jnp.sum(v * v, axis=-1, keepdims=True)               # (bc, 1)
+    c2 = jnp.sum(cen * cen, axis=-1, keepdims=True)           # (1, 1)
+    d2 = v2 + c2 - 2.0 * jax.lax.dot_general(
+        v, cen, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))                     # (bc, 1)
+    ok = (m_ref[...] != 0) & (dist <= r_ref[0, 0])
+    dist_ref[...] = dist
+    neg_ref[...] = jnp.where(ok, -dist, -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "interpret"))
+def roi_filter_pallas(
+    vc: jax.Array,       # (C, d) candidate rows
+    center: jax.Array,   # (d,) ROI center
+    radius: jax.Array,   # () ROI radius
+    valid: jax.Array,    # (C,) bool pre-mask
+    *,
+    bc: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    n, d = vc.shape
+    pn = (-n) % bc
+    vp = jnp.pad(vc, ((0, pn), (0, 0)))
+    # padded rows carry mask 0 -> neg = -inf; their dist is sliced off
+    mp = jnp.pad(valid.astype(jnp.int32), (0, pn)).reshape(-1, 1)
+    r_arr = jnp.asarray(radius, jnp.float32).reshape(1, 1)
+
+    dist, neg = pl.pallas_call(
+        _roi_kernel,
+        grid=((n + pn) // bc,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((bc, d), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + pn, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n + pn, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r_arr, center.reshape(1, -1), vp, mp)
+    dist = dist[:n, 0]
+    neg = neg[:n, 0]
+    return dist, neg > -jnp.inf, neg

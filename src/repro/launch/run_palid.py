@@ -38,14 +38,16 @@ def engine_spec(engine: str, devices: int, shards: int, chunk_size: int,
                 cache_bytes: int = EngineSpec._field_defaults["cache_bytes"],
                 prefetch_depth: int = (
                     EngineSpec._field_defaults["prefetch_depth"]),
-                scratch_dir: str = "") -> EngineSpec:
+                scratch_dir: str = "",
+                backend: str = "auto") -> EngineSpec:
     """Resolve --engine (+ legacy --devices/--shards) into an EngineSpec.
 
     The pipeline knobs only matter for engine="streamed": `cache_bytes`
     bounds the host LRU of shard bundles, `prefetch_depth` sizes the
     background reader's slot ring (0 = synchronous double-buffer), and
     `scratch_dir` places the build-time scratch memmap ("" = system temp
-    dir, "none" disables persistence)."""
+    dir, "none" disables persistence). `backend` is the kernel backend for
+    every hot-path op (repro.kernels.ops)."""
     scratch: str | None = None if scratch_dir == "none" else scratch_dir
     if engine == "auto":
         if devices > 1:
@@ -58,17 +60,19 @@ def engine_spec(engine: str, devices: int, shards: int, chunk_size: int,
         mesh = jax.make_mesh((max(devices, 1),), ("data",))
         ctx = MeshContext(mesh=mesh, data_axes=("data",), model_axis="data")
         return EngineSpec(engine="mesh", n_shards=shards, mesh_ctx=ctx,
-                          chunk_size=chunk_size)
+                          chunk_size=chunk_size, backend=backend)
     if engine == "streamed":
         # 0 lets StreamedEngine apply its own default (8) — forcing 1 here
         # would stream the whole dataset as a single O(n·d) bundle
         return EngineSpec(engine="streamed", n_shards=shards,
                           chunk_size=chunk_size, cache_bytes=cache_bytes,
-                          prefetch_depth=prefetch_depth, scratch_dir=scratch)
+                          prefetch_depth=prefetch_depth, scratch_dir=scratch,
+                          backend=backend)
     if engine == "sharded":
         return EngineSpec(engine="sharded", n_shards=max(1, shards),
-                          chunk_size=chunk_size)
-    return EngineSpec(engine="replicated", chunk_size=chunk_size)
+                          chunk_size=chunk_size, backend=backend)
+    return EngineSpec(engine="replicated", chunk_size=chunk_size,
+                      backend=backend)
 
 
 def main():
@@ -88,6 +92,17 @@ def main():
                              "streamed"],
                     help="EngineSpec.engine; 'auto' keeps the legacy "
                          "--devices/--shards mapping")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "ref", "pallas", "interpret"],
+                    help="kernel backend for every hot-path op "
+                         "(EngineSpec.backend -> repro.kernels.ops): 'auto' "
+                         "= env/platform dispatch, 'ref' = pure-jnp "
+                         "oracles, 'pallas' = compiled TPU kernels, "
+                         "'interpret' = Pallas kernels emulated as jax ops "
+                         "(CI parity smoke)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small-n smoke preset (n=600 d=8, few rounds) — "
+                         "used by CI for the --backend interpret smoke")
     ap.add_argument("--source", default="",
                     help="ingest a real dataset instead of synthetic blobs: "
                          "'memmap:path.npy' (out-of-core) or 'npy:path.npy' "
@@ -118,6 +133,10 @@ def main():
     ap.add_argument("--seeds-per-round", type=int, default=32)
     ap.add_argument("--rounds", type=int, default=64)
     args = ap.parse_args()
+    if args.quick:
+        args.n, args.d, args.clusters = 600, 8, 4
+        args.rounds = min(args.rounds, 8)
+        args.seeds_per_round = min(args.seeds_per_round, 8)
 
     spec = None
     if args.source:
@@ -142,7 +161,8 @@ def main():
                      max_rounds=args.rounds,
                      spec=engine_spec(args.engine, args.devices, args.shards,
                                       args.chunk_size, args.cache_bytes,
-                                      args.prefetch_depth, args.scratch_dir))
+                                      args.prefetch_depth, args.scratch_dir,
+                                      args.backend))
     # build the engine here (instead of letting fit do it) so --profile can
     # read its stage counters after the run; we own close() in exchange
     engine = make_engine(cfg.spec)
@@ -152,6 +172,7 @@ def main():
         dt = time.time() - t0
         n_members = int((res.labels >= 0).sum())
         line = (f"[palid] n={n} d={d} engine={cfg.spec.engine} "
+                f"backend={cfg.spec.backend} "
                 f"devices={max(args.devices, 1)} shards={args.shards} "
                 f"time={dt:.2f}s clusters={res.n_clusters} "
                 f"members={n_members}")

@@ -19,6 +19,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+
 
 class LSHParams(NamedTuple):
     n_tables: int = 4          # L
@@ -83,19 +85,27 @@ def make_projections(rng: jax.Array, params: LSHParams, d: int,
     return proj, bias
 
 
-def hash_points(v: jax.Array, proj: jax.Array, bias: jax.Array, seg_len: float) -> jax.Array:
-    """Keys for v:(n,d) under all tables -> (L, n) uint32."""
-    # (L, n, m) = (n,d) @ (L,d,m)
-    z = jnp.einsum("nd,lmd->lnm", v, proj) + bias[:, None, :]
-    h = jnp.floor(z / seg_len).astype(jnp.int32)
-    return _mix_fold(h)
+def hash_points(v: jax.Array, proj: jax.Array, bias: jax.Array,
+                seg_len: float, backend: str = "auto") -> jax.Array:
+    """Keys for v:(n,d) under all tables -> (L, n) uint32.
+
+    Routed through `repro.kernels.ops.lsh_hash` (the projection einsum +
+    floor-quantize + multiply-xor fold, f32-cast regardless of input dtype —
+    one convention shared with the Pallas kernel, so f32 and bf16 sources
+    produce bit-identical keys and Sharded/Streamed store key identity holds
+    by construction). The einsum rounds per element over rows, so chunked
+    hashing (`hash_chunk`) equals a monolithic pass bit-for-bit.
+    """
+    keys = ops.lsh_hash(v, proj, bias, seg_len, backend=backend)   # (n, L)
+    return jax.lax.bitcast_convert_type(keys, jnp.uint32).T
 
 
-@functools.partial(jax.jit, static_argnames=("params",))
-def build_lsh(v: jax.Array, params: LSHParams, rng: jax.Array) -> LSHTables:
+@functools.partial(jax.jit, static_argnames=("params", "backend"))
+def build_lsh(v: jax.Array, params: LSHParams, rng: jax.Array,
+              backend: str = "auto") -> LSHTables:
     n, d = v.shape
     proj, bias = make_projections(rng, params, d, v.dtype)
-    keys = hash_points(v, proj, bias, params.seg_len)           # (L, n)
+    keys = hash_points(v, proj, bias, params.seg_len, backend)  # (L, n)
     order = jnp.argsort(keys, axis=1).astype(jnp.int32)          # (L, n)
     sorted_keys = jnp.take_along_axis(keys, order.astype(jnp.int32), axis=1)
     return LSHTables(proj=proj, bias=bias, sorted_keys=sorted_keys, perm=order)
@@ -124,17 +134,27 @@ def _query_one_table(sorted_keys: jax.Array, perm: jax.Array, key: jax.Array,
 
 
 def hash_queries(q: jax.Array, proj: jax.Array, bias: jax.Array,
-                 seg_len: float) -> tuple[jax.Array, jax.Array]:
+                 seg_len: float,
+                 backend: str = "auto") -> tuple[jax.Array, jax.Array]:
     """(keys, salts) for queries q:(Q,d) -> both (L, Q) uint32.
 
-    The per-query salt comes from the raw float bits of the projections: ANY
-    two distinct points get different salts, so their probe windows differ
-    even inside one giant bucket (CIVS coverage, Fig. 4b).
+    Keys come from `ops.lsh_hash` — the same op that hashed the data points,
+    so a support row queried back lands in its own bucket bit-for-bit on
+    every backend. The per-query salt comes from the raw float bits of the
+    projections: ANY two distinct points get different salts, so their probe
+    windows differ even inside one giant bucket (CIVS coverage, Fig. 4b).
+    The salt projection is recomputed locally (f32, matching the key
+    convention) — query batches are a_cap-sized (B·a_cap under the streamed
+    engine's vmap), so the duplicate (Q,d)x(L,m,d) einsum stays noise next
+    to the shard probes it guards; folding salts into the hash kernel would
+    force every backend to emit the pre-fold z, a (Q, L, m) HBM round-trip
+    the fused kernel exists to avoid.
     """
-    z = jnp.einsum("nd,lmd->lnm", q, proj) + bias[:, None, :]
-    h = jnp.floor(z / seg_len).astype(jnp.int32)
-    keys = _mix_fold(h)                                              # (L, Q)
-    bits = jax.lax.bitcast_convert_type(z.astype(jnp.float32), jnp.uint32)
+    keys = hash_points(q, proj, bias, seg_len, backend)              # (L, Q)
+    z = (jnp.einsum("nd,lmd->lnm", q.astype(jnp.float32),
+                    proj.astype(jnp.float32))
+         + bias[:, None, :].astype(jnp.float32))
+    bits = jax.lax.bitcast_convert_type(z, jnp.uint32)
     salts = _mix_fold(jax.lax.bitcast_convert_type(bits, jnp.int32))
     return keys, salts
 
@@ -173,9 +193,10 @@ def shard_bucket_windows(sorted_keys: jax.Array, keys: jax.Array,
     return starts, lo, hi
 
 
-@functools.partial(jax.jit, static_argnames=("seg_len",))
+@functools.partial(jax.jit, static_argnames=("seg_len", "backend"))
 def hash_chunk(chunk: jax.Array, proj: jax.Array, bias: jax.Array,
-               seg_len: float) -> tuple[jax.Array, jax.Array]:
+               seg_len: float,
+               backend: str = "auto") -> tuple[jax.Array, jax.Array]:
     """Bucket keys + spatial-ordering score for ONE host chunk of rows.
 
     The streamed store build (`store.build_store_streamed`) hashes the
@@ -185,7 +206,7 @@ def hash_chunk(chunk: jax.Array, proj: jax.Array, bias: jax.Array,
     projection onto the first LSH direction, the ordering `_build_store_impl`
     shards by. Only O(chunk) rows are ever device-resident.
     """
-    keys = hash_points(chunk, proj, bias, seg_len)
+    keys = hash_points(chunk, proj, bias, seg_len, backend)
     score = chunk @ proj[0, 0]
     return keys, score
 
@@ -263,16 +284,19 @@ def probe_tables(sorted_keys: jax.Array, perm: jax.Array, keys: jax.Array,
     return jnp.transpose(cands, (1, 0, 2)).reshape(keys.shape[1], -1)
 
 
-@functools.partial(jax.jit, static_argnames=("params",))
-def query_batch(tables: LSHTables, q: jax.Array, params: LSHParams) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("params", "backend"))
+def query_batch(tables: LSHTables, q: jax.Array, params: LSHParams,
+                backend: str = "auto") -> jax.Array:
     """Candidates for queries q:(Q,d) -> (Q, L*probe) int32 data indices, -1 = miss."""
-    keys, salts = hash_queries(q, tables.proj, tables.bias, params.seg_len)
+    keys, salts = hash_queries(q, tables.proj, tables.bias, params.seg_len,
+                               backend)
     return probe_tables(tables.sorted_keys, tables.perm, keys, salts, params.probe)
 
 
-@functools.partial(jax.jit, static_argnames=("params",))
+@functools.partial(jax.jit, static_argnames=("params", "backend"))
 def build_lsh_sharded(shard_points: jax.Array, valid: jax.Array,
-                      params: LSHParams, rng: jax.Array) -> ShardedLSHTables:
+                      params: LSHParams, rng: jax.Array,
+                      backend: str = "auto") -> ShardedLSHTables:
     """Shard-local tables over pre-partitioned points (S, cap, d).
 
     Consumes `rng` exactly like `build_lsh` (via make_projections), so the
@@ -284,7 +308,8 @@ def build_lsh_sharded(shard_points: jax.Array, valid: jax.Array,
     """
     s, cap, d = shard_points.shape
     proj, bias = make_projections(rng, params, d, shard_points.dtype)
-    keys = jax.vmap(lambda v: hash_points(v, proj, bias, params.seg_len))(
+    keys = jax.vmap(
+        lambda v: hash_points(v, proj, bias, params.seg_len, backend))(
         shard_points)                                         # (S, L, cap)
     keys = jnp.where(valid[:, None, :], keys, PAD_KEY)
     order = jnp.argsort(keys, axis=-1).astype(jnp.int32)

@@ -31,19 +31,23 @@ class ClusterService:
 
     Requests queue up; each serve() call packs up to `batch_slots` queries
     into one fixed-shape batch (zero-padded rows, so the jitted score kernel
-    compiles once per (batch_slots, d)) and runs one batched assignment.
-    The support tensor is converted to device arrays once at construction,
-    not re-uploaded per batch.
+    compiles once per (batch_slots, d)) and runs one batched assignment —
+    the FUSED kernel-layer op (`repro.kernels.ops.assign_clusters`: support
+    affinity + weighted score + argmax + threshold in one pass), on the
+    backend `backend` selects ("auto" = env/platform dispatch; see
+    `repro.kernels.ops.resolve_backend`). The support tensor is converted to
+    device arrays once at construction, not re-uploaded per batch.
     """
 
     def __init__(self, clustering: Clustering, batch_slots: int = 8,
-                 threshold: float = 0.5):
+                 threshold: float = 0.5, backend: str = "auto"):
         assert clustering.support_v is not None, (
             "ClusterService needs a Clustering with stored supports "
             "(produced by repro.core.engine.fit)")
         self.clustering = clustering
         self.batch_slots = batch_slots
         self.threshold = threshold
+        self.backend = backend
         self.d = int(clustering.support_v.shape[2])
         self._sup_v = jnp.asarray(clustering.support_v)
         self._sup_w = jnp.asarray(clustering.support_w)
@@ -72,7 +76,8 @@ class ClusterService:
         return assign_labels_source(
             src, self._sup_v, self._sup_w, self.clustering.densities,
             self.clustering.k, self.threshold,
-            batch_size=int(batch_size) or max(self.batch_slots, 256))
+            batch_size=int(batch_size) or max(self.batch_slots, 256),
+            backend=self.backend)
 
     def serve(self) -> dict[int, int]:
         results: dict[int, int] = {}
@@ -87,7 +92,8 @@ class ClusterService:
             else:
                 labels = assign_labels(jnp.asarray(q), self._sup_v,
                                        self._sup_w, self.clustering.densities,
-                                       self.clustering.k, self.threshold)
+                                       self.clustering.k, self.threshold,
+                                       self.backend)
             for i, (rid, _) in enumerate(batch):
                 results[rid] = int(labels[i])
         return results

@@ -83,6 +83,42 @@ def test_make_engine_rejects_unknown():
         make_engine(EngineSpec(engine="quantum"))
 
 
+# --------------------------------------------------- kernel-backend parity --
+@pytest.fixture(scope="module")
+def small_blobs():
+    """Tiny, well-separated set: keeps the interpret-mode fits fast."""
+    return make_blobs_with_noise(n_clusters=3, cluster_size=16, n_noise=40,
+                                 d=8, seed=3, overlap_pairs=0)
+
+
+@pytest.mark.parametrize("engine,kw", [
+    ("replicated", {}),
+    ("sharded", dict(n_shards=4)),
+    ("streamed", dict(n_shards=4, chunk_size=23)),
+])
+def test_backend_interpret_parity(small_blobs, engine, kw):
+    """Tentpole acceptance: the Pallas kernels (interpret mode — the same
+    kernel code the TPU compiles, executed as jax ops) must yield labels
+    BIT-IDENTICAL to the pure-jnp reference backend, per engine. Every
+    hot-path op (affinity columns, Ax refresh matvec, ROI filter, LSH keys,
+    probe hashing) runs through `repro.kernels.ops` on both sides; any
+    private compute sneaking back into lid/civs/pstable would break this."""
+    lshp = auto_lsh_params(small_blobs.points, probe=64)
+    cfg = ALIDConfig(a_cap=24, delta=24, lsh=lshp, seeds_per_round=8,
+                     max_rounds=10, t_lid=128)
+    res = {}
+    for backend in ("ref", "interpret"):
+        spec = EngineSpec(engine=engine, backend=backend, **kw)
+        res[backend] = fit(small_blobs.points, cfg._replace(spec=spec),
+                           jax.random.PRNGKey(0))
+    assert res["ref"].n_clusters > 0
+    np.testing.assert_array_equal(res["ref"].labels,
+                                  res["interpret"].labels)
+    np.testing.assert_array_equal(res["ref"].densities,
+                                  res["interpret"].densities)
+    assert res["ref"].n_rounds == res["interpret"].n_rounds
+
+
 # ------------------------------------------------------- the claim reducer --
 def test_reducer_exact_tie_prefers_larger_row():
     """Deliberate exact density tie: the point claimed by both rows must go

@@ -8,9 +8,12 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.affinity import affinity_pallas
+from repro.kernels.affinity_matvec import affinity_matvec_pallas
+from repro.kernels.assign import assign_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lsh_hash import lsh_hash_pallas
+from repro.kernels.roi_filter import roi_filter_pallas
 from repro.kernels.segment_matmul import segment_matmul_pallas
 
 
@@ -28,6 +31,118 @@ def test_affinity_kernel(m, n, d, dtype):
     rtol = 1e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), rtol=rtol, atol=1e-4)
+
+
+# ------------------------------------------------- fused affinity matvec ----
+@pytest.mark.parametrize("m,n,d", [(16, 16, 8), (96, 33, 16), (130, 257, 100),
+                                   (192, 64, 128), (1, 7, 5)])
+def test_affinity_matvec_kernel(m, n, d):
+    """Masked affinity x weights matvec vs the jnp oracle — shape sweep incl.
+    ragged/padded tails (m and n off the 128 tile grid)."""
+    rng = np.random.default_rng(10)
+    q = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    # overlapping index spaces -> some (i, j) pairs hit the diagonal zeroing
+    q_idx = jnp.asarray(rng.integers(-1, max(m, n), m), jnp.int32)
+    c_idx = jnp.asarray(rng.integers(-1, max(m, n), n), jnp.int32)
+    w = jnp.asarray(rng.uniform(0, 1, n), jnp.float32)
+    k = jnp.float32(0.37)
+    got = affinity_matvec_pallas(q, q_idx, c, c_idx, w, k, bm=64,
+                                 interpret=True)
+    want = ref.affinity_matvec_ref(q, q_idx, c, c_idx, w, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_affinity_matvec_matches_unfused_refresh():
+    """The fused op must equal the historical unfused composition (affinity
+    block -> diag zero -> mask -> matvec) with masks folded into w/rows."""
+    rng = np.random.default_rng(11)
+    cap, d = 48, 12
+    v = jnp.asarray(rng.normal(size=(cap, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 100, cap), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, cap).astype(bool))
+    x = jnp.asarray(rng.uniform(0, 1, cap), jnp.float32)
+    k = jnp.float32(0.8)
+    w = jnp.where(mask, x, 0.0)
+
+    a = ref.affinity_ref(v, v, k)
+    a = jnp.where(idx[:, None] == idx[None, :], 0.0, a)
+    a = a * (mask[:, None] & mask[None, :])
+    want = a @ w
+
+    got = ref.affinity_matvec_ref(v, idx, v, idx, w, k)
+    got = jnp.where(mask, got, 0.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------- fused ROI filter ----
+@pytest.mark.parametrize("n,d", [(64, 8), (777, 16), (4096, 32), (3, 100)])
+def test_roi_filter_kernel(n, d):
+    rng = np.random.default_rng(12)
+    vc = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    center = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    valid = jnp.asarray(rng.integers(0, 2, n).astype(bool))
+    radius = jnp.float32(0.9 * np.sqrt(d))    # keeps both branches populated
+    gd, gv, gn = roi_filter_pallas(vc, center, radius, valid, bc=256,
+                                   interpret=True)
+    wd, wv, wn = ref.roi_filter_ref(vc, center, radius, valid)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    # -inf sentinel rows must agree exactly; finite scores to float tolerance
+    np.testing.assert_array_equal(np.isinf(np.asarray(gn)),
+                                  np.isinf(np.asarray(wn)))
+    np.testing.assert_allclose(np.asarray(gn)[np.asarray(wv)],
+                               np.asarray(wn)[np.asarray(wv)],
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ fused assign ----
+@pytest.mark.parametrize("m,n_clusters,a,d", [(16, 3, 8, 8), (100, 5, 24, 16),
+                                              (257, 2, 33, 100), (1, 1, 4, 6)])
+def test_assign_kernel(m, n_clusters, a, d):
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    sup_v = jnp.asarray(rng.normal(size=(n_clusters, a, d)), jnp.float32)
+    sup_w = jnp.asarray(rng.uniform(0, 1, (n_clusters, a)), jnp.float32)
+    sup_w = sup_w / sup_w.sum(axis=1, keepdims=True)
+    dens = jnp.asarray(rng.uniform(0.4, 1.0, n_clusters), jnp.float32)
+    k = jnp.float32(0.5)
+    thr = jnp.float32(0.5)
+    sup_flat = sup_v.reshape(n_clusters * a, d)
+    w_mat = ref.assign_weight_matrix(sup_w)
+    gl, gs = assign_pallas(q, sup_flat, w_mat, dens, k, thr, bm=64,
+                           interpret=True)
+    wl, ws = ref.assign_ref(q, sup_flat, w_mat, dens, k, thr)
+    np.testing.assert_array_equal(np.asarray(gl), np.asarray(wl))
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_assign_ref_matches_legacy_predict_scores():
+    """The fused assignment must reproduce the historical per-cluster
+    vmapped score + argmax + threshold chain."""
+    rng = np.random.default_rng(14)
+    n_clusters, a, d, m = 4, 12, 10, 50
+    q = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    sup_v = jnp.asarray(rng.normal(size=(n_clusters, a, d)), jnp.float32)
+    sup_w = jnp.asarray(rng.uniform(0, 1, (n_clusters, a)), jnp.float32)
+    dens = np.asarray(rng.uniform(0.2, 0.6, n_clusters), np.float32)
+    k, thr = jnp.float32(0.45), 0.5
+
+    def one(v, w):
+        return ref.affinity_ref(q, v, k) @ w
+    scores = np.asarray(jax.vmap(one, in_axes=(0, 0), out_axes=1)(
+        sup_v, sup_w))
+    best = scores.argmax(axis=1)
+    ok = scores[np.arange(m), best] >= thr * dens[best]
+    want = np.where(ok, best, -1).astype(np.int32)
+
+    got, _ = ref.assign_ref(q, sup_v.reshape(-1, d),
+                            ref.assign_weight_matrix(sup_w),
+                            jnp.asarray(dens), k, jnp.float32(thr))
+    np.testing.assert_array_equal(np.asarray(got), want)
 
 
 # ------------------------------------------------------- flash attention ----
@@ -153,3 +268,25 @@ def test_lsh_hash_matches_pstable_module():
     want = np.asarray(hash_points(x, proj, bias, 2.0)).T  # (L,n) -> (n,L)
     got_u = np.asarray(got).astype(np.uint32)
     np.testing.assert_array_equal(got_u, want.astype(np.uint32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lsh_hash_dtype_bit_parity(dtype):
+    """Cross-dtype bit parity of the f32-cast hashing convention: for any
+    input dtype, `pstable.hash_points`, the jnp oracle, and the Pallas
+    kernel must produce IDENTICAL keys — ShardedStore/StreamedStore key
+    identity (and thus streamed/sharded retrieval parity) depends on it.
+    The einsum used to run in the input dtype while the kernel cast to f32;
+    the f32-cast convention is now shared."""
+    from repro.lsh.pstable import hash_points
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(64, 12)), dtype)
+    proj = jnp.asarray(rng.normal(size=(2, 4, 12)), dtype)
+    bias = jnp.asarray(rng.uniform(0, 1, size=(2, 4)), dtype)
+    want = np.asarray(ref.lsh_hash_ref(x, proj, bias, 0.7)).astype(np.uint32)
+    via_pstable = np.asarray(hash_points(x, proj, bias, 0.7)).T
+    via_kernel = np.asarray(
+        lsh_hash_pallas(x, proj, bias, 0.7, bn=32, interpret=True)
+    ).astype(np.uint32)
+    np.testing.assert_array_equal(via_pstable, want)
+    np.testing.assert_array_equal(via_kernel, want)
