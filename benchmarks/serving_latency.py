@@ -1,0 +1,200 @@
+"""Assignment-serving latency under open-loop load: sync fixed-slot serve()
+vs the continuous-batching `ClusterServer`.
+
+Until this benchmark nothing measured assignment latency at all — the
+"serves heavy traffic from millions of users" claim had no number attached.
+Both arms answer the same queries against the SAME fitted store through the
+same fused kernel (`ops.assign_clusters`); what differs is how queries reach
+the device:
+
+  * sync        — `serve.ClusterService`: a single-threaded polling server.
+                  Requests arrive open-loop (at t0 + i/rate, independent of
+                  completions); each loop iteration submits everything that
+                  has arrived and calls serve(), which drains the queue in
+                  fixed batches. Every request's latency includes the poll
+                  it missed plus the full drain it rode in.
+  * continuous  — `serve.batching.ClusterServer`: the background worker
+                  packs whatever is queued the moment the device frees up;
+                  requests never wait for a poll cadence.
+
+The arrival schedule is identical (same rate, same queries). Reported per
+arm: p50/p99/max latency (ms, arrival -> label delivered), throughput
+(completed/s), and the server's stage stats (queue wait / pack / compute /
+idle + batch occupancy) for the continuous arm. Correctness gate: both
+arms' labels must be BIT-IDENTICAL to per-query `Clustering.predict`
+(batch-of-1 per query) — packed+masked batches change nothing but latency.
+
+Results land in BENCH_serving.json; `--quick` shrinks the run to a CI-sized
+smoke (tier1.yml runs it and asserts the p50/p99 fields exist).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.core.alid import ALIDConfig, Clustering
+from repro.core.engine import fit
+from repro.data import auto_lsh_params, make_blobs_with_noise
+from repro.serve import ClusterServer, ClusterService, run_open_loop
+
+
+def _fit_store(quick: bool) -> tuple[Clustering, np.ndarray]:
+    """Small fitted store + held-out query mix (members, perturbed members,
+    far noise) — the serving workload."""
+    n_clusters, cluster_size, n_noise = (3, 40, 80) if quick else (8, 120, 400)
+    spec = make_blobs_with_noise(n_clusters=n_clusters,
+                                 cluster_size=cluster_size, n_noise=n_noise,
+                                 d=16, seed=7, overlap_pairs=0)
+    cfg = ALIDConfig(a_cap=max(48, cluster_size + 16), delta=64,
+                     lsh=auto_lsh_params(spec.points, probe=128),
+                     seeds_per_round=16, max_rounds=24)
+    res = fit(spec.points, cfg, jax.random.PRNGKey(0))
+    assert res.n_clusters > 0, "serving benchmark needs a non-empty store"
+    rng = np.random.default_rng(3)
+    n_q = 256 if quick else 2048
+    base = spec.points[rng.integers(0, len(spec.points), size=n_q)]
+    jitter = rng.normal(scale=0.05, size=base.shape).astype(np.float32)
+    far = rng.uniform(-60, 60, size=(n_q // 8, base.shape[1])
+                      ).astype(np.float32) + 300.0
+    queries = np.concatenate([base + jitter, far]).astype(np.float32)
+    rng.shuffle(queries)
+    return res, queries
+
+
+def _per_query_reference(res: Clustering, queries: np.ndarray) -> np.ndarray:
+    """Per-query predict (batch of 1 each) — the bit-identity oracle."""
+    return np.asarray([int(res.predict(q[None])[0]) for q in queries],
+                      np.int32)
+
+
+def _sync_arm(res: Clustering, queries: np.ndarray, rate_hz: float,
+              batch_slots: int) -> dict:
+    """Open-loop arrivals served by the polling ClusterService."""
+    svc = ClusterService(res, batch_slots=batch_slots)
+    n = len(queries)
+    t0 = time.perf_counter()
+    arrivals = t0 + np.arange(n) / rate_hz
+    done = np.zeros(n)
+    labels = np.full(n, -2, np.int32)
+    rid_to_i: dict[int, int] = {}
+    nxt = 0
+    while nxt < n or rid_to_i:
+        now = time.perf_counter()
+        if nxt < n and not rid_to_i and arrivals[nxt] > now:
+            time.sleep(arrivals[nxt] - now)
+            now = time.perf_counter()
+        while nxt < n and arrivals[nxt] <= now:
+            rid_to_i[svc.submit(queries[nxt])] = nxt
+            nxt += 1
+        if rid_to_i:
+            out = svc.serve()
+            t_done = time.perf_counter()
+            for rid, lab in out.items():
+                i = rid_to_i.pop(rid)
+                labels[i] = lab
+                done[i] = t_done
+    lat_ms = (done - arrivals) * 1e3
+    wall = done.max() - t0
+    return {
+        "latency_ms_p50": float(np.percentile(lat_ms, 50)),
+        "latency_ms_p99": float(np.percentile(lat_ms, 99)),
+        "latency_ms_max": float(lat_ms.max()),
+        "throughput_rps": float(n / wall),
+        "wall_s": float(wall),
+        "labels": labels,
+    }
+
+
+def _continuous_arm(res: Clustering, queries: np.ndarray, rate_hz: float,
+                    batch_slots: int, queue_limit: int) -> dict:
+    server = ClusterServer(batch_slots=batch_slots, queue_limit=queue_limit,
+                           policy="block")
+    server.add_tenant("default", res)
+    try:
+        out = run_open_loop(server, queries, rate_hz)
+        out["stats"] = server.stats.snapshot()
+        out["batch_occupancy"] = server.stats.occupancy(batch_slots)
+    finally:
+        server.close()
+    return out
+
+
+def main(quick: bool = False, rate_hz: float = 0.0) -> dict:
+    res, queries = _fit_store(quick)
+    batch_slots = 16 if quick else 64
+    rate = rate_hz or (1000.0 if quick else 4000.0)
+
+    ref_labels = _per_query_reference(res, queries)
+
+    # warm both jitted paths (shape-matched) so neither arm pays tracing
+    ClusterService(res, batch_slots=batch_slots).assign_source(queries[:64],
+                                                               batch_size=64)
+    warm = ClusterServer(batch_slots=batch_slots, queue_limit=len(queries))
+    warm.add_tenant("default", res)
+    warm.submit(queries[0]).result(timeout=30)
+    warm.close()
+
+    sync = _sync_arm(res, queries, rate, batch_slots)
+    cont = _continuous_arm(res, queries, rate, batch_slots,
+                           queue_limit=max(64, len(queries)))
+
+    sync_ok = bool(np.array_equal(sync.pop("labels"), ref_labels))
+    cont_ok = bool(np.array_equal(cont.pop("labels"), ref_labels))
+
+    out = {
+        "quick": quick,
+        "n_queries": int(len(queries)),
+        "d": int(queries.shape[1]),
+        "n_clusters": int(res.n_clusters),
+        "rate_hz": float(rate),
+        "batch_slots": batch_slots,
+        "sync": sync,
+        "continuous": cont,
+        "labels_identical_sync": sync_ok,
+        "labels_identical_continuous": cont_ok,
+        # top-level headline fields (CI asserts these exist)
+        "latency_ms_p50": cont["latency_ms_p50"],
+        "latency_ms_p99": cont["latency_ms_p99"],
+        "throughput_rps": cont["throughput_rps"],
+    }
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(out, f, indent=2)
+
+    csv_line("serving/sync_p50_ms", sync["latency_ms_p50"] * 1e3,
+             f"p99={sync['latency_ms_p99']:.2f}ms")
+    csv_line("serving/continuous_p50_ms", cont["latency_ms_p50"] * 1e3,
+             f"p99={cont['latency_ms_p99']:.2f}ms;"
+             f"occupancy={cont['batch_occupancy']:.2f}")
+    csv_line("serving/throughput", 0,
+             f"sync={sync['throughput_rps']:.0f}rps;"
+             f"continuous={cont['throughput_rps']:.0f}rps;"
+             f"identical={sync_ok and cont_ok}")
+    if not (sync_ok and cont_ok):
+        raise AssertionError(
+            "served labels diverged from per-query Clustering.predict "
+            f"(sync_ok={sync_ok}, continuous_ok={cont_ok})")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized smoke (small store, short open-loop run)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop arrival rate in req/s (0 = default)")
+    args = ap.parse_args()
+    r = main(quick=args.quick, rate_hz=args.rate)
+    print(f"[serving] n={r['n_queries']} rate={r['rate_hz']:.0f}rps | "
+          f"sync p50={r['sync']['latency_ms_p50']:.2f}ms "
+          f"p99={r['sync']['latency_ms_p99']:.2f}ms "
+          f"{r['sync']['throughput_rps']:.0f}rps | "
+          f"continuous p50={r['continuous']['latency_ms_p50']:.2f}ms "
+          f"p99={r['continuous']['latency_ms_p99']:.2f}ms "
+          f"{r['continuous']['throughput_rps']:.0f}rps "
+          f"occ={r['continuous']['batch_occupancy']:.2f}")

@@ -19,6 +19,7 @@ shims over `engine.fit`.
 from __future__ import annotations
 
 import functools
+import os
 import warnings
 from typing import NamedTuple, Optional
 
@@ -138,20 +139,37 @@ def _assign_batch(q, sup_v, sup_w, dens, k, threshold, backend: str = "auto"):
     return labels
 
 
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _assign_batch_masked(q, valid, sup_v, sup_w, dens, k, threshold,
+                         backend: str = "auto"):
+    """Fused assignment of a padded serving batch: `valid` marks the real
+    slots, pad rows come out -1 (see `ops.assign_clusters`)."""
+    labels, _ = ops.assign_clusters(q, sup_v, sup_w, dens, k, threshold,
+                                    valid, backend=backend)
+    return labels
+
+
 def assign_labels(q, sup_v, sup_w, densities, k, threshold: float,
-                  backend: str = "auto") -> np.ndarray:
+                  backend: str = "auto", valid=None) -> np.ndarray:
     """Label queries by max weighted support affinity, -1 below the bar.
 
-    Shared by `Clustering.predict` and `serve.ClusterService` (the service
-    passes pre-converted device arrays so the support tensor is uploaded
-    once, not per batch). Array args may be numpy or jax arrays. The whole
+    Shared by `Clustering.predict` and the serving layer (`serve.batching`
+    pre-converts device arrays so the support tensor is uploaded once, not
+    per batch). Array args may be numpy or jax arrays. The whole
     score/argmax/threshold chain is ONE kernel-layer op
     (`ops.assign_clusters`), so serving runs fused on every backend.
+
+    `valid` ((m,) bool, optional) is the slot-validity mask of a padded
+    fixed-shape batch: pad slots can never produce a label (they come out
+    -1), real slots are bit-identical to the unmasked call.
     """
-    return np.asarray(_assign_batch(
-        jnp.asarray(q), jnp.asarray(sup_v), jnp.asarray(sup_w),
-        jnp.asarray(densities, jnp.float32), jnp.float32(k),
-        jnp.float32(threshold), backend=backend))
+    args = (jnp.asarray(q), jnp.asarray(sup_v), jnp.asarray(sup_w),
+            jnp.asarray(densities, jnp.float32), jnp.float32(k),
+            jnp.float32(threshold))
+    if valid is None:
+        return np.asarray(_assign_batch(*args, backend=backend))
+    return np.asarray(_assign_batch_masked(
+        args[0], jnp.asarray(valid, bool), *args[1:], backend=backend))
 
 
 def assign_labels_source(source, sup_v, sup_w, densities, k,
@@ -174,6 +192,13 @@ def assign_labels_source(source, sup_v, sup_w, densities, k,
         out[start:start + m] = assign_labels(q, sup_v, sup_w, densities, k,
                                              threshold, backend)[:m]
     return out
+
+
+def _npz_path(path) -> str:
+    """np.savez's suffix rule, applied symmetrically: '.npz' is appended
+    unless already present, so save/load agree on the literal file name."""
+    p = os.fspath(path)
+    return p if p.endswith(".npz") else p + ".npz"
 
 
 class Clustering(NamedTuple):
@@ -258,12 +283,21 @@ class Clustering(NamedTuple):
             if "support_v" in d else None,
         )
 
-    def save(self, path) -> None:
+    def save(self, path) -> str:
+        """Write the result as .npz and return the ACTUAL path written.
+
+        `np.savez` silently appends ".npz" when the suffix is missing, so a
+        suffixless `save(p)` + `load(p)` used to fail (`load` opened the
+        literal path). Both ends now normalize through `_npz_path`; the
+        returned string is always openable.
+        """
+        path = _npz_path(path)
         np.savez(path, **self.to_dict())
+        return path
 
     @classmethod
     def load(cls, path) -> "Clustering":
-        with np.load(path) as z:
+        with np.load(_npz_path(path)) as z:
             return cls.from_dict({k: z[k] for k in z.files})
 
 

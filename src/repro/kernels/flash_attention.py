@@ -32,7 +32,7 @@ MASK_VALUE = -1e30
 LANES = 128
 
 
-def _flash_kernel(qoff_ref, q_ref, k_ref, v_ref, o_ref,
+def _flash_kernel(qoff_ref, ks_ref, q_ref, k_ref, v_ref, o_ref,
                   m_ref, l_ref, acc_ref, *,
                   bq: int, bk: int, n_kv: int, sk_valid: int, causal: bool,
                   window: int | None, chunk: int | None,
@@ -53,9 +53,16 @@ def _flash_kernel(qoff_ref, q_ref, k_ref, v_ref, o_ref,
         s = softcap * jnp.tanh(s / softcap)
 
     iq = pl.program_id(2)
-    qpos = qoff_ref[0] + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    # left-pad handling (serving batches): kv slots < start are never
+    # attended, and position masks run in LOGICAL positions (slot - start) so
+    # window/chunk masks of a packed prompt match its solo run; start == 0
+    # (the default) reduces to the original slot-space masking exactly.
+    start = ks_ref[pl.program_id(0)]
+    qpos = (qoff_ref[0] + iq * bq - start
+            + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
     kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = kpos < sk_valid        # kv padding is never attended
+    mask = (kpos < sk_valid) & (kpos >= start)  # kv padding is never attended
+    kpos = kpos - start
     if causal:
         mask &= kpos <= qpos
     if window is not None:
@@ -106,6 +113,7 @@ def flash_attention_pallas(
     bq: int = 128,
     bk: int = 128,
     interpret: bool = False,
+    kv_start: jax.Array | None = None,   # (B,) left-pad slots per row
 ) -> jax.Array:
     b, h, sq, dh = q.shape
     hkv, sk = k.shape[1], k.shape[2]
@@ -124,6 +132,8 @@ def flash_attention_pallas(
     n_q, n_kv = (sq + pq) // bq, (sk + pk) // bk
 
     qoff = jnp.asarray(q_offset, jnp.int32).reshape(1)
+    ks = (jnp.zeros((b,), jnp.int32) if kv_start is None
+          else jnp.asarray(kv_start, jnp.int32).reshape(b))
 
     grid = (b, h, n_q, n_kv)
     kernel = functools.partial(
@@ -134,6 +144,7 @@ def flash_attention_pallas(
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, bq, dh), lambda bb, hh, ii, jj: (bb, hh, ii, 0)),
             pl.BlockSpec((1, 1, bk, dh), lambda bb, hh, ii, jj: (bb, hh // rep, jj, 0)),
@@ -149,5 +160,5 @@ def flash_attention_pallas(
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(qoff, qp, kp, vp)
+    )(qoff, ks, qp, kp, vp)
     return out[:, :, :sq, :]

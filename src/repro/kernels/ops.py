@@ -127,13 +127,23 @@ def roi_filter(vc: jax.Array, center: jax.Array, radius, valid: jax.Array,
 
 
 def assign_clusters(q: jax.Array, sup_v: jax.Array, sup_w: jax.Array,
-                    dens: jax.Array, k_scale, threshold, *,
+                    dens: jax.Array, k_scale, threshold,
+                    valid: jax.Array | None = None, *,
                     backend: str = "auto", **kw):
     """Fused batched cluster assignment (predict / serve): weighted support
     affinity scores + argmax + density-threshold accept.
 
     q:(m,d), sup_v:(C,A,d), sup_w:(C,A), dens:(C,) ->
     (labels (m,) int32 with -1 = no cluster, best_score (m,) f32).
+
+    `valid` is the slot-validity mask of a padded serving batch ((m,) bool;
+    None = every row is a real query). Like the other fused ops it folds
+    into the epilogue, not a kernel branch: invalid rows get label -1 and
+    score 0 EXACTLY, valid rows are untouched, so a packed batch stays
+    bit-identical to per-query assignment on every backend. Pad rows of a
+    fixed-slot batch are zero vectors — without the mask they would be real
+    points at the origin, scored against every support (and mis-assigned if
+    a cluster sits near the origin).
     """
     n_clusters, a, d = sup_v.shape
     sup_flat = jnp.asarray(sup_v, jnp.float32).reshape(n_clusters * a, d)
@@ -143,24 +153,36 @@ def assign_clusters(q: jax.Array, sup_v: jax.Array, sup_w: jax.Array,
     threshold = jnp.asarray(threshold, jnp.float32)
     mode = resolve_backend(backend)
     if mode == "ref":
-        return _ref.assign_ref(q, sup_flat, w_mat, dens, k_scale, threshold)
-    return assign_pallas(q, sup_flat, w_mat, dens, k_scale, threshold,
-                         interpret=(mode == "interpret"), **kw)
+        labels, score = _ref.assign_ref(q, sup_flat, w_mat, dens, k_scale,
+                                        threshold)
+    else:
+        labels, score = assign_pallas(q, sup_flat, w_mat, dens, k_scale,
+                                      threshold,
+                                      interpret=(mode == "interpret"), **kw)
+    if valid is not None:
+        valid = jnp.asarray(valid, bool)
+        labels = jnp.where(valid, labels, -1)
+        score = jnp.where(valid, score, 0.0)
+    return labels, score
 
 
 def flash_attention(q, k, v, q_offset=0, *, causal=True, window=None,
                     chunk=None, softcap=None, scale=None, flat_gqa=True,
-                    backend: str = "auto", **kw) -> jax.Array:
+                    kv_start=None, backend: str = "auto", **kw) -> jax.Array:
+    """`kv_start` ((B,) int32 or None) is the left-padded serving-batch
+    contract: kv slots < kv_start[b] are pad — never attended — and the
+    causal/window/chunk masks run in logical positions (slot - kv_start), so
+    packed prompts match their solo runs. None = no padding."""
     mode = resolve_backend(backend)
     if mode == "ref":
         return _ref.attention_ref(q, k, v, causal=causal, window=window,
                                   chunk=chunk, softcap=softcap,
                                   q_offset=q_offset, scale=scale,
-                                  flat_gqa=flat_gqa)
+                                  flat_gqa=flat_gqa, kv_start=kv_start)
     return flash_attention_pallas(q, k, v, q_offset, causal=causal,
                                   window=window, chunk=chunk, softcap=softcap,
                                   scale=scale, interpret=(mode == "interpret"),
-                                  **kw)
+                                  kv_start=kv_start, **kw)
 
 
 def segment_matmul(msg, seg_ids, n_segments: int, *, backend: str = "auto",

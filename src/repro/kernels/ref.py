@@ -115,8 +115,23 @@ def assign_ref(q: jax.Array, sup_flat: jax.Array, w_mat: jax.Array,
 
 
 # --------------------------------------------------------- flash attention --
+def _pad_mask(q_offset, kv_start, sq, sk):
+    """Per-row position mask for LEFT-PADDED serving batches.
+
+    kv_start:(B,) = number of pad slots at the front of each row's kv
+    timeline. Returns (qpos, kpos, mask) in LOGICAL positions (slot -
+    kv_start) with pad kv slots masked out: causal masking is shift-
+    invariant, but window/chunk masks are not, so they must see logical
+    positions for a packed short prompt to match its solo run.
+    """
+    start = jnp.asarray(kv_start, jnp.int32)[:, None, None]       # (B,1,1)
+    qpos = (jnp.asarray(q_offset) + jnp.arange(sq))[None, :, None] - start
+    kpos = jnp.arange(sk)[None, None, :] - start                  # (B,1,Sk)
+    return qpos, kpos, kpos >= 0
+
+
 def _attention_dense(q, k, v, *, causal, window, chunk, softcap, q_offset,
-                     scale, flat_gqa=True):
+                     scale, flat_gqa=True, kv_start=None):
     """One dense block: q (B,H,Sq,dh) vs full kv. Sq is a q-block.
 
     GQA is handled by REPEATING kv to flat heads rather than reshaping q to
@@ -137,7 +152,8 @@ def _attention_dense(q, k, v, *, causal, window, chunk, softcap, q_offset,
     elif rep > 1:
         out = _attention_grouped(q, k, v, causal=causal, window=window,
                                  chunk=chunk, softcap=softcap,
-                                 q_offset=q_offset, scale=scale)
+                                 q_offset=q_offset, scale=scale,
+                                 kv_start=kv_start)
         return out
 
     logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
@@ -145,16 +161,20 @@ def _attention_dense(q, k, v, *, causal, window, chunk, softcap, q_offset,
     if softcap is not None:
         logits = softcap * jnp.tanh(logits / softcap)
 
-    qpos = jnp.asarray(q_offset) + jnp.arange(sq)[:, None]     # (Sq, 1)
-    kpos = jnp.arange(sk)[None, :]                              # (1, Sk)
-    mask = jnp.ones((sq, sk), bool)
+    if kv_start is None:
+        qpos = jnp.asarray(q_offset) + jnp.arange(sq)[:, None]  # (Sq, 1)
+        kpos = jnp.arange(sk)[None, :]                          # (1, Sk)
+        mask = jnp.ones((sq, sk), bool)
+    else:
+        qpos, kpos, mask = _pad_mask(q_offset, kv_start, sq, sk)
     if causal:
-        mask &= kpos <= qpos
+        mask = mask & (kpos <= qpos)
     if window is not None:
-        mask &= kpos > qpos - window
+        mask = mask & (kpos > qpos - window)
     if chunk is not None:
-        mask &= (kpos // chunk) == (qpos // chunk)
-    logits = jnp.where(mask[None, None], logits, MASK_VALUE)
+        mask = mask & ((kpos // chunk) == (qpos // chunk))
+    mask = mask[None, None] if kv_start is None else mask[:, None]
+    logits = jnp.where(mask, logits, MASK_VALUE)
 
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
@@ -162,7 +182,7 @@ def _attention_dense(q, k, v, *, causal, window, chunk, softcap, q_offset,
 
 
 def _attention_grouped(q, k, v, *, causal, window, chunk, softcap, q_offset,
-                       scale):
+                       scale, kv_start=None):
     """Grouped-GQA einsum (kv kept at Hkv heads) — decode path."""
     b, h, sq, dh = q.shape
     hkv, sk = k.shape[1], k.shape[2]
@@ -171,16 +191,21 @@ def _attention_grouped(q, k, v, *, causal, window, chunk, softcap, q_offset,
     logits = jnp.einsum("bgrqd,bgkd->bgrqk", qr, k.astype(jnp.float32)) * scale
     if softcap is not None:
         logits = softcap * jnp.tanh(logits / softcap)
-    qpos = jnp.asarray(q_offset) + jnp.arange(sq)[:, None]
-    kpos = jnp.arange(sk)[None, :]
-    mask = jnp.ones((sq, sk), bool)
+    if kv_start is None:
+        qpos = jnp.asarray(q_offset) + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        mask = jnp.ones((sq, sk), bool)
+    else:
+        qpos, kpos, mask = _pad_mask(q_offset, kv_start, sq, sk)
     if causal:
-        mask &= kpos <= qpos
+        mask = mask & (kpos <= qpos)
     if window is not None:
-        mask &= kpos > qpos - window
+        mask = mask & (kpos > qpos - window)
     if chunk is not None:
-        mask &= (kpos // chunk) == (qpos // chunk)
-    logits = jnp.where(mask[None, None, None], logits, MASK_VALUE)
+        mask = mask & ((kpos // chunk) == (qpos // chunk))
+    mask = (mask[None, None, None] if kv_start is None
+            else mask[:, None, None])
+    logits = jnp.where(mask, logits, MASK_VALUE)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bgrqk,bgkd->bgrqd", probs, v.astype(jnp.float32))
     return out.reshape(b, h, sq, dh).astype(q.dtype)
@@ -199,15 +224,23 @@ def attention_ref(
     scale: float | None = None,
     block_q: int = 1024,
     flat_gqa: bool = True,   # False: grouped kv einsum (heads % mesh != 0)
+    kv_start: jax.Array | None = None,  # (B,) left-pad slots per row
 ) -> jax.Array:
     """XLA-path attention with flash-like memory behaviour: long sequences are
     scanned in q blocks (each checkpointed), so live probs are (B,H,bq,Sk)
     instead of (B,H,Sq,Sk) — this is what the dry-run lowers and what the
-    per-device memory_analysis reflects."""
+    per-device memory_analysis reflects.
+
+    `kv_start` is the left-padded-batch contract (serve.BatchServer): row i's
+    kv slots [0, kv_start[i]) are padding — never attended — and position
+    masks shift to logical positions slot - kv_start[i], so a short prompt
+    packed next to a longer one sees exactly the attention pattern of its
+    solo run. None = no padding (the training / single-sequence path,
+    bit-identical to before)."""
     b, h, sq, dh = q.shape
     scale = (dh ** -0.5) if scale is None else scale
     kw = dict(causal=causal, window=window, chunk=chunk, softcap=softcap,
-              scale=scale, flat_gqa=flat_gqa)
+              scale=scale, flat_gqa=flat_gqa, kv_start=kv_start)
     if sq <= block_q or sq % block_q != 0:
         return _attention_dense(q, k, v, q_offset=q_offset, **kw)
 

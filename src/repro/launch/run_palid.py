@@ -128,6 +128,13 @@ def main():
                     help="print the pipeline stage report (read/put/"
                          "compute/wait seconds, cache + prefetch hit "
                          "rates) after the fit")
+    ap.add_argument("--serve-bench", action="store_true",
+                    help="after the fit, stand up the continuous-batching "
+                         "assignment server over the result and drive it "
+                         "with open-loop traffic; prints p50/p99 latency, "
+                         "throughput and batch occupancy")
+    ap.add_argument("--serve-rate", type=float, default=2000.0,
+                    help="--serve-bench open-loop arrival rate (req/s)")
     ap.add_argument("--a-cap", type=int, default=0,
                     help="support capacity override (0 = auto)")
     ap.add_argument("--seeds-per-round", type=int, default=32)
@@ -184,8 +191,37 @@ def main():
             print(f"[palid] {stats.report()}" if stats is not None else
                   f"[palid] --profile: engine {cfg.spec.engine!r} has no "
                   "pipeline stats (streamed only)")
+        if args.serve_bench:
+            _serve_bench(res, source, args.serve_rate)
     finally:
         engine.close()
+
+
+def _serve_bench(res, source, rate_hz: float) -> None:
+    """Open-loop traffic against the continuous-batching assignment server,
+    replaying rows of the just-fitted dataset as queries."""
+    import numpy as np
+
+    from repro.core.source import as_source
+    from repro.serve import ClusterServer, run_open_loop
+
+    if res.n_clusters == 0:
+        print("[palid] --serve-bench: fit produced 0 clusters, skipping")
+        return
+    src = as_source(source)
+    n_q = min(src.n, 1024)
+    rng = np.random.default_rng(0)
+    queries = src.sample(np.sort(rng.choice(src.n, size=n_q, replace=False)))
+    with ClusterServer(batch_slots=64, queue_limit=max(128, n_q),
+                       policy="block") as server:
+        server.add_tenant("default", res)
+        server.submit(queries[0]).result(timeout=30)   # warm the jit
+        out = run_open_loop(server, queries, rate_hz)
+        occ = server.stats.occupancy(64)
+    print(f"[palid] serve n={n_q} rate={rate_hz:.0f}rps "
+          f"p50={out['latency_ms_p50']:.2f}ms "
+          f"p99={out['latency_ms_p99']:.2f}ms "
+          f"tput={out['throughput_rps']:.0f}rps occupancy={occ:.2f}")
 
 
 if __name__ == "__main__":

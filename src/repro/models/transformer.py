@@ -152,7 +152,7 @@ def _attn_kwargs(cfg: LMConfig, kind: str) -> dict:
 
 
 def _attention(p, cfg: LMConfig, kind: str, x, positions, cache=None,
-               cache_pos=None, training: bool = True):
+               cache_pos=None, training: bool = True, kv_start=None):
     """x: (B, S, D). cache: optional dict(k,v): (B, Hkv, S_max, dh).
     Returns (out, new_cache)."""
     from repro.distributed.shardings import constrain
@@ -204,6 +204,7 @@ def _attention(p, cfg: LMConfig, kind: str, x, positions, cache=None,
         cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
                                           (0, 0, cache_pos, 0))
         out = kops.flash_attention(q, ck, cv, cache_pos, flat_gqa=flat,
+                                   kv_start=kv_start,
                                    **_attn_kwargs(cfg, kind))
         new_cache = {"k": ck, "v": cv}
     out = jnp.swapaxes(out, 1, 2).reshape(b, s, h * dh)
@@ -223,10 +224,11 @@ def _dense_ffn(p, x, training: bool = True):
 
 
 def _block(p, cfg: LMConfig, kind: str, x, positions, cache=None,
-           cache_pos=None, training: bool = True):
+           cache_pos=None, training: bool = True, kv_start=None):
     a_in = L.rms_norm(x, p["ln_attn"], cfg.norm_eps)
     a_out, new_cache = _attention(p, cfg, kind, a_in, positions, cache,
-                                  cache_pos, training=training)
+                                  cache_pos, training=training,
+                                  kv_start=kv_start)
     if cfg.post_norms:
         a_out = L.rms_norm(a_out, p["ln_attn_post"], cfg.norm_eps)
     x = x + a_out
@@ -294,16 +296,25 @@ def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None) -> dict:
 
 
 def _cache_forward(params: dict, cfg: LMConfig, cache: dict, tokens: jax.Array,
-                   pos: jax.Array):
+                   pos: jax.Array, pad: jax.Array | None = None):
     """Forward T tokens against a KV cache, writing them at [pos, pos+T).
     T=1 is decode; T=prompt_len with pos=0 is prefill. Returns
-    (logits (B, T, V), new_cache)."""
+    (logits (B, T, V), new_cache).
+
+    `pad` ((B,) int32, optional) is the per-row LEFT-pad length of a packed
+    serving batch: row i's cache slots [0, pad[i]) hold pad tokens. RoPE
+    positions shift to logical positions (slot - pad[i]) and attention masks
+    those slots out (ops.flash_attention kv_start), so every row computes
+    exactly what it would solo. None = unpadded (bit-identical old path)."""
     b, t = tokens.shape
     x = params["embed"][tokens].astype(cfg.dtype)     # (B, T, D)
     if cfg.embed_scale:
         x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.dtype)
     positions = (pos + jnp.arange(t))[None, :].astype(jnp.int32)
     positions = jnp.broadcast_to(positions, (b, t))
+    if pad is not None:
+        # logical positions; pad-slot rows go negative but are never attended
+        positions = positions - pad[:, None].astype(jnp.int32)
 
     def group_body(carry, xs):
         # cache travels in the CARRY with indexed in-place updates: XLA then
@@ -318,7 +329,7 @@ def _cache_forward(params: dict, cfg: LMConfig, cache: dict, tokens: jax.Array,
                 {"k": cache[f"layer{i}"]["k"], "v": cache[f"layer{i}"]["v"]})
             x, _, nc = _block(group_params[f"layer{i}"], cfg, kind, x,
                               positions, cache=layer_cache, cache_pos=pos,
-                              training=False)
+                              training=False, kv_start=pad)
             cache = {
                 **cache,
                 f"layer{i}": jax.tree.map(
@@ -341,17 +352,22 @@ def _cache_forward(params: dict, cfg: LMConfig, cache: dict, tokens: jax.Array,
 
 
 def decode_step(params: dict, cfg: LMConfig, cache: dict, token: jax.Array,
-                pos: jax.Array):
+                pos: jax.Array, pad: jax.Array | None = None):
     """One decode step. token: (B, 1) int32; pos: scalar int32 (current write
-    position = number of tokens already in the cache).
+    position = number of tokens already in the cache). `pad` ((B,) int32,
+    optional): per-row left-pad of a packed batch (see `_cache_forward`).
     Returns (logits (B, V), new_cache)."""
-    logits, new_cache = _cache_forward(params, cfg, cache, token, pos)
+    logits, new_cache = _cache_forward(params, cfg, cache, token, pos, pad)
     return logits[:, 0, :], new_cache
 
 
 def prefill_with_cache(params: dict, cfg: LMConfig, cache: dict,
-                       tokens: jax.Array):
-    """Prefill a prompt into an (empty) cache. Returns (last_logits (B, V),
-    new_cache)."""
-    logits, new_cache = _cache_forward(params, cfg, cache, tokens, jnp.int32(0))
+                       tokens: jax.Array, pad: jax.Array | None = None):
+    """Prefill a prompt into an (empty) cache. Left-padded batches pass the
+    per-row pad length so pad tokens are neither attended nor counted in
+    RoPE positions (see `_cache_forward`). Returns (last_logits (B, V),
+    new_cache) — the last slot is each row's last REAL token (left-pad
+    aligns last tokens)."""
+    logits, new_cache = _cache_forward(params, cfg, cache, tokens,
+                                       jnp.int32(0), pad)
     return logits[:, -1, :], new_cache

@@ -1,0 +1,512 @@
+"""Continuous-batching, multi-tenant cluster-assignment serving.
+
+`serve.cluster_service.ClusterService` is the synchronous fixed-slot path:
+callers submit, then call serve() themselves. This module is the traffic-
+scale layer on top of the same fused assignment kernel
+(`repro.kernels.ops.assign_clusters`):
+
+  * `Tenant`        — one RESIDENT fitted `Clustering`: support tensors
+                      pre-uploaded to device once (never per batch), plus a
+                      pair of pinned host staging buffers (double-buffered:
+                      batch t+1 packs into one buffer while the device still
+                      owns the other's upload) and the per-tenant kernel
+                      backend/threshold. Tenants are keyed by (name, version)
+                      in the server registry, so one process serves many
+                      datasets/versions side by side.
+  * `ClusterServer` — the continuous-batching server: `submit()` enqueues a
+                      request and returns a `concurrent.futures.Future`
+                      immediately; a background worker packs WHATEVER is
+                      queued (up to `batch_slots`, round-robin across
+                      tenants) into one fixed-shape device batch per step.
+                      Fixed shapes mean the jitted kernel compiles once per
+                      (slots, d); partially-filled batches carry a slot-
+                      validity mask so pad slots can never produce a label
+                      (see `ops.assign_clusters`).
+  * admission control — `queue_limit` bounds the total queued requests;
+                      `policy="reject"` raises `QueueFull` at submit,
+                      `policy="block"` makes submit wait for space
+                      (backpressure), with an optional timeout.
+  * `ServingStats`  — PipelineStats-style counters: queue depth, batch
+                      occupancy, and per-stage wait / pack / compute timers.
+
+Why continuous batching matters here: ALID's localization makes assignment
+O(C·cap) per query independent of n (paper Sec. 4), so the serving cost is
+dominated by HOW queries reach the kernel. A fixed-slot sync server pays a
+full batch latency at every call whatever the arrival pattern; the
+continuous worker instead drains the queue as fast as the device finishes
+batches — occupancy adapts to load, and p99 latency under open-loop traffic
+is what `benchmarks/serving_latency.py` measures (BENCH_serving.json).
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.alid import Clustering, assign_labels_source
+from repro.kernels import ops
+
+
+class QueueFull(RuntimeError):
+    """Admission control rejected a submit: the bounded queue is full
+    (policy="reject"), or policy="block" timed out waiting for space."""
+
+
+# ---------------------------------------------------------------- metrics --
+class ServingStats:
+    """Serving counters in the `core.pipeline.PipelineStats` style.
+
+    Stage seconds are host-side: `wait_s` is worker idle time between
+    batches (queue empty), `pack_s` the host packing of queued requests into
+    the staging buffer, `compute_s` the device upload + fused assign + sync
+    per batch, and `queue_wait_s` the SUM over requests of (pack start −
+    submit) — queue_wait_s / served is the mean queueing delay. Occupancy =
+    slots_filled / (batches · batch_slots): low occupancy under load means
+    the device is spinning on mostly-empty batches, high occupancy with
+    rising queue_depth_peak means the device is the bottleneck.
+    """
+
+    _FIELDS = ("submitted", "served", "rejected", "cancelled", "batches",
+               "slots_filled", "queue_depth_peak", "queue_wait_s", "pack_s",
+               "compute_s", "wait_s")
+
+    def __init__(self) -> None:
+        for f in self._FIELDS:
+            setattr(self, f, 0.0 if f.endswith("_s") else 0)
+        self._lock = threading.Lock()
+
+    def add(self, field: str, amount=1) -> None:
+        with self._lock:
+            setattr(self, field, getattr(self, field) + amount)
+
+    def peak(self, field: str, value) -> None:
+        with self._lock:
+            setattr(self, field, max(getattr(self, field), value))
+
+    def snapshot(self) -> dict:
+        return {f: (float(v) if isinstance(v := getattr(self, f), float)
+                    else int(v)) for f in self._FIELDS}
+
+    def occupancy(self, batch_slots: int) -> float:
+        s = self.snapshot()
+        return (s["slots_filled"] / (s["batches"] * batch_slots)
+                if s["batches"] else 0.0)
+
+    def report(self, batch_slots: int = 0) -> str:
+        s = self.snapshot()
+        occ = (f" occupancy={self.occupancy(batch_slots):.2f}"
+               if batch_slots else "")
+        return ("serving: "
+                f"submitted={s['submitted']} served={s['served']} "
+                f"rejected={s['rejected']} cancelled={s['cancelled']} | "
+                f"batches={s['batches']}{occ} "
+                f"queue_peak={s['queue_depth_peak']} | "
+                f"queue_wait={s['queue_wait_s']:.3f}s "
+                f"pack={s['pack_s']:.3f}s compute={s['compute_s']:.3f}s "
+                f"idle={s['wait_s']:.3f}s")
+
+
+# ----------------------------------------------------------------- tenant --
+def _assign_masked(q, valid, sup_v, sup_w, dens, k, threshold,
+                   backend: str = "auto"):
+    labels, _ = ops.assign_clusters(q, sup_v, sup_w, dens, k, threshold,
+                                    valid, backend=backend)
+    return labels
+
+
+# Masked fused assignment with the per-batch buffers DONATED: the query
+# upload and validity mask are dead after the call, so XLA reuses their
+# device allocation for the next batch (double-buffered uploads — the
+# staging pair in `Tenant` alternates on the host side). CPU/interpret runs
+# fall back to the plain jit: XLA:CPU cannot donate and warns per call.
+_assign_donated = jax.jit(_assign_masked, static_argnames=("backend",),
+                          donate_argnums=(0, 1))
+_assign_plain = jax.jit(_assign_masked, static_argnames=("backend",))
+
+
+def _assign_jit():
+    return (_assign_donated if jax.default_backend() in ("tpu", "gpu")
+            else _assign_plain)
+
+
+class Tenant:
+    """One resident fitted `Clustering`: pre-uploaded support tensors + the
+    per-tenant assignment path. The registry in `ClusterServer` holds many.
+
+    Upload happens ONCE here (construction), not per batch: `sup_v`/`sup_w`/
+    `densities` become device arrays immediately. `assign_np` is the one
+    batch entry point shared by the sync `ClusterService` and the
+    continuous-batching worker — both therefore obey the same padding
+    contract: a packed (slots, d) batch with zero-filled pad rows MUST carry
+    the slot-validity mask, and pad slots come back -1 always.
+    """
+
+    def __init__(self, name: str, clustering: Clustering, *,
+                 threshold: float = 0.5, backend: str = "auto",
+                 version: int = 0):
+        assert clustering.support_v is not None, (
+            "Tenant needs a Clustering with stored supports "
+            "(produced by repro.core.engine.fit)")
+        self.name, self.version = name, int(version)
+        self.clustering = clustering
+        self.threshold = float(threshold)
+        self.backend = backend
+        self.d = int(clustering.support_v.shape[2])
+        self.n_clusters = clustering.n_clusters
+        self._sup_v = jnp.asarray(clustering.support_v, jnp.float32)
+        self._sup_w = jnp.asarray(clustering.support_w, jnp.float32)
+        self._dens = jnp.asarray(clustering.densities, jnp.float32)
+        self._k = jnp.float32(clustering.k)
+        self._thr = jnp.float32(threshold)
+        # double-buffered pinned staging pairs, sized lazily per batch_slots
+        self._staging: dict[int, list[tuple[np.ndarray, np.ndarray]]] = {}
+        self._flip = 0
+
+    @property
+    def key(self) -> tuple[str, int]:
+        return (self.name, self.version)
+
+    def check_query(self, q) -> np.ndarray:
+        q = np.asarray(q, np.float32)
+        if q.shape != (self.d,):
+            raise ValueError(
+                f"one {self.d}-d point per request for tenant "
+                f"{self.name!r} v{self.version}, got shape {q.shape}")
+        return q
+
+    def staging(self, slots: int) -> tuple[np.ndarray, np.ndarray]:
+        """Next host staging pair (queries, validity) for a `slots`-sized
+        batch — two buffers alternate so packing batch t+1 never scribbles
+        over the buffer whose device upload batch t may still be reading."""
+        if slots not in self._staging:
+            self._staging[slots] = [
+                (np.zeros((slots, self.d), np.float32),
+                 np.zeros((slots,), bool)) for _ in range(2)]
+        self._flip ^= 1
+        return self._staging[slots][self._flip]
+
+    def assign_np(self, q: np.ndarray, valid: np.ndarray) -> np.ndarray:
+        """Assign one packed batch: (slots, d) f32 + (slots,) bool validity
+        -> (slots,) int32 labels, -1 on pad slots and below-threshold real
+        slots. Synchronous (blocks until device results are on host)."""
+        if self.n_clusters == 0:
+            return np.full((q.shape[0],), -1, np.int32)
+        labels = _assign_jit()(jnp.asarray(q), jnp.asarray(valid),
+                               self._sup_v, self._sup_w, self._dens,
+                               self._k, self._thr, backend=self.backend)
+        return np.asarray(labels)
+
+    def assign_source(self, source, batch_size: int = 256) -> np.ndarray:
+        """Bulk offline counterpart: label every row of a DataSource against
+        the resident supports in fixed-shape batches (O(batch·C·cap) peak,
+        never O(n))."""
+        from repro.core.source import as_source
+        source = as_source(source)
+        if self.n_clusters == 0:
+            return np.full((source.n,), -1, np.int32)
+        return assign_labels_source(
+            source, self._sup_v, self._sup_w, self._dens,
+            self.clustering.k, self.threshold, batch_size=batch_size,
+            backend=self.backend)
+
+
+# ----------------------------------------------------------------- server --
+class _Request:
+    __slots__ = ("tenant_key", "vec", "future", "t_submit")
+
+    def __init__(self, tenant_key, vec, future, t_submit):
+        self.tenant_key = tenant_key
+        self.vec = vec
+        self.future = future
+        self.t_submit = t_submit
+
+
+class ClusterServer:
+    """Continuous-batching, multi-tenant assignment server.
+
+        server = ClusterServer(batch_slots=64, queue_limit=512,
+                               policy="block")
+        server.add_tenant("sift", clustering)
+        fut = server.submit(vec, tenant="sift")   # returns immediately
+        label = fut.result(timeout=5.0)           # int, -1 = no cluster
+        server.close()                            # drains, then stops
+
+    A single daemon worker loops: wait for work → pick the next tenant
+    (round-robin over tenants with queued requests; batches are per-tenant
+    because support tensors differ) → pop up to `batch_slots` requests →
+    pack them into the tenant's staging pair (zero-filled pad rows + slot-
+    validity mask) → one fused, donated device call → resolve futures with
+    int labels. There is no fixed serve() cadence: as soon as the device
+    finishes a batch the worker packs the next from whatever arrived in the
+    meantime — occupancy self-adjusts to load.
+
+    Admission control: at most `queue_limit` requests may be queued.
+    `policy="reject"` raises `QueueFull` immediately; `policy="block"`
+    parks the submitting thread until a slot frees (optionally bounded by
+    `timeout`, then `QueueFull`).
+
+    `close(drain=True)` stops intake, serves everything already queued,
+    then joins the worker; `close(drain=False)` cancels queued futures
+    (callers blocked in `result()` get `CancelledError`).
+    """
+
+    def __init__(self, batch_slots: int = 64, queue_limit: int = 1024,
+                 policy: str = "block", start: bool = True):
+        if policy not in ("block", "reject"):
+            raise ValueError(f"policy must be 'block'|'reject', got {policy!r}")
+        if queue_limit < 1:
+            raise ValueError("queue_limit must be >= 1")
+        self.batch_slots = int(batch_slots)
+        self.queue_limit = int(queue_limit)
+        self.policy = policy
+        self.stats = ServingStats()
+        self._tenants: dict[tuple[str, int], Tenant] = {}
+        self._queues: dict[tuple[str, int], deque[_Request]] = {}
+        self._rr: deque[tuple[str, int]] = deque()   # round-robin order
+        self._pending = 0
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)   # worker waits here
+        self._space = threading.Condition(self._lock)  # blocked submitters
+        self._stopping = False
+        self._draining = False
+        self._worker: Optional[threading.Thread] = None
+        if start:
+            self.start()
+
+    # ------------------------------------------------------------ registry
+    def add_tenant(self, name: str, clustering: Clustering, *,
+                   threshold: float = 0.5, backend: str = "auto",
+                   version: int = 0) -> Tenant:
+        """Register (or replace) a resident store under (name, version).
+        Supports are uploaded to device here, once."""
+        t = Tenant(name, clustering, threshold=threshold, backend=backend,
+                   version=version)
+        with self._lock:
+            if self._stopping:
+                raise RuntimeError("server is closed")
+            self._tenants[t.key] = t
+            self._queues.setdefault(t.key, deque())
+            if t.key not in self._rr:
+                self._rr.append(t.key)
+        return t
+
+    def remove_tenant(self, name: str, version: int = 0) -> None:
+        """Deregister; queued requests for the tenant are cancelled."""
+        key = (name, int(version))
+        with self._lock:
+            self._tenants.pop(key, None)
+            dropped = self._queues.pop(key, deque())
+            if key in self._rr:
+                self._rr.remove(key)
+            self._pending -= len(dropped)
+            self._space.notify_all()
+        for r in dropped:
+            if r.future.cancel():
+                self.stats.add("cancelled")
+
+    def tenants(self) -> list[tuple[str, int]]:
+        with self._lock:
+            return sorted(self._tenants)
+
+    def _resolve(self, name: str, version: Optional[int]):
+        if version is not None:
+            key = (name, int(version))
+            if key not in self._tenants:
+                raise KeyError(f"no tenant {name!r} v{version}")
+            return key
+        versions = [v for (n, v) in self._tenants if n == name]
+        if not versions:
+            raise KeyError(f"no tenant {name!r}")
+        return (name, max(versions))   # latest version serves by default
+
+    # -------------------------------------------------------------- intake
+    def submit(self, query, tenant: str = "default",
+               version: Optional[int] = None,
+               timeout: Optional[float] = None) -> Future:
+        """Enqueue one query for `tenant` (latest version unless pinned);
+        returns a Future resolving to the int cluster label (-1 = none).
+        Raises `QueueFull` under admission control, `KeyError` for unknown
+        tenants, `ValueError` for wrong dimensionality."""
+        with self._lock:
+            key = self._resolve(tenant, version)
+            vec = self._tenants[key].check_query(query)
+            if self._stopping:
+                raise RuntimeError("server is closed")
+            if self._pending >= self.queue_limit:
+                if self.policy == "reject":
+                    self.stats.add("rejected")
+                    raise QueueFull(
+                        f"queue_limit={self.queue_limit} reached")
+                deadline = (None if timeout is None
+                            else time.monotonic() + timeout)
+                while self._pending >= self.queue_limit:
+                    if self._stopping:
+                        raise RuntimeError("server is closed")
+                    rem = (None if deadline is None
+                           else deadline - time.monotonic())
+                    if rem is not None and rem <= 0 or not self._space.wait(rem):
+                        self.stats.add("rejected")
+                        raise QueueFull(
+                            f"queue_limit={self.queue_limit} still full "
+                            f"after {timeout}s (policy=block)")
+            fut: Future = Future()
+            self._queues[key].append(
+                _Request(key, vec, fut, time.perf_counter()))
+            self._pending += 1
+            self.stats.add("submitted")
+            self.stats.peak("queue_depth_peak", self._pending)
+            self._work.notify()
+        return fut
+
+    def queue_depth(self) -> int:
+        with self._lock:
+            return self._pending
+
+    # -------------------------------------------------------------- worker
+    def start(self) -> None:
+        if self._worker is not None and self._worker.is_alive():
+            return
+        self._stopping = False
+        self._worker = threading.Thread(target=self._serve_loop,
+                                        name="cluster-serve", daemon=True)
+        self._worker.start()
+
+    def _next_batch(self) -> Optional[list[_Request]]:
+        """Pop up to batch_slots requests of ONE tenant (round-robin).
+        Must hold the lock."""
+        for _ in range(len(self._rr)):
+            key = self._rr[0]
+            self._rr.rotate(-1)
+            q = self._queues.get(key)
+            if q:
+                batch = [q.popleft()
+                         for _ in range(min(len(q), self.batch_slots))]
+                self._pending -= len(batch)
+                self._space.notify_all()
+                return batch
+        return None
+
+    def _serve_loop(self) -> None:
+        while True:
+            t_idle = time.perf_counter()
+            with self._work:
+                while self._pending == 0 and not self._stopping:
+                    self._work.wait(0.1)
+                if self._pending == 0 and self._stopping:
+                    return
+                batch = self._next_batch()
+            self.stats.add("wait_s", time.perf_counter() - t_idle)
+            if batch:
+                self._serve_batch(batch)
+
+    def _serve_batch(self, batch: list[_Request]) -> None:
+        tenant = self._tenants.get(batch[0].tenant_key)
+        t_pack = time.perf_counter()
+        live: list[tuple[int, _Request]] = []
+        for r in batch:
+            # a future cancelled while queued never reaches the device
+            if r.future.set_running_or_notify_cancel():
+                live.append((len(live), r))
+            else:
+                self.stats.add("cancelled")
+        if tenant is None:
+            for _, r in live:
+                r.future.set_exception(KeyError(
+                    f"tenant {batch[0].tenant_key} was removed"))
+            return
+        q, valid = tenant.staging(self.batch_slots)
+        q[:] = 0.0
+        valid[:] = False
+        for i, r in live:
+            q[i] = r.vec
+            valid[i] = True
+            self.stats.add("queue_wait_s", t_pack - r.t_submit)
+        t_comp = time.perf_counter()
+        self.stats.add("pack_s", t_comp - t_pack)
+        try:
+            labels = tenant.assign_np(q, valid)
+        except Exception as e:               # resolve, don't kill the worker
+            for _, r in live:
+                r.future.set_exception(e)
+            return
+        self.stats.add("compute_s", time.perf_counter() - t_comp)
+        self.stats.add("batches")
+        self.stats.add("slots_filled", len(live))
+        self.stats.add("served", len(live))
+        for i, r in live:
+            r.future.set_result(int(labels[i]))
+
+    # ------------------------------------------------------------ shutdown
+    def close(self, drain: bool = True, timeout: Optional[float] = None
+              ) -> None:
+        """Stop the server. drain=True serves everything already queued
+        first; drain=False cancels queued futures. Idempotent."""
+        with self._lock:
+            self._stopping = True
+            if not drain:
+                dropped = []
+                for q in self._queues.values():
+                    dropped.extend(q)
+                    q.clear()
+                self._pending = 0
+            self._work.notify_all()
+            self._space.notify_all()
+        if not drain:
+            for r in dropped:
+                if r.future.cancel():
+                    self.stats.add("cancelled")
+        if self._worker is not None:
+            self._worker.join(timeout)
+            self._worker = None
+
+    def __enter__(self) -> "ClusterServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# -------------------------------------------------------- open-loop driver --
+def run_open_loop(server: ClusterServer, queries: np.ndarray,
+                  rate_hz: float, tenant: str = "default") -> dict:
+    """Open-loop load generator: submit queries[i] at t0 + i/rate_hz
+    regardless of completions (the arrival process does not wait for the
+    server — the honest way to measure serving latency under load), then
+    block on every future. Returns per-request latencies and labels.
+
+    Shared by `benchmarks/serving_latency.py` and `run_palid --serve-bench`.
+    """
+    n = len(queries)
+    done_at = [0.0] * n
+    futures: list[Future] = []
+    t0 = time.perf_counter()
+    arrivals = t0 + np.arange(n) / float(rate_hz)
+    for i in range(n):
+        now = time.perf_counter()
+        if arrivals[i] > now:
+            time.sleep(arrivals[i] - now)
+        fut = server.submit(queries[i], tenant=tenant)
+        fut.add_done_callback(
+            lambda f, i=i: done_at.__setitem__(i, time.perf_counter()))
+        futures.append(fut)
+    labels = np.asarray([f.result() for f in futures], np.int32)
+    wall = max(done_at) - t0
+    lat_ms = (np.asarray(done_at) - arrivals) * 1e3
+    return {
+        "n": n,
+        "rate_hz": float(rate_hz),
+        "wall_s": float(wall),
+        "throughput_rps": float(n / wall),
+        "latency_ms_p50": float(np.percentile(lat_ms, 50)),
+        "latency_ms_p99": float(np.percentile(lat_ms, 99)),
+        "latency_ms_max": float(lat_ms.max()),
+        "labels": labels,
+    }

@@ -1,12 +1,16 @@
-"""Batched clustering query service: fixed-slot submit/serve assignment of
-new points to detected dominant clusters.
+"""Synchronous fixed-slot clustering query service: submit/serve assignment
+of new points to detected dominant clusters.
 
-The LM stack serves traffic through `serve.engine.BatchServer` (queue ->
-fixed batch slots -> one batched jitted call); this module gives clustering
-the same path. A `ClusterService` wraps a fitted `Clustering` result and
-answers "which dominant cluster does this point belong to?" via
-`Clustering.predict` — weighted affinity against the stored cluster supports
-(the CIVS affinity kernel), O(C * cap) per query independent of the original
+This is the caller-paced sibling of `serve.batching.ClusterServer` (the
+continuous-batching, multi-tenant server): requests queue up, each serve()
+call packs up to `batch_slots` queries into one fixed-shape batch and runs
+the fused assignment op. Both paths share ONE resident-store implementation
+(`serve.batching.Tenant`) and therefore the same padding contract: packed
+batches carry a slot-validity mask, so empty slots — zero rows, i.e. what
+would otherwise be real points at the origin — can never produce a label
+(a cluster sitting near the origin used to be a latent mis-assignment).
+
+`Clustering.predict` is O(C * cap) per query independent of the original
 dataset size, which is exactly what ALID's localized design (paper Sec. 4)
 buys at serving time.
 
@@ -15,28 +19,31 @@ Usage:
     svc = ClusterService(clustering, batch_slots=8)
     rid = svc.submit(query_vec)
     labels = svc.serve()          # {rid: cluster id, -1 = no cluster}
+
+For async futures, open-loop traffic, or several resident datasets/versions
+in one process, use `serve.batching.ClusterServer` instead.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.alid import Clustering, assign_labels, assign_labels_source
-from repro.core.source import as_source
+from repro.core.alid import Clustering
+from repro.serve.batching import Tenant
 
 
 class ClusterService:
     """Fixed-slot batched assignment server over a fitted Clustering.
 
     Requests queue up; each serve() call packs up to `batch_slots` queries
-    into one fixed-shape batch (zero-padded rows, so the jitted score kernel
-    compiles once per (batch_slots, d)) and runs one batched assignment —
-    the FUSED kernel-layer op (`repro.kernels.ops.assign_clusters`: support
-    affinity + weighted score + argmax + threshold in one pass), on the
-    backend `backend` selects ("auto" = env/platform dispatch; see
-    `repro.kernels.ops.resolve_backend`). The support tensor is converted to
-    device arrays once at construction, not re-uploaded per batch.
+    into one fixed-shape batch (zero-padded rows + slot-validity mask, so
+    the jitted score kernel compiles once per (batch_slots, d)) and runs one
+    batched assignment — the FUSED kernel-layer op
+    (`repro.kernels.ops.assign_clusters`: support affinity + weighted score
+    + argmax + threshold in one pass), on the backend `backend` selects
+    ("auto" = env/platform dispatch; see `repro.kernels.ops.resolve_backend`).
+    The support tensor is uploaded to device once at construction (inside
+    `Tenant`), never per batch.
     """
 
     def __init__(self, clustering: Clustering, batch_slots: int = 8,
@@ -48,17 +55,14 @@ class ClusterService:
         self.batch_slots = batch_slots
         self.threshold = threshold
         self.backend = backend
-        self.d = int(clustering.support_v.shape[2])
-        self._sup_v = jnp.asarray(clustering.support_v)
-        self._sup_w = jnp.asarray(clustering.support_w)
+        self._tenant = Tenant("default", clustering, threshold=threshold,
+                              backend=backend)
+        self.d = self._tenant.d
         self.queue: list[tuple[int, np.ndarray]] = []
         self._next_id = 0
 
     def submit(self, query: np.ndarray) -> int:
-        q = np.asarray(query, np.float32)
-        if q.shape != (self.d,):
-            raise ValueError(
-                f"one {self.d}-d point per request, got shape {q.shape}")
+        q = self._tenant.check_query(query)
         rid = self._next_id
         self._next_id += 1
         self.queue.append((rid, q))
@@ -70,30 +74,23 @@ class ClusterService:
         the pre-uploaded support tensors. This is the offline counterpart of
         submit/serve — labeling a 10M-point memmap costs O(batch · C · cap)
         peak memory, never O(n)."""
-        src = as_source(source)
-        if self.clustering.n_clusters == 0:
-            return np.full((src.n,), -1, np.int32)
-        return assign_labels_source(
-            src, self._sup_v, self._sup_w, self.clustering.densities,
-            self.clustering.k, self.threshold,
-            batch_size=int(batch_size) or max(self.batch_slots, 256),
-            backend=self.backend)
+        return self._tenant.assign_source(
+            source, batch_size=int(batch_size) or max(self.batch_slots, 256))
 
     def serve(self) -> dict[int, int]:
+        """Drain the queue in fixed-size batches; {} when nothing is queued.
+        Pad slots ride along masked-invalid and never produce a label."""
         results: dict[int, int] = {}
         while self.queue:
             batch = self.queue[:self.batch_slots]
             self.queue = self.queue[self.batch_slots:]
-            q = np.zeros((self.batch_slots, self.d), np.float32)
+            q, valid = self._tenant.staging(self.batch_slots)
+            q[:] = 0.0
+            valid[:] = False
             for i, (_, v) in enumerate(batch):
                 q[i] = v
-            if self.clustering.n_clusters == 0:
-                labels = np.full((self.batch_slots,), -1, np.int32)
-            else:
-                labels = assign_labels(jnp.asarray(q), self._sup_v,
-                                       self._sup_w, self.clustering.densities,
-                                       self.clustering.k, self.threshold,
-                                       self.backend)
+                valid[i] = True
+            labels = self._tenant.assign_np(q, valid)
             for i, (rid, _) in enumerate(batch):
                 results[rid] = int(labels[i])
         return results

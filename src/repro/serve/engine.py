@@ -29,7 +29,7 @@ class ServeConfig:
 
 @functools.partial(jax.jit, static_argnames=("cfg", "scfg"))
 def _decode_loop(params, cfg: lm_m.LMConfig, scfg: ServeConfig, cache,
-                 first_logits, prompt_len, rng):
+                 first_logits, prompt_len, rng, pad=None):
     b = first_logits.shape[0]
 
     def sample(logits, key):
@@ -44,7 +44,7 @@ def _decode_loop(params, cfg: lm_m.LMConfig, scfg: ServeConfig, cache,
         tok = sample(logits, key)
         tok = jnp.where(done, 0, tok)
         new_logits, cache = lm_m.decode_step(params, cfg, cache, tok[:, None],
-                                             prompt_len + t)
+                                             prompt_len + t, pad)
         if scfg.eos_id is not None:
             done = done | (tok == scfg.eos_id)
         return (cache, new_logits, rng, done), tok
@@ -56,17 +56,26 @@ def _decode_loop(params, cfg: lm_m.LMConfig, scfg: ServeConfig, cache,
 
 
 def generate(params, cfg: lm_m.LMConfig, prompts: jax.Array,
-             scfg: ServeConfig = ServeConfig(), rng=None):
-    """prompts: (B, P) int32 -> generated (B, max_new) int32."""
+             scfg: ServeConfig = ServeConfig(), rng=None, prompt_lens=None):
+    """prompts: (B, P) int32 -> generated (B, max_new) int32.
+
+    `prompt_lens` ((B,) int32, optional) is the per-row REAL prompt length of
+    a LEFT-padded batch (row i's prompt occupies slots [P - lens[i], P)).
+    When given, pad slots are masked out of attention and RoPE positions run
+    logical (0-based at each row's first real token), so every packed prompt
+    decodes exactly as it would solo. None = all rows are full length."""
     b, p = prompts.shape
     rng = jax.random.PRNGKey(0) if rng is None else rng
     max_len = p + scfg.max_new_tokens + 1
     cache = lm_m.init_cache(cfg, b, max_len)
+    pad = None
+    if prompt_lens is not None:
+        pad = jnp.int32(p) - jnp.asarray(prompt_lens, jnp.int32).reshape(b)
     first_logits, cache = jax.jit(
-        lambda pr, c, t: lm_m.prefill_with_cache(pr, cfg, c, t)
-    )(params, cache, prompts)
+        lambda pr, c, t, pd: lm_m.prefill_with_cache(pr, cfg, c, t, pd)
+    )(params, cache, prompts, pad)
     out, _ = _decode_loop(params, cfg, scfg, cache, first_logits,
-                          jnp.int32(p), rng)
+                          jnp.int32(p), rng, pad)
     return out
 
 
@@ -99,8 +108,10 @@ class BatchServer:
             for i, (_, p) in enumerate(batch):
                 prompts[i, maxp - len(p):] = p   # left-pad to align last token
                 lens[i] = len(p)
+            lens[len(batch):] = maxp             # empty slots: no pad masking
             out = np.asarray(generate(self.params, self.cfg,
-                                      jnp.asarray(prompts), self.scfg))
+                                      jnp.asarray(prompts), self.scfg,
+                                      prompt_lens=jnp.asarray(lens)))
             for i, (rid, _) in enumerate(batch):
                 results[rid] = out[i]
         return results

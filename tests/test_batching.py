@@ -1,0 +1,198 @@
+"""Continuous-batching ClusterServer: async futures, interleaved traffic,
+multi-tenant round-robin, admission control, drain/cancel shutdown."""
+
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.alid import ALIDConfig, Clustering
+from repro.core.engine import fit
+from repro.data import auto_lsh_params, make_blobs_with_noise
+from repro.serve import ClusterServer, QueueFull
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    spec = make_blobs_with_noise(n_clusters=3, cluster_size=30, n_noise=60,
+                                 d=8, seed=11, overlap_pairs=0)
+    cfg = ALIDConfig(a_cap=48, delta=48,
+                     lsh=auto_lsh_params(spec.points, probe=128),
+                     seeds_per_round=16, max_rounds=16)
+    res = fit(spec.points, cfg, jax.random.PRNGKey(0))
+    assert res.n_clusters > 0
+    return spec, res
+
+
+def _empty_clustering(d=8, cap=8):
+    return Clustering(labels=np.full(4, -1, np.int32),
+                      densities=np.zeros(0, np.float32), n_rounds=1, k=0.7,
+                      support_idx=np.zeros((0, cap), np.int32),
+                      support_w=np.zeros((0, cap), np.float32),
+                      support_v=np.zeros((0, cap, d), np.float32))
+
+
+def test_submit_returns_future_with_predict_label(fitted):
+    """Futures resolve to exactly what per-query Clustering.predict says —
+    the continuous batch path changes latency, never labels."""
+    spec, res = fitted
+    queries = np.concatenate([spec.points[:20], spec.points[:5] + 200.0]
+                             ).astype(np.float32)
+    with ClusterServer(batch_slots=8, queue_limit=64) as server:
+        server.add_tenant("default", res)
+        futs = [server.submit(q) for q in queries]
+        got = np.asarray([f.result(timeout=30) for f in futs], np.int32)
+    want = np.asarray([int(res.predict(q[None])[0]) for q in queries],
+                      np.int32)
+    np.testing.assert_array_equal(got, want)
+    assert (got[-5:] == -1).all()                  # far noise stays unlabeled
+
+
+def test_interleaved_submit_while_serving(fitted):
+    """Submitters racing the worker: several threads push queries while
+    batches are in flight; every future resolves and labels stay exact."""
+    spec, res = fitted
+    members = spec.points[res.labels >= 0]
+    want = res.predict(members)
+    results: dict[int, int] = {}
+    lock = threading.Lock()
+
+    with ClusterServer(batch_slots=4, queue_limit=16, policy="block") as srv:
+        server = srv
+        server.add_tenant("default", res)
+
+        def pump(lo, hi):
+            for i in range(lo, hi):
+                lab = server.submit(members[i]).result(timeout=30)
+                with lock:
+                    results[i] = lab
+
+        threads = [threading.Thread(target=pump, args=(lo, lo + len(members) // 4))
+                   for lo in range(0, len(members) - 3, len(members) // 4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(60)
+    for i, lab in results.items():
+        assert lab == want[i]
+    assert server.stats.served >= len(results)
+    assert server.stats.batches >= 1
+
+
+def test_multi_tenant_round_robin_and_versions(fitted):
+    """Two resident stores served side by side: per-tenant labels stay
+    correct, unknown tenants KeyError, and version pinning resolves (latest
+    serves by default)."""
+    spec, res = fitted
+    with ClusterServer(batch_slots=4, queue_limit=64) as server:
+        server.add_tenant("blobs", res, version=0)
+        server.add_tenant("blobs", res, version=3)       # newer version
+        server.add_tenant("empty", _empty_clustering(d=res.support_v.shape[2]))
+        assert server.tenants() == [("blobs", 0), ("blobs", 3), ("empty", 0)]
+
+        member = spec.points[res.labels == 0][0]
+        f_latest = server.submit(member, tenant="blobs")
+        f_pinned = server.submit(member, tenant="blobs", version=0)
+        f_empty = server.submit(member, tenant="empty")
+        assert f_latest.result(timeout=30) == 0
+        assert f_pinned.result(timeout=30) == 0
+        assert f_empty.result(timeout=30) == -1          # 0-cluster tenant
+
+        with pytest.raises(KeyError):
+            server.submit(member, tenant="nope")
+        with pytest.raises(KeyError):
+            server.submit(member, tenant="blobs", version=7)
+        with pytest.raises(ValueError, match="point per request"):
+            server.submit(member[:-1], tenant="blobs")
+
+
+def test_admission_reject_policy(fitted):
+    """policy='reject': a full queue raises QueueFull at submit instead of
+    blocking (worker stopped so the queue can actually fill)."""
+    spec, res = fitted
+    server = ClusterServer(batch_slots=2, queue_limit=3, policy="reject",
+                           start=False)
+    server.add_tenant("default", res)
+    futs = [server.submit(spec.points[i]) for i in range(3)]
+    with pytest.raises(QueueFull):
+        server.submit(spec.points[3])
+    assert server.stats.rejected == 1
+    server.start()                                    # drain the backlog
+    assert all(isinstance(f.result(timeout=30), int) for f in futs)
+    server.close()
+
+
+def test_admission_block_timeout(fitted):
+    """policy='block' + timeout: submit parks, then gives up with QueueFull
+    once the deadline passes and nothing freed up."""
+    spec, res = fitted
+    server = ClusterServer(batch_slots=2, queue_limit=2, policy="block",
+                           start=False)
+    server.add_tenant("default", res)
+    for i in range(2):
+        server.submit(spec.points[i])
+    t0 = time.perf_counter()
+    with pytest.raises(QueueFull, match="policy=block"):
+        server.submit(spec.points[2], timeout=0.2)
+    assert time.perf_counter() - t0 >= 0.2
+    server.close(drain=False)
+
+
+def test_close_drain_serves_backlog(fitted):
+    """close(drain=True) answers everything already queued before the worker
+    exits — no future is left pending or cancelled."""
+    spec, res = fitted
+    server = ClusterServer(batch_slots=4, queue_limit=64, start=False)
+    server.add_tenant("default", res)
+    futs = [server.submit(q) for q in spec.points[:10]]
+    server.start()
+    server.close(drain=True, timeout=30)
+    assert all(f.done() and not f.cancelled() for f in futs)
+    with pytest.raises(RuntimeError, match="closed"):
+        server.submit(spec.points[0])
+
+
+def test_close_cancel_rejects_queued(fitted):
+    """close(drain=False) cancels queued futures: result() raises
+    CancelledError instead of hanging forever."""
+    spec, res = fitted
+    server = ClusterServer(batch_slots=4, queue_limit=64, start=False)
+    server.add_tenant("default", res)
+    futs = [server.submit(q) for q in spec.points[:6]]
+    server.close(drain=False, timeout=30)
+    for f in futs:
+        assert f.cancelled()
+        with pytest.raises(CancelledError):
+            f.result(timeout=1)
+    assert server.stats.cancelled == len(futs)
+
+
+def test_remove_tenant_cancels_queued(fitted):
+    spec, res = fitted
+    server = ClusterServer(batch_slots=4, queue_limit=64, start=False)
+    server.add_tenant("default", res)
+    futs = [server.submit(q) for q in spec.points[:4]]
+    server.remove_tenant("default")
+    assert server.tenants() == []
+    assert all(f.cancelled() for f in futs)
+    assert server.queue_depth() == 0
+    server.close()
+
+
+def test_stats_and_occupancy(fitted):
+    spec, res = fitted
+    server = ClusterServer(batch_slots=4, queue_limit=64, start=False)
+    server.add_tenant("default", res)
+    futs = [server.submit(q) for q in spec.points[:8]]
+    server.start()
+    for f in futs:
+        f.result(timeout=30)
+    server.close()
+    s = server.stats.snapshot()
+    assert s["submitted"] == s["served"] == 8
+    assert s["batches"] == 2 and s["slots_filled"] == 8
+    assert server.stats.occupancy(4) == 1.0           # two full batches
+    assert "occupancy" in server.stats.report(batch_slots=4)

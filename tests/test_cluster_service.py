@@ -69,3 +69,105 @@ def test_service_requires_supports():
                       densities=np.zeros(0, np.float32), n_rounds=0, k=1.0)
     with pytest.raises(AssertionError, match="stored supports"):
         ClusterService(bare)
+
+
+def _origin_clustering(d=6, cap=8, n_clusters=2):
+    """A store whose clusters hug the origin — the exact geometry that made
+    zero-filled pad slots score as members."""
+    from repro.core.alid import Clustering
+    rng = np.random.default_rng(5)
+    sup_v = rng.normal(scale=0.05, size=(n_clusters, cap, d)
+                       ).astype(np.float32)
+    return Clustering(
+        labels=np.zeros(4, np.int32),
+        densities=np.linspace(0.6, 0.5, n_clusters).astype(np.float32),
+        n_rounds=1, k=0.5,
+        support_idx=np.zeros((n_clusters, cap), np.int32),
+        support_w=np.full((n_clusters, cap), 1.0 / cap, np.float32),
+        support_v=sup_v)
+
+
+def test_pad_slots_never_labeled():
+    """THE padded-slot regression: empty slots of a partially-filled batch
+    are zero rows, and a cluster near the origin happily claims them unless
+    the slot-validity mask rides along. Masked pad slots must ALWAYS come
+    back -1; real slots must be bit-identical to the unmasked call."""
+    from repro.core.alid import assign_labels
+    res = _origin_clustering()
+    q = np.zeros((4, res.support_v.shape[2]), np.float32)
+    q[0] = res.support_v[1, 0]                     # one real near-origin query
+
+    unmasked = assign_labels(q, res.support_v, res.support_w, res.densities,
+                             res.k, 0.5)
+    assert (unmasked[1:] >= 0).all()               # the trap: pads get labels
+
+    valid = np.asarray([True, False, False, False])
+    masked = assign_labels(q, res.support_v, res.support_w, res.densities,
+                           res.k, 0.5, valid=valid)
+    assert masked[0] == unmasked[0]
+    assert (masked[1:] == -1).all()
+
+
+def test_serve_partial_batch_masks_pads():
+    """Service-level version: one real request in a 4-slot batch — the three
+    zero-pad slots go through the same fused call but can never leak a label
+    (and serve() only answers submitted request ids)."""
+    res = _origin_clustering()
+    svc = ClusterService(res, batch_slots=4)
+    rid = svc.submit(res.support_v[0, 0])
+    out = svc.serve()
+    assert set(out) == {rid} and out[rid] == 0
+
+    q, valid = svc._tenant.staging(4)
+    q[:] = 0.0
+    valid[:] = False
+    valid[0] = True
+    labels = svc._tenant.assign_np(q, valid)
+    assert (labels[1:] == -1).all()                # pad slots, origin cluster
+
+
+def test_serve_empty_queue(fitted):
+    _, res = fitted
+    svc = ClusterService(res, batch_slots=4)
+    assert svc.serve() == {}
+    assert svc.serve() == {}                       # still fine when repeated
+
+
+def test_zero_cluster_service():
+    """A fit that found nothing still serves: every query comes back -1
+    through submit/serve AND the bulk path (shape (0, cap, d) supports)."""
+    from repro.core.alid import Clustering
+    d, cap = 6, 8
+    empty = Clustering(labels=np.full(10, -1, np.int32),
+                       densities=np.zeros(0, np.float32), n_rounds=3, k=0.7,
+                       support_idx=np.zeros((0, cap), np.int32),
+                       support_w=np.zeros((0, cap), np.float32),
+                       support_v=np.zeros((0, cap, d), np.float32))
+    svc = ClusterService(empty, batch_slots=4)
+    rids = [svc.submit(np.ones(d, np.float32)) for _ in range(3)]
+    out = svc.serve()
+    assert sorted(out) == sorted(rids)
+    assert all(v == -1 for v in out.values())
+    assert (svc.assign_source(np.ones((7, d), np.float32)) == -1).all()
+
+
+def test_save_load_suffixless_roundtrip(fitted, tmp_path):
+    """THE save/load regression: np.savez appends '.npz' when the suffix is
+    missing, but load used to open the literal path -> suffixless round-trips
+    always failed. save now returns the actual path and load normalizes."""
+    _, res = fitted
+    suffixless = tmp_path / "store"
+    written = res.save(suffixless)
+    assert written.endswith(".npz")
+
+    for handle in (suffixless, written, str(suffixless)):
+        from repro.core.alid import Clustering
+        back = Clustering.load(handle)
+        np.testing.assert_array_equal(back.labels, res.labels)
+        np.testing.assert_array_equal(back.support_v, res.support_v)
+        assert back.n_clusters == res.n_clusters and back.k == res.k
+
+    explicit = res.save(tmp_path / "store2.npz")   # suffixed: no double .npz
+    assert explicit.endswith("store2.npz")
+    from repro.core.alid import Clustering
+    assert Clustering.load(explicit).n_clusters == res.n_clusters

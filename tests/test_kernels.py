@@ -120,6 +120,38 @@ def test_assign_kernel(m, n_clusters, a, d):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_assign_clusters_valid_mask(backend):
+    """Serving pad slots: a zero query row sitting right on top of a cluster
+    near the origin MUST come back -1 (score 0) when its slot is masked
+    invalid — on every backend, bit-identically to the unmasked labels for
+    the valid slots."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(15)
+    n_clusters, a, d, m = 3, 8, 6, 10
+    sup_v = jnp.asarray(rng.normal(scale=0.05, size=(n_clusters, a, d)),
+                        jnp.float32)          # clusters hug the origin
+    sup_w = jnp.full((n_clusters, a), 1.0 / a, jnp.float32)
+    dens = jnp.asarray(rng.uniform(0.4, 0.9, n_clusters), jnp.float32)
+    k, thr = jnp.float32(0.5), jnp.float32(0.5)
+    q = jnp.asarray(rng.normal(scale=0.05, size=(m, d)), jnp.float32)
+    q = q.at[m // 2:].set(0.0)                # "pad" rows: exact zeros
+    valid = jnp.arange(m) < m // 2
+
+    ul, us = ops.assign_clusters(q, sup_v, sup_w, dens, k, thr,
+                                 backend=backend)
+    ml, ms = ops.assign_clusters(q, sup_v, sup_w, dens, k, thr, valid,
+                                 backend=backend)
+    # unmasked, the zero rows DO match an origin cluster — that's the trap
+    assert (np.asarray(ul[m // 2:]) >= 0).any()
+    np.testing.assert_array_equal(np.asarray(ml[:m // 2]),
+                                  np.asarray(ul[:m // 2]))
+    np.testing.assert_allclose(np.asarray(ms[:m // 2]),
+                               np.asarray(us[:m // 2]), rtol=1e-6)
+    assert (np.asarray(ml[m // 2:]) == -1).all()
+    assert (np.asarray(ms[m // 2:]) == 0.0).all()
+
+
 def test_assign_ref_matches_legacy_predict_scores():
     """The fused assignment must reproduce the historical per-cluster
     vmapped score + argmax + threshold chain."""
@@ -177,6 +209,65 @@ def test_flash_attention_kernel(cfg, dtype):
     rtol = 2e-5 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), rtol=rtol, atol=2e-3)
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(b=3, h=2, hkv=2, sq=64, sk=64, dh=16),                   # causal
+    dict(b=3, h=4, hkv=2, sq=64, sk=64, dh=16, window=16),        # SWA
+    dict(b=2, h=2, hkv=2, sq=64, sk=64, dh=16, chunk=32),         # chunked
+    dict(b=2, h=2, hkv=1, sq=1, sk=128, dh=16, q_offset=127),     # decode
+])
+def test_flash_attention_kv_start_parity(cfg):
+    """Left-padded batches: per-row kv_start masks pad keys out and shifts
+    positions to logical (slot - start), so window/chunk masks behave as if
+    each row started at 0. Pallas(interpret) must match the ref oracle on
+    every VALID query slot (fully-padded query rows are never consumed and
+    the two backends legitimately differ there: ref emits uniform-softmax
+    garbage, Pallas zeros)."""
+    rng = np.random.default_rng(21)
+    b, h, hkv, sq, sk, dh = (cfg["b"], cfg["h"], cfg["hkv"], cfg["sq"],
+                             cfg["sk"], cfg["dh"])
+    q = jnp.asarray(rng.normal(size=(b, h, sq, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, sk, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, sk, dh)), jnp.float32)
+    kv_start = jnp.asarray(rng.integers(0, sk // 2, size=b), jnp.int32)
+    q_offset = cfg.get("q_offset", 0)
+    kw = dict(causal=True, window=cfg.get("window"), chunk=cfg.get("chunk"))
+    got = flash_attention_pallas(q, k, v, q_offset, bq=32, bk=32,
+                                 kv_start=kv_start, interpret=True, **kw)
+    want = ref.attention_ref(q, k, v, q_offset=q_offset, kv_start=kv_start,
+                             **kw)
+    for i in range(b):
+        first_valid = max(0, int(kv_start[i]) - q_offset)  # logical q slots
+        np.testing.assert_allclose(
+            np.asarray(got[i, :, first_valid:], np.float32),
+            np.asarray(want[i, :, first_valid:], np.float32),
+            rtol=2e-5, atol=2e-3)
+
+
+def test_flash_attention_kv_start_matches_unpadded():
+    """A row with kv_start=s must attend exactly as the same sequence run
+    solo without padding — including under a sliding window, whose mask is
+    NOT shift-invariant (the historical bug: window offsets computed in
+    physical slots silently widened/narrowed per row)."""
+    rng = np.random.default_rng(22)
+    h, dh, s_real, pad = 2, 16, 48, 16
+    sk = s_real + pad
+    q_real = jnp.asarray(rng.normal(size=(1, h, s_real, dh)), jnp.float32)
+    k_real = jnp.asarray(rng.normal(size=(1, h, s_real, dh)), jnp.float32)
+    v_real = jnp.asarray(rng.normal(size=(1, h, s_real, dh)), jnp.float32)
+    zq = jnp.zeros((1, h, pad, dh), jnp.float32)
+    q_pad = jnp.concatenate([zq, q_real], axis=2)
+    k_pad = jnp.concatenate([zq, k_real], axis=2)
+    v_pad = jnp.concatenate([zq, v_real], axis=2)
+    for window in (None, 16):
+        solo = ref.attention_ref(q_real, k_real, v_real, causal=True,
+                                 window=window)
+        packed = ref.attention_ref(q_pad, k_pad, v_pad, causal=True,
+                                   window=window,
+                                   kv_start=jnp.asarray([pad], jnp.int32))
+        np.testing.assert_allclose(np.asarray(packed[:, :, pad:]),
+                                   np.asarray(solo), rtol=2e-5, atol=2e-5)
 
 
 # --------------------------------------------------------- segment matmul ---

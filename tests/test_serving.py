@@ -71,6 +71,54 @@ def test_batch_server_queueing():
         assert r.shape == (4,)
 
 
+def test_batch_server_packed_matches_solo():
+    """THE left-pad regression: a short and a long prompt packed into one
+    batch must each generate exactly what they generate solo. Pre-fix,
+    BatchServer computed per-slot lengths and then dropped them — prefill
+    attended pad tokens and RoPE ran on physical slots, so the short prompt's
+    output depended on its batchmates. SMOKE_CONFIG here uses a sliding
+    window, whose mask is not shift-invariant — the hardest case."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(7)
+    short = rng.integers(1, cfg.vocab, size=3).astype(np.int32)
+    long = rng.integers(1, cfg.vocab, size=9).astype(np.int32)
+    scfg = ServeConfig(max_new_tokens=6, temperature=0.0)
+
+    # solo runs: one prompt per serve, full batch occupancy, no padding
+    solo = {}
+    for name, p in (("short", short), ("long", long)):
+        srv = BatchServer(params, cfg, batch_slots=1, scfg=scfg)
+        rid = srv.submit(p)
+        solo[name] = srv.serve()[rid]
+
+    srv = BatchServer(params, cfg, batch_slots=4, scfg=scfg)  # 2 empty slots
+    rid_s, rid_l = srv.submit(short), srv.submit(long)
+    packed = srv.serve()
+    np.testing.assert_array_equal(packed[rid_s], solo["short"])
+    np.testing.assert_array_equal(packed[rid_l], solo["long"])
+
+
+def test_generate_prompt_lens_matches_solo_generate():
+    """generate(prompt_lens=...) on a left-padded batch == solo generate of
+    each unpadded prompt (greedy, so token-identical)."""
+    cfg, params = _setup("deepseek-7b")
+    rng = np.random.default_rng(8)
+    scfg = ServeConfig(max_new_tokens=5, temperature=0.0)
+    lens = [2, 7, 4]
+    p = max(lens)
+    prompts = np.zeros((len(lens), p), np.int32)
+    rows = []
+    for i, n in enumerate(lens):
+        row = rng.integers(1, cfg.vocab, size=n).astype(np.int32)
+        rows.append(row)
+        prompts[i, p - n:] = row
+    packed = np.asarray(generate(params, cfg, jnp.asarray(prompts), scfg,
+                                 prompt_lens=jnp.asarray(lens, jnp.int32)))
+    for i, row in enumerate(rows):
+        solo = np.asarray(generate(params, cfg, jnp.asarray(row[None]), scfg))
+        np.testing.assert_array_equal(packed[i], solo[0])
+
+
 def test_generate_with_temperature_samples():
     cfg, params = _setup()
     prompts = jax.random.randint(jax.random.PRNGKey(4), (2, 4), 0, cfg.vocab)
