@@ -1,0 +1,139 @@
+"""Online-update latency: localized insert+commit vs full refit.
+
+The whole point of `core.online` is that a small delta should cost what the
+delta touches (ROI routing + a handful of warm-started LID re-convergences
++ one snapshot), not what the dataset costs (LSH build + seeding + peel
+rounds over all n points). This benchmark puts a number on that claim:
+
+  * incremental arm — `OnlineClustering.insert(delta)` followed by
+    `commit()` (verify + atomic checkpoint), i.e. the full latency until
+    the delta is durably serveable. Repeats roll back to the baseline
+    epoch between runs (untimed) so every run applies the SAME delta to
+    the SAME state; the ROI cache is re-warmed untimed — steady-state
+    routing is what's being measured, not the restore.
+  * refit arm — `engine.fit` over base ∪ delta with the same config (its
+    own shape-matched warm-up call first, so jit tracing is not billed).
+
+Reported per delta size: per-update latency, refit wall time, and the
+ratio. BENCH_online.json carries `speedup_small_delta` (smallest delta's
+ratio) as the headline; the acceptance gate is >= 5x and the benchmark
+asserts it, so a regression that makes updates refit-shaped fails CI
+rather than just shifting a number.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.core.alid import ALIDConfig
+from repro.core.engine import fit
+from repro.core.online import OnlineClustering
+from repro.data import auto_lsh_params, make_blobs_with_noise
+
+
+def _base_problem(quick: bool):
+    n_clusters, cluster_size, n_noise = (3, 40, 40) if quick else (8, 120, 200)
+    spec = make_blobs_with_noise(n_clusters=n_clusters,
+                                 cluster_size=cluster_size, n_noise=n_noise,
+                                 d=16, seed=7, overlap_pairs=0)
+    cfg = ALIDConfig(a_cap=max(48, cluster_size + 16), delta=64,
+                     lsh=auto_lsh_params(spec.points, probe=128),
+                     seeds_per_round=16, max_rounds=24)
+    return spec, cfg
+
+
+def _make_delta(points: np.ndarray, labeled: np.ndarray, m: int,
+                rng: np.random.Generator) -> np.ndarray:
+    """Jittered copies of labeled points: lands inside existing outer ROI
+    balls, so every insert exercises the routed warm-start path (the
+    representative production delta — drift around live clusters)."""
+    take = labeled[rng.integers(0, labeled.size, size=m)]
+    return (points[take] + 0.01 * rng.standard_normal(
+        (m, points.shape[1]))).astype(np.float32)
+
+
+def main(quick: bool = False) -> dict:
+    sizes = [1, 8] if quick else [1, 16, 128]
+    reps = 3 if quick else 5
+    spec, cfg = _base_problem(quick)
+    res = fit(spec.points, cfg, jax.random.PRNGKey(0))
+    assert res.n_clusters > 0, "online benchmark needs a non-empty base fit"
+
+    oc = OnlineClustering(res, spec.points, cfg, auto_flush=False,
+                          keep=4 * reps * len(sizes) + 8)
+    base_epoch = oc.epoch_id
+    labeled = np.flatnonzero(oc.labels >= 0)
+    rng = np.random.default_rng(11)
+
+    # warm every jitted stage (route ROIs, warm LID, commit I/O) off-clock
+    oc.insert(_make_delta(spec.points, labeled, 1, rng))
+    oc.commit()
+    oc.rollback(base_epoch)
+    oc._refresh_rois()
+
+    rows = []
+    for m in sizes:
+        delta = _make_delta(spec.points, labeled, m, rng)
+
+        update_ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            oc.insert(delta)
+            oc.commit()
+            update_ts.append(time.perf_counter() - t0)
+            oc.rollback(base_epoch)        # untimed repeat reset
+            oc._refresh_rois()
+        update_s = float(np.min(update_ts))
+
+        union = np.concatenate([spec.points, delta])
+        fit(union, cfg, jax.random.PRNGKey(1))     # shape-matched warm-up
+        refit_ts = []
+        for _ in range(max(1, reps - 2)):
+            t0 = time.perf_counter()
+            fit(union, cfg, jax.random.PRNGKey(1))
+            refit_ts.append(time.perf_counter() - t0)
+        refit_s = float(np.min(refit_ts))
+
+        rows.append({"delta": int(m), "update_s": update_s,
+                     "refit_s": refit_s,
+                     "speedup": refit_s / max(update_s, 1e-9)})
+        csv_line(f"online/delta{m}", update_s * 1e6,
+                 f"refit={refit_s * 1e3:.1f}ms;"
+                 f"speedup={rows[-1]['speedup']:.1f}x")
+
+    out = {
+        "quick": quick,
+        "n_base": int(len(spec.points)),
+        "d": int(spec.points.shape[1]),
+        "n_clusters": int(res.n_clusters),
+        "reps": reps,
+        "sizes": rows,
+        "speedup_small_delta": rows[0]["speedup"],
+    }
+    with open("BENCH_online.json", "w") as f:
+        json.dump(out, f, indent=2)
+    if out["speedup_small_delta"] < 5.0:
+        raise AssertionError(
+            f"small-delta update is only {out['speedup_small_delta']:.1f}x "
+            "faster than a full refit (acceptance floor: 5x)")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized smoke (small base, 2 delta sizes)")
+    args = ap.parse_args()
+    r = main(quick=args.quick)
+    line = " | ".join(
+        f"delta={row['delta']}: {row['update_s'] * 1e3:.1f}ms vs "
+        f"refit {row['refit_s'] * 1e3:.1f}ms ({row['speedup']:.1f}x)"
+        for row in r["sizes"])
+    print(f"[online] n_base={r['n_base']} clusters={r['n_clusters']} | "
+          + line)

@@ -21,13 +21,15 @@ def main() -> None:
     t0 = time.time()
 
     from benchmarks import (fig6_sparsity, fig7_scalability, fig11_noise,
-                            kernel_bench, mem_footprint, serving_latency,
-                            streamed_throughput, table2_speedup)
+                            kernel_bench, mem_footprint, online_updates,
+                            serving_latency, streamed_throughput,
+                            table2_speedup)
     for name, mod in [("fig6", fig6_sparsity), ("fig7", fig7_scalability),
                       ("table2", table2_speedup), ("fig11", fig11_noise),
                       ("mem", mem_footprint),
                       ("streamed_tput", streamed_throughput),
                       ("serving", serving_latency),
+                      ("online", online_updates),
                       ("kernels", kernel_bench)]:
         try:
             mod.main(quick=quick)

@@ -1,6 +1,8 @@
 from repro.checkpoint.manager import (  # noqa: F401
     save_checkpoint,
     restore_checkpoint,
+    restore_checkpoint_tree,
+    load_manifest,
     latest_step,
     list_checkpoints,
 )

@@ -96,6 +96,36 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def load_manifest(ckpt_dir: str, step: int) -> dict:
+    """Read a checkpoint's manifest (tree structure + metadata) without
+    touching the array payload — cheap epoch/step introspection."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def restore_checkpoint_tree(ckpt_dir: str, step: int
+                            ) -> tuple[dict, dict[str, np.ndarray]]:
+    """Structure-free restore: shapes and dtypes come from the MANIFEST, not
+    a `like` template. `restore_checkpoint` asserts every leaf matches the
+    template's shape, which is right for training state (fixed model) but
+    wrong for the online-clustering epoch snapshots — the point set grows
+    and shrinks between epochs, so there is nothing valid to template from.
+    Returns (manifest, {flat_key: host array}); nesting (if any) stays
+    encoded in the `//`-joined keys, which for the flat dict trees the
+    online subsystem saves are simply the dict keys."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = load_manifest(ckpt_dir, step)
+    out: dict[str, np.ndarray] = {}
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        for key, info in manifest["leaves"].items():
+            arr = np.array(data[key])
+            if info["dtype"] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            out[key] = arr
+    return manifest, out
+
+
 def restore_checkpoint(ckpt_dir: str, step: int, like: Any,
                        shardings: Any = None) -> tuple[int, Any]:
     """Restore into the structure of `like` (abstract or concrete tree).

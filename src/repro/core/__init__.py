@@ -6,6 +6,8 @@ from repro.core.alid import ALIDConfig, Clustering, EngineSpec  # noqa: F401
 from repro.core.engine import (Engine, MeshEngine, ReplicatedEngine,  # noqa: F401
                                ShardedEngine, StreamedEngine, fit,
                                make_engine, resolve_claims)
+from repro.core.online import (Epoch, EpochVerifyError,  # noqa: F401
+                               OnlineClustering, OnlineStats)
 from repro.core.pipeline import (PipelineStats, ScratchShards,  # noqa: F401
                                  ShardBundleCache, ShardPipeline)
 from repro.core.source import (ChunkedSource, CountingSource,  # noqa: F401

@@ -76,7 +76,7 @@ class PipelineStats:
     """
 
     _FIELDS = ("read_s", "put_s", "compute_s", "wait_s", "cache_hits",
-               "cache_misses", "scratch_reads", "source_reads",
+               "cache_misses", "cache_stale", "scratch_reads", "source_reads",
                "shards_streamed", "seed_prefetch_hits", "seed_prefetch_misses",
                "rounds_speculated", "rounds_resampled")
 
@@ -100,7 +100,8 @@ class PipelineStats:
                 f"compute={s['compute_s']:.3f}s wait={s['wait_s']:.3f}s | "
                 f"shards={s['shards_streamed']} "
                 f"cache={s['cache_hits']}/{s['cache_hits'] + s['cache_misses']}"
-                f" hit | reads: scratch={s['scratch_reads']} "
+                f" hit ({s['cache_stale']} stale) | "
+                f"reads: scratch={s['scratch_reads']} "
                 f"source={s['source_reads']} | seed-prefetch "
                 f"{s['seed_prefetch_hits']}/{s['seed_prefetch_hits'] + s['seed_prefetch_misses']}"
                 f" hit, rounds speculated={s['rounds_speculated']} "
@@ -173,12 +174,19 @@ class ShardBundleCache:
     points bytes; an entry larger than the whole budget is simply never
     cached (the forced-eviction degenerate the tests pin). Hits return the
     SAME arrays that were stored — bit-identical by construction.
+
+    Each entry remembers the shard GENERATION it was filled at (the store's
+    per-shard mutation counter, `store.generations`; 0 for immutable
+    stores). A probe with a newer generation drops the entry and misses —
+    an online `update_shard_points` can therefore never be shadowed by a
+    stale cached bundle. `stale_evictions` counts those drops.
     """
 
     def __init__(self, budget_bytes: int):
         self.budget = int(budget_bytes)
-        self._entries: OrderedDict[int, tuple] = OrderedDict()
+        self._entries: OrderedDict[int, tuple[int, tuple]] = OrderedDict()
         self._bytes = 0
+        self.stale_evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -187,23 +195,36 @@ class ShardBundleCache:
     def nbytes(self) -> int:
         return self._bytes
 
-    def get(self, s: int):
-        bundle = self._entries.get(s)
-        if bundle is not None:
-            self._entries.move_to_end(s)
+    def _drop(self, s: int) -> None:
+        _, old = self._entries.pop(s)
+        self._bytes -= int(old[0].nbytes)
+
+    def get(self, s: int, gen: int = 0):
+        entry = self._entries.get(s)
+        if entry is None:
+            return None
+        egen, bundle = entry
+        if egen != gen:                     # filled before the last mutation
+            self._drop(s)
+            self.stale_evictions += 1
+            return None
+        self._entries.move_to_end(s)
         return bundle
 
-    def put(self, s: int, bundle: tuple) -> None:
+    def put(self, s: int, bundle: tuple, gen: int = 0) -> None:
         cost = int(bundle[0].nbytes)
         if cost > self.budget:
             return                          # one shard exceeds the budget
         if s in self._entries:
-            self._entries.move_to_end(s)
-            return
+            if self._entries[s][0] == gen:
+                self._entries.move_to_end(s)
+                return
+            self._drop(s)                   # replace the stale entry
+            self.stale_evictions += 1
         while self._bytes + cost > self.budget and self._entries:
-            _, old = self._entries.popitem(last=False)
+            _, (_, old) = self._entries.popitem(last=False)
             self._bytes -= int(old[0].nbytes)
-        self._entries[s] = bundle
+        self._entries[s] = (gen, bundle)
         self._bytes += cost
 
     def clear(self) -> None:
@@ -247,12 +268,17 @@ class ShardPipeline:
     # -- host fetch tier: cache -> scratch -> source -----------------------
     def fetch_bundle(self, s: int) -> tuple:
         stats = self.stats
+        gens = getattr(self.store, "generations", None)
+        gen = int(gens[s]) if gens is not None else 0
         if self.cache is not None:
-            bundle = self.cache.get(s)
+            stale0 = self.cache.stale_evictions
+            bundle = self.cache.get(s, gen=gen)
             if bundle is not None:
                 stats.add("cache_hits")
                 return bundle
             stats.add("cache_misses")
+            if self.cache.stale_evictions > stale0:
+                stats.add("cache_stale")
         t0 = time.perf_counter()
         pts = self.store.shard_points(int(s))
         stats.add("read_s", time.perf_counter() - t0)
@@ -261,7 +287,7 @@ class ShardPipeline:
         bundle = (pts, self.store.sorted_keys[s], self.store.perm[s],
                   self.store.global_idx[s])
         if self.cache is not None:
-            self.cache.put(s, bundle)
+            self.cache.put(s, bundle, gen=gen)
         return bundle
 
     def _device_put(self, bundle: tuple):

@@ -153,6 +153,11 @@ class StreamedStore(NamedTuple):
     # once at build, turns steady-state shard reads into sequential slab
     # reads; None = re-gather from the source on every fetch (PR 3 behavior)
     scratch: Optional[ScratchShards] = None
+    # (S,) int64 per-shard mutation counters, bumped by update_shard_points:
+    # ShardBundleCache entries remember the generation they were filled at
+    # and a mismatch on probe drops the stale bundle (online deltas would
+    # otherwise serve pre-mutation bytes out of the LRU forever)
+    generations: Optional[np.ndarray] = None
 
     @property
     def n_shards(self) -> int:
@@ -286,7 +291,36 @@ def build_store_streamed(source: DataSource, params: LSHParams,
                          valid=valid, sorted_keys=sorted_keys, perm=perm,
                          centers=centers, radii=radii,
                          bucket_sizes=bsizes.astype(np.int32),
-                         proj=proj, bias=bias, scratch=scratch)
+                         proj=proj, bias=bias, scratch=scratch,
+                         generations=np.zeros((n_shards,), np.int64))
+
+
+def update_shard_points(store: StreamedStore, s: int,
+                        rows: np.ndarray) -> int:
+    """Mutate one shard's resident payload in place (online deltas).
+
+    Writes the full (shard_cap, d) zero-padded slab to the scratch memmap —
+    the source itself is read-only, so mutation requires scratch persistence
+    (`build_store_streamed(..., scratch_dir=...)`) — and bumps the shard's
+    generation counter. Any `ShardBundleCache` entry for shard `s` was
+    filled at the old generation and gets dropped on its next probe
+    (`ShardPipeline.fetch_bundle` passes the current generation), so a
+    post-update fetch can never serve pre-update bytes. Returns the new
+    generation."""
+    if store.scratch is None:
+        raise ValueError(
+            "update_shard_points needs scratch persistence — build the "
+            "store with scratch_dir=... (the DataSource is read-only)")
+    if store.generations is None:
+        raise ValueError("store predates generation counters — rebuild "
+                         "with build_store_streamed")
+    rows = np.asarray(rows, np.float32)
+    if rows.shape != (store.shard_cap, store.dim):
+        raise ValueError(f"expected a full ({store.shard_cap}, {store.dim}) "
+                         f"zero-padded slab, got {rows.shape}")
+    store.scratch.write(s, rows)
+    store.generations[s] += 1
+    return int(store.generations[s])
 
 
 @jax.jit

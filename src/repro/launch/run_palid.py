@@ -135,6 +135,13 @@ def main():
                          "throughput and batch occupancy")
     ap.add_argument("--serve-rate", type=float, default=2000.0,
                     help="--serve-bench open-loop arrival rate (req/s)")
+    ap.add_argument("--online", action="store_true",
+                    help="after the fit, drive the online-update round trip:"
+                         " wrap the result in an OnlineClustering, publish "
+                         "it to a live tenant, insert a delta, commit + "
+                         "hot-swap, roll back to the pre-insert epoch and "
+                         "ASSERT the restored labels are bit-identical "
+                         "while submit() traffic keeps serving")
     ap.add_argument("--a-cap", type=int, default=0,
                     help="support capacity override (0 = auto)")
     ap.add_argument("--seeds-per-round", type=int, default=32)
@@ -193,6 +200,8 @@ def main():
                   "pipeline stats (streamed only)")
         if args.serve_bench:
             _serve_bench(res, source, args.serve_rate)
+        if args.online:
+            _online_demo(res, source, cfg)
     finally:
         engine.close()
 
@@ -222,6 +231,56 @@ def _serve_bench(res, source, rate_hz: float) -> None:
           f"p50={out['latency_ms_p50']:.2f}ms "
           f"p99={out['latency_ms_p99']:.2f}ms "
           f"tput={out['throughput_rps']:.0f}rps occupancy={occ:.2f}")
+
+
+def _online_demo(res, source, cfg) -> None:
+    """Insert → commit → rollback → re-serve round trip over the live
+    serving stack (what the CI online smoke drives): the rollback must
+    restore the pre-insert label array BIT-IDENTICALLY from the
+    checkpoint/manager.py snapshot, with the tenant hot-swapping versions
+    while submits keep flowing."""
+    import numpy as np
+
+    from repro.core.online import OnlineClustering
+    from repro.core.source import as_source
+    from repro.serve import ClusterServer, LiveServing
+
+    src = as_source(source)
+    pts = np.asarray(src.sample(np.arange(src.n)), np.float32)
+    oc = OnlineClustering(res, pts, cfg)
+    pre_labels = oc.labels.copy()
+    base_epoch = oc.epoch_id
+    rng = np.random.default_rng(0)
+    with ClusterServer(batch_slots=32, queue_limit=256,
+                       policy="block") as server:
+        live = LiveServing(server, oc, name="palid")
+        live.publish()
+        probe = pts[0]
+        lab_pre = live.submit(probe).result(timeout=30)
+        # delta: jittered copies of labeled points — guaranteed to land
+        # inside existing outer ROI balls and exercise the warm-start path
+        labeled = np.flatnonzero(pre_labels >= 0)
+        take = (labeled[rng.choice(labeled.size, size=min(8, labeled.size),
+                                   replace=False)]
+                if labeled.size else np.arange(min(8, len(pts))))
+        delta = pts[take] + 0.01 * rng.standard_normal(
+            (take.size, pts.shape[1])).astype(np.float32)
+        ids = oc.insert(delta)
+        ep, _ = live.commit_and_publish({"delta": int(ids.size)})
+        eid, _ = live.rollback_and_publish(base_epoch)
+        lab_post = live.submit(probe).result(timeout=30)
+        assert np.array_equal(oc.labels, pre_labels), (
+            "post-rollback labels differ from the pre-insert snapshot")
+        assert lab_post == lab_pre, (lab_post, lab_pre)
+        info = server.tenant_info()["palid"]
+        s = server.stats.snapshot()
+    o = oc.stats.snapshot()
+    print(f"[palid] online insert={ids.size} routed={o['routed']} "
+          f"buffered={o['buffered']} commit=epoch{ep.id} "
+          f"rollback=epoch{eid} bit-identical=True "
+          f"versions={[r['version'] for r in info]} "
+          f"active_epoch={[r['epoch'] for r in info if r['active']][0]} "
+          f"swaps={s['version_swaps']} rollbacks={s['rollbacks']}")
 
 
 if __name__ == "__main__":

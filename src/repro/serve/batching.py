@@ -75,8 +75,8 @@ class ServingStats:
     """
 
     _FIELDS = ("submitted", "served", "rejected", "cancelled", "batches",
-               "slots_filled", "queue_depth_peak", "queue_wait_s", "pack_s",
-               "compute_s", "wait_s")
+               "slots_filled", "queue_depth_peak", "version_swaps",
+               "rollbacks", "queue_wait_s", "pack_s", "compute_s", "wait_s")
 
     def __init__(self) -> None:
         for f in self._FIELDS:
@@ -109,6 +109,7 @@ class ServingStats:
                 f"rejected={s['rejected']} cancelled={s['cancelled']} | "
                 f"batches={s['batches']}{occ} "
                 f"queue_peak={s['queue_depth_peak']} | "
+                f"swaps={s['version_swaps']} rollbacks={s['rollbacks']} | "
                 f"queue_wait={s['queue_wait_s']:.3f}s "
                 f"pack={s['pack_s']:.3f}s compute={s['compute_s']:.3f}s "
                 f"idle={s['wait_s']:.3f}s")
@@ -151,11 +152,14 @@ class Tenant:
 
     def __init__(self, name: str, clustering: Clustering, *,
                  threshold: float = 0.5, backend: str = "auto",
-                 version: int = 0):
+                 version: int = 0, epoch: int = -1):
         assert clustering.support_v is not None, (
             "Tenant needs a Clustering with stored supports "
             "(produced by repro.core.engine.fit)")
         self.name, self.version = name, int(version)
+        # the committed OnlineClustering epoch this snapshot came from
+        # (-1 for batch-fit tenants with no online lifecycle)
+        self.epoch = int(epoch)
         self.clustering = clustering
         self.threshold = float(threshold)
         self.backend = backend
@@ -284,11 +288,11 @@ class ClusterServer:
     # ------------------------------------------------------------ registry
     def add_tenant(self, name: str, clustering: Clustering, *,
                    threshold: float = 0.5, backend: str = "auto",
-                   version: int = 0) -> Tenant:
+                   version: int = 0, epoch: int = -1) -> Tenant:
         """Register (or replace) a resident store under (name, version).
         Supports are uploaded to device here, once."""
         t = Tenant(name, clustering, threshold=threshold, backend=backend,
-                   version=version)
+                   version=version, epoch=epoch)
         with self._lock:
             if self._stopping:
                 raise RuntimeError("server is closed")
@@ -297,6 +301,65 @@ class ClusterServer:
             if t.key not in self._rr:
                 self._rr.append(t.key)
         return t
+
+    def swap_tenant(self, name: str, clustering: Clustering, *,
+                    epoch: int = -1, threshold: float = 0.5,
+                    backend: str = "auto", rollback: bool = False,
+                    keep_versions: int = 2) -> Tenant:
+        """Hot-swap `name` to a new snapshot between batches: register the
+        clustering under the next version number (the `_resolve` default —
+        latest version — makes it the active one for every submit that
+        follows; earlier submits already queued against the old version
+        still serve against it). Upload happens OUTSIDE the server lock, so
+        `submit()` traffic keeps flowing while device buffers build.
+
+        `epoch` tags the tenant with the committed OnlineClustering epoch
+        it serves (surfaced by `tenant_info()`); `rollback=True` counts the
+        swap under stats.rollbacks instead of stats.version_swaps — the
+        registry mechanics are identical, the version number still moves
+        FORWARD even though the epoch moves back (serving versions are an
+        append-only history; epochs are the restorable data lineage).
+        Old versions beyond the newest `keep_versions` are retired (their
+        queued requests cancelled)."""
+        if keep_versions < 1:
+            raise ValueError("keep_versions must be >= 1")
+        with self._lock:
+            if self._stopping:
+                raise RuntimeError("server is closed")
+            versions = [v for (n, v) in self._tenants if n == name]
+            version = max(versions) + 1 if versions else 0
+        t = Tenant(name, clustering, threshold=threshold, backend=backend,
+                   version=version, epoch=epoch)
+        with self._lock:
+            if self._stopping:
+                raise RuntimeError("server is closed")
+            self._tenants[t.key] = t
+            self._queues.setdefault(t.key, deque())
+            if t.key not in self._rr:
+                self._rr.append(t.key)
+            retire = sorted(v for (n, v) in self._tenants
+                            if n == name)[:-keep_versions]
+        self.stats.add("rollbacks" if rollback else "version_swaps")
+        for v in retire:   # remove_tenant re-takes the lock — call unlocked
+            self.remove_tenant(name, v)
+        return t
+
+    def tenant_info(self) -> dict:
+        """Registry observability: {name: [{version, epoch, n_clusters,
+        queued, active}, ...]} sorted by version; `active` marks the
+        version new submits resolve to."""
+        with self._lock:
+            info: dict[str, list[dict]] = {}
+            for (n, v), t in sorted(self._tenants.items()):
+                info.setdefault(n, []).append({
+                    "version": v, "epoch": t.epoch,
+                    "n_clusters": t.n_clusters,
+                    "queued": len(self._queues.get((n, v), ()))})
+            for rows in info.values():
+                rows.sort(key=lambda r: r["version"])
+                for r in rows:
+                    r["active"] = r["version"] == rows[-1]["version"]
+            return info
 
     def remove_tenant(self, name: str, version: int = 0) -> None:
         """Deregister; queued requests for the tenant are cancelled."""

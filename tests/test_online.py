@@ -1,0 +1,313 @@
+"""Online clustering subsystem: localized insert/delete updates, the
+epoch commit/rollback lifecycle (checkpoint-backed, bit-identical
+restores), update-vs-refit parity on disjoint-ROI inserts, and the live
+serving hot-swap path.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.alid import ALIDConfig
+from repro.core.engine import fit
+from repro.core.online import EpochVerifyError, OnlineClustering
+from repro.data import auto_lsh_params, make_blobs_with_noise
+from repro.serve import ClusterServer, LiveServing
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return make_blobs_with_noise(n_clusters=3, cluster_size=40, n_noise=80,
+                                 d=16, seed=7, overlap_pairs=0)
+
+
+@pytest.fixture(scope="module")
+def cfg(blobs):
+    return ALIDConfig(a_cap=56, delta=64,
+                      lsh=auto_lsh_params(blobs.points, probe=128),
+                      seeds_per_round=16, max_rounds=24, exhaustive=True)
+
+
+@pytest.fixture(scope="module")
+def base(blobs, cfg):
+    res = fit(blobs.points, cfg, jax.random.PRNGKey(0))
+    assert res.n_clusters > 0
+    return res
+
+
+def make_oc(base, blobs, cfg, tmp_path, **kw) -> OnlineClustering:
+    kw.setdefault("rng", jax.random.PRNGKey(5))
+    return OnlineClustering(base, blobs.points, cfg,
+                            ckpt_dir=str(tmp_path / "epochs"), **kw)
+
+
+def _state_arrays(oc: OnlineClustering) -> dict:
+    return {k: np.array(getattr(oc, k)) for k in
+            ("points", "alive", "labels", "sup_idx", "sup_w", "sup_v",
+             "densities", "live")}
+
+
+def _outside_every_ball(oc: OnlineClustering) -> np.ndarray:
+    """Alive, unlabeled ids strictly outside every live cluster's routing
+    ball (with margin) — deleting/re-inserting them cannot touch any
+    cluster, by Prop. 1."""
+    oc._refresh_rois()
+    live = np.flatnonzero(oc.live)
+    cen = oc._roi_center[live]
+    rad = oc._roi_radius[live]
+    ids = np.flatnonzero((oc.labels < 0) & oc.alive)
+    dist = np.sqrt(((oc.points[ids].astype(np.float64)[:, None]
+                     - cen[None]) ** 2).sum(-1))
+    return ids[(dist > rad[None] * 1.05 + 0.5).all(axis=1)]
+
+
+# ----------------------------------------------------------------- baseline --
+def test_baseline_commits_epoch_zero_and_verifies(base, blobs, cfg, tmp_path):
+    oc = make_oc(base, blobs, cfg, tmp_path)
+    assert oc.epoch_id == 0
+    assert oc.epochs() == [0]
+    assert oc.verify() == []
+    np.testing.assert_array_equal(oc.labels, base.labels)
+    served = oc.to_clustering()
+    assert served.n_clusters == base.n_clusters
+    np.testing.assert_array_equal(served.labels, base.labels)
+
+
+# ------------------------------------------------------------------ inserts --
+def test_insert_routed_jitter_absorbs_locally(base, blobs, cfg, tmp_path):
+    """Jittered copies of one cluster's members route into its ROI ball and
+    are absorbed there; every OTHER cluster's stored state stays bitwise
+    untouched (the locality guarantee, not a tolerance statement)."""
+    oc = make_oc(base, blobs, cfg, tmp_path, auto_flush=False)
+    target = int(np.argmax(oc.densities))
+    members = oc.sup_idx[target][oc.sup_w[target] > 0]
+    rng = np.random.default_rng(0)
+    delta = (oc.points[members[:4]]
+             + 0.01 * rng.standard_normal((4, oc.d))).astype(np.float32)
+
+    before = _state_arrays(oc)
+    ids = oc.insert(delta)
+    assert oc.stats.routed == 4 and oc.stats.buffered == 0
+    assert oc.verify() == []
+    # untouched clusters are bitwise identical
+    for c in np.flatnonzero(before["live"]):
+        if c == target:
+            continue
+        np.testing.assert_array_equal(oc.sup_w[c], before["sup_w"][c])
+        np.testing.assert_array_equal(oc.sup_idx[c], before["sup_idx"][c])
+        assert oc.densities[c] == before["densities"][c]
+    # points labeled to other clusters keep their labels
+    others = (before["labels"] >= 0) & (before["labels"] != target)
+    np.testing.assert_array_equal(oc.labels[:len(blobs.points)][others],
+                                  before["labels"][others])
+    # absorbed inserts carry the target's label; the rest stay -1
+    assert set(np.unique(oc.labels[ids])) <= {-1, target}
+    assert oc.stats.absorbed > 0
+
+
+def test_insert_far_points_buffer_not_clusters(base, blobs, cfg, tmp_path):
+    """Points outside every ball never touch existing clusters: they buffer
+    (below outlier_min nothing flushes) and all stored state is bitwise
+    unchanged."""
+    oc = make_oc(base, blobs, cfg, tmp_path, outlier_min=64,
+                 auto_flush=True)
+    before = _state_arrays(oc)
+    far = np.full((3, oc.d), 200.0, np.float32)
+    ids = oc.insert(far)
+    assert oc.stats.buffered == 3 and oc.stats.routed == 0
+    assert sorted(oc.outliers) == sorted(int(i) for i in ids)
+    for k in ("sup_idx", "sup_w", "sup_v", "densities", "live"):
+        np.testing.assert_array_equal(getattr(oc, k), before[k])
+    assert oc.verify() == []
+
+
+# ---------------------------------------------------- update-vs-refit parity --
+def test_disjoint_roi_insert_parity_with_cold_union_fit(base, blobs, cfg,
+                                                        tmp_path):
+    """The satellite parity contract: inserting a batch whose ROIs are
+    disjoint from every existing cluster (1) leaves every pre-existing
+    label bit-identical, and (2) seeds new clusters whose densities agree
+    with a COLD fit on the union (matched by support centroid)."""
+    rng = np.random.default_rng(2)
+    offs = np.full((16,), 60.0, np.float32)
+    B = np.concatenate([
+        offs + 0.3 * rng.standard_normal((40, 16)).astype(np.float32),
+        -offs + 0.3 * rng.standard_normal((40, 16)).astype(np.float32)])
+
+    oc = make_oc(base, blobs, cfg, tmp_path, outlier_min=len(B))
+    pre = oc.labels.copy()
+    ids = oc.insert(B)                       # buffers, then flushes at 80
+
+    assert oc.stats.flushes == 1 and oc.stats.new_clusters > 0
+    np.testing.assert_array_equal(oc.labels[:len(blobs.points)], pre)
+    assert oc.verify() == []
+    new_cl = [c for c in np.flatnonzero(oc.live) if c >= base.n_clusters]
+    assert new_cl
+    id_set = set(int(i) for i in ids)
+    for c in new_cl:                         # new supports hold only B rows
+        assert set(int(i) for i in
+                   oc.sup_idx[c][oc.sup_idx[c] >= 0]) <= id_set
+
+    union = fit(np.concatenate([blobs.points, B]), cfg._replace(k=oc.k),
+                jax.random.PRNGKey(0))
+
+    def centroid(sv, sw):
+        return (sv * sw[:, None]).sum(0)
+
+    u_cents = np.stack([centroid(union.support_v[i], union.support_w[i])
+                        for i in range(union.n_clusters)])
+    for c in new_cl:
+        cen = centroid(oc.sup_v[c], oc.sup_w[c])
+        j = int(np.argmin(((u_cents - cen) ** 2).sum(-1)))
+        assert float(np.sqrt(((u_cents[j] - cen) ** 2).sum())) < 1.0
+        assert abs(float(oc.densities[c]) - float(union.densities[j])) < 0.05
+
+
+def test_delete_insert_roundtrip_is_bit_identical(base, blobs, cfg, tmp_path):
+    """Delete points that intersect no ball, then re-insert the same rows:
+    ids recycle ascending, so the label array — and every stored support —
+    comes back bit-identical."""
+    oc = make_oc(base, blobs, cfg, tmp_path, auto_flush=False)
+    sel = _outside_every_ball(oc)[:5]
+    assert sel.size == 5, "fixture needs >= 5 far noise points"
+    rows = oc.points[sel].copy()             # delete zeroes the rows
+    before = _state_arrays(oc)
+
+    oc.delete(sel)
+    assert not oc.alive[sel].any() and (oc.labels[sel] == -1).all()
+    back = oc.insert(rows)
+    np.testing.assert_array_equal(back, sel)     # recycled, ascending
+    after = _state_arrays(oc)
+    for k, v in before.items():
+        np.testing.assert_array_equal(after[k], v, err_msg=k)
+    assert oc.verify() == []
+
+
+def test_delete_support_member_reconverges_only_owners(base, blobs, cfg,
+                                                       tmp_path):
+    oc = make_oc(base, blobs, cfg, tmp_path, auto_flush=False)
+    target = int(np.argmax(oc.densities))
+    members = oc.sup_idx[target][oc.sup_w[target] > 0]
+    victim = int(members[0])
+    before = _state_arrays(oc)
+
+    oc.delete([victim])
+    assert oc.stats.reconverges >= 1
+    assert not oc.alive[victim] and oc.labels[victim] == -1
+    assert oc.verify() == []
+    # clusters that never held the victim are bitwise untouched
+    for c in np.flatnonzero(before["live"]):
+        if victim in set(int(i) for i in before["sup_idx"][c]):
+            continue
+        np.testing.assert_array_equal(oc.sup_w[c], before["sup_w"][c])
+        assert oc.densities[c] == before["densities"][c]
+
+
+# ------------------------------------------------------------------- epochs --
+def test_commit_rollback_restores_bit_identical_state(base, blobs, cfg,
+                                                      tmp_path):
+    oc = make_oc(base, blobs, cfg, tmp_path, auto_flush=False)
+    snap = _state_arrays(oc)
+
+    rng = np.random.default_rng(1)
+    target = int(np.argmax(oc.densities))
+    members = oc.sup_idx[target][oc.sup_w[target] > 0]
+    oc.insert((oc.points[members[:3]]
+               + 0.01 * rng.standard_normal((3, oc.d))).astype(np.float32))
+    oc.delete([int(members[1])])
+    ep = oc.commit({"note": "delta"})
+    assert ep.id == 1 and oc.epoch_id == 1
+    mutated = _state_arrays(oc)
+
+    eid = oc.rollback(0)
+    assert eid == 0 and oc.epoch_id == 0
+    restored = _state_arrays(oc)
+    for k, v in snap.items():
+        np.testing.assert_array_equal(restored[k], v, err_msg=k)
+    assert oc.verify() == []
+
+    # roll FORWARD again to the retained epoch 1
+    oc.rollback(1)
+    for k, v in mutated.items():
+        np.testing.assert_array_equal(_state_arrays(oc)[k], v, err_msg=k)
+
+
+def test_commit_verify_failure_rolls_back_and_raises(base, blobs, cfg,
+                                                     tmp_path):
+    oc = make_oc(base, blobs, cfg, tmp_path, auto_flush=False)
+    c0 = int(np.flatnonzero(oc.live)[0])
+    good_w = oc.sup_w[c0].copy()
+    oc.sup_w[c0] = oc.sup_w[c0] * 2.0        # off the simplex
+
+    with pytest.raises(EpochVerifyError) as ei:
+        oc.commit()
+    assert ei.value.problems
+    # commit-or-rollback: the corruption was rolled back, not committed
+    assert oc.epoch_id == 0 and oc.epochs() == [0]
+    np.testing.assert_array_equal(oc.sup_w[c0], good_w)
+    assert oc.verify() == []
+
+
+def test_epoch_transaction_commits_or_rolls_back(base, blobs, cfg, tmp_path):
+    oc = make_oc(base, blobs, cfg, tmp_path, auto_flush=False)
+    n0 = oc.n_points
+
+    with oc.epoch({"t": 1}) as txn:
+        oc.insert(np.full((2, oc.d), 300.0, np.float32))
+    assert txn.epoch is not None and txn.epoch.id == 1
+    assert oc.epoch_id == 1 and oc.n_points == n0 + 2
+
+    with pytest.raises(RuntimeError, match="boom"):
+        with oc.epoch({"t": 2}):
+            oc.insert(np.full((4, oc.d), 400.0, np.float32))
+            raise RuntimeError("boom")
+    assert oc.epoch_id == 1 and oc.n_points == n0 + 2   # txn undone
+    assert oc.verify() == []
+
+
+def test_keep_bounds_retained_epochs(base, blobs, cfg, tmp_path):
+    oc = make_oc(base, blobs, cfg, tmp_path, auto_flush=False, keep=3)
+    for i in range(5):
+        oc.insert(np.full((1, oc.d), 300.0 + i, np.float32))
+        oc.commit()
+    assert oc.epochs() == [3, 4, 5]          # bounded, oldest gone
+    with pytest.raises(KeyError):
+        oc.rollback(0)
+
+
+# ------------------------------------------------------------- live serving --
+def test_live_serving_swap_rollback_and_stats(base, blobs, cfg, tmp_path):
+    oc = make_oc(base, blobs, cfg, tmp_path, auto_flush=False)
+    pre_labels = oc.labels.copy()
+    target = int(np.argmax(oc.densities))
+    members = oc.sup_idx[target][oc.sup_w[target] > 0]
+    probe = oc.points[int(members[0])]
+
+    with ClusterServer(batch_slots=16, queue_limit=64,
+                       policy="block") as server:
+        live = LiveServing(server, oc, name="online", keep_versions=2)
+        t0 = live.publish()
+        assert (t0.version, t0.epoch) == (0, 0)
+        lab_pre = live.submit(probe).result(timeout=30)
+
+        rng = np.random.default_rng(0)
+        oc.insert((oc.points[members[:3]] + 0.01 * rng.standard_normal(
+            (3, oc.d))).astype(np.float32))
+        ep, t1 = live.commit_and_publish({"delta": 3})
+        assert (t1.version, t1.epoch) == (1, ep.id) and ep.id == 1
+
+        eid, t2 = live.rollback_and_publish(0)
+        assert eid == 0
+        assert t2.version == 2 and t2.epoch == 0    # version forward, epoch back
+        np.testing.assert_array_equal(oc.labels, pre_labels)
+        lab_post = live.submit(probe).result(timeout=30)
+        assert lab_post == lab_pre
+
+        s = server.stats.snapshot()
+        assert s["version_swaps"] == 2 and s["rollbacks"] == 1
+        rows = live.info()
+        assert [r["version"] for r in rows] == [1, 2]   # keep_versions=2
+        active = [r for r in rows if r["active"]]
+        assert len(active) == 1 and active[0]["epoch"] == 0
+        assert active[0]["n_clusters"] == base.n_clusters

@@ -14,7 +14,7 @@ from repro.core.alid import ALIDConfig, EngineSpec
 from repro.core.engine import StreamedEngine, fit, make_engine
 from repro.core.pipeline import ScratchShards, ShardBundleCache, ShardPipeline
 from repro.core.source import CountingSource, InMemorySource
-from repro.core.store import build_store_streamed
+from repro.core.store import build_store_streamed, update_shard_points
 from repro.data import auto_lsh_params, make_blobs_with_noise
 
 
@@ -143,6 +143,42 @@ def test_lru_budget_evicts_least_recent(store):
     small = ShardBundleCache(budget_bytes=shard_nbytes - 1)
     small.put(3, pipe.fetch_bundle(3))
     assert len(small) == 0
+
+
+def test_shard_mutation_invalidates_cached_bundle(store):
+    """The store-mutation staleness regression: a cached bundle filled
+    before `update_shard_points` must NOT be served afterwards — the
+    generation mismatch drops it and the fetch re-reads the new bytes."""
+    pipe = ShardPipeline(store, cache_bytes=1 << 30)
+    before = pipe.fetch_bundle(1)
+    rows = before[0].copy()
+    rows[0, 0] += 5.0
+    gen = update_shard_points(store, 1, rows)
+    assert gen == 1 and store.generations[1] == 1
+
+    after = pipe.fetch_bundle(1)
+    assert after[0] is not before[0]
+    np.testing.assert_array_equal(after[0], rows)
+    assert pipe.stats.cache_stale == 1
+    assert pipe.cache.stale_evictions == 1
+    # the refilled entry hits at the NEW generation
+    assert pipe.fetch_bundle(1)[0] is after[0]
+    assert pipe.stats.cache_hits == 1
+    # other shards were untouched: still generation 0, still cacheable
+    assert pipe.fetch_bundle(0) is pipe.fetch_bundle(0)
+
+
+def test_update_shard_points_requires_scratch(blobs, cfg, store):
+    src = InMemorySource(blobs.points)
+    st = build_store_streamed(src, cfg.lsh, jax.random.PRNGKey(3),
+                              n_shards=5, scratch_dir=None)
+    rows = np.zeros((st.shard_cap, st.dim), np.float32)
+    with pytest.raises(ValueError, match="scratch"):
+        update_shard_points(st, 0, rows)
+    with pytest.raises(ValueError, match="slab"):
+        # wrong shape is rejected before any mutation
+        update_shard_points(store, 0, rows[:1])
+    assert store.generations[0] == 0
 
 
 def test_prefetch_stream_order_and_bytes(store):
