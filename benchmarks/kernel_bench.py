@@ -71,7 +71,7 @@ def _bench_fused(rng) -> dict:
 
     def unfused_roi(vc, cen, val):
         dist = jnp.sqrt(jnp.maximum(
-            jnp.sum((vc - cen[None, :]) ** 2, -1), 0.0))
+            jnp.sum((vc - cen[None, :]) ** 2, -1), 0.0))  # analysis: allow(private-distance): unfused legacy composition, benchmarked as the comparison arm against the fused roi_filter kernel
         ok = val & (dist <= rad)
         return dist, ok, jnp.where(ok, -dist, -jnp.inf)
 

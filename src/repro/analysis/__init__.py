@@ -1,0 +1,45 @@
+"""repro.analysis — the repo's static contract checker, run as a CI gate.
+
+The system's correctness rests on invariants that used to exist only as
+prose: the PR 5 dispatch rule ("no hot-path module computes affinity,
+distance, or LSH keys privately"), the padded-tail masking contract every
+fused kernel honors (DESIGN.md §7.3), the jit-boundary discipline of the
+streamed engine's host stages, and the lock/device-transfer discipline of
+the threaded serving and pipeline layers (§8-§9). This package makes them
+machine-checked. Four passes, one CLI:
+
+  contracts    kernel contract checker — ref/interpret abstract-eval
+               shape+dtype agreement per op, VMEM block-byte estimates read
+               from the live BlockSpecs against a budget, and NaN/Inf
+               poisoning of every kernel's pad region asserting valid-slot
+               outputs bit-unchanged (repro.analysis.contracts)
+  dispatch     AST lint over src/repro + benchmarks + examples forbidding
+               private compute: jnp.dot/einsum/matmul, norm / (a-b)**2
+               distance expansions, hand-rolled LSH hashing outside
+               repro/kernels/ (repro.analysis.dispatch)
+  jitboundary  implicit host syncs (float()/np.asarray/.item() on traced
+               values), Python scalars fed to static jit params, and a
+               runtime jit-cache-miss count over the streamed engine's
+               per-round host stages (repro.analysis.jitboundary)
+  concurrency  lock discipline in serve/batching.py, serve/live.py,
+               core/pipeline.py, core/online.py: device transfers or Future
+               callbacks under a lock, shared counters mutated off-lock,
+               inconsistent lock acquisition order
+               (repro.analysis.concurrency)
+
+Run it:
+
+    PYTHONPATH=src python -m repro.analysis.check --report CHECK_report.json
+    run_palid --check            # same gate, launcher alias
+
+Escape hatch: a finding that is intentional carries a pragma ON its line or
+the line above —
+
+    # analysis: allow(rule-name): why this is safe here
+
+The reason string is REQUIRED; an empty reason is itself a violation
+(`pragma-missing-reason`). Suppressed findings still appear in the JSON
+report with their reasons, so the escape hatch is auditable.
+"""
+
+from repro.analysis.report import Report, Violation  # noqa: F401

@@ -1,0 +1,134 @@
+"""Shared AST helpers: file iteration, import resolution, call-name
+matching, and jit-decorator parsing — used by the dispatch, jitboundary,
+and concurrency passes."""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterator, Optional
+
+# Directories scanned by the source passes, repo-relative. The kernel
+# package is the backend itself (its oracles and tile math ARE the one
+# sanctioned implementation), and this package hosts the rule data.
+SCAN_ROOTS = ("src/repro", "benchmarks", "examples")
+EXCLUDE_PREFIXES = ("src/repro/kernels", "src/repro/analysis")
+
+
+def iter_source_files(root: str,
+                      roots=SCAN_ROOTS,
+                      exclude=EXCLUDE_PREFIXES) -> Iterator[str]:
+    """Yield repo-relative paths of every .py file in scope, sorted."""
+    out = []
+    for base in roots:
+        absbase = os.path.join(root, base)
+        if os.path.isfile(absbase) and absbase.endswith(".py"):
+            out.append(base)
+            continue
+        for dirpath, dirnames, filenames in os.walk(absbase):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__",))
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                rel = os.path.relpath(os.path.join(dirpath, fn), root)
+                if any(rel.startswith(p) for p in exclude):
+                    continue
+                out.append(rel)
+    return iter(sorted(set(out)))
+
+
+class ImportTable:
+    """alias -> fully-qualified module/name map for one module.
+
+    `import jax.numpy as jnp` maps jnp -> jax.numpy; `from jax import lax`
+    maps lax -> jax.lax; `from jax.experimental import pallas as pl` maps
+    pl -> jax.experimental.pallas.
+    """
+
+    def __init__(self, tree: ast.AST):
+        self.alias: dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.alias[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.alias[a.asname or a.name] = (
+                        f"{node.module}.{a.name}")
+
+    def resolve(self, dotted: str) -> str:
+        """Expand the leading alias of a dotted name: jnp.linalg.norm ->
+        jax.numpy.linalg.norm."""
+        head, _, rest = dotted.partition(".")
+        full = self.alias.get(head, head)
+        return f"{full}.{rest}" if rest else full
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """`a.b.c` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_full_name(node: ast.Call, imports: ImportTable) -> Optional[str]:
+    """Fully-qualified callee name of a Call, or None (lambdas, chains)."""
+    name = dotted_name(node.func)
+    return imports.resolve(name) if name else None
+
+
+def base_name(node: ast.AST) -> Optional[str]:
+    """Root Name of an expression chain: `state.x[i].item` -> state."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Starred)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def jit_static_argnames(dec: ast.expr,
+                        imports: ImportTable) -> Optional[frozenset[str]]:
+    """If `dec` is a jax.jit decorator (bare, jax.jit(...), or
+    functools.partial(jax.jit, ...)), return its static_argnames as a
+    frozenset (empty if none). Returns None for non-jit decorators."""
+    def is_jit(expr) -> bool:
+        name = dotted_name(expr)
+        return bool(name) and imports.resolve(name) in (
+            "jax.jit", "jax.pjit", "jax.experimental.pjit.pjit")
+
+    if is_jit(dec):
+        return frozenset()
+    if not isinstance(dec, ast.Call):
+        return None
+    statics: frozenset[str] = frozenset()
+    target = None
+    name = dotted_name(dec.func)
+    resolved = imports.resolve(name) if name else ""
+    if resolved == "functools.partial" and dec.args and is_jit(dec.args[0]):
+        target = dec
+    elif is_jit(dec.func):
+        target = dec
+    if target is None:
+        return None
+    for kw in target.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            vals = []
+            v = kw.value
+            elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+            for e in elts:
+                if isinstance(e, ast.Constant):
+                    vals.append(str(e.value))
+            statics = statics | frozenset(vals)
+    return statics
+
+
+def parse_file(root: str, rel: str):
+    """(source, tree) for a repo-relative path."""
+    with open(os.path.join(root, rel), "r") as f:
+        src = f.read()
+    return src, ast.parse(src, filename=rel)

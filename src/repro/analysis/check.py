@@ -1,0 +1,108 @@
+"""CLI entry point — `python -m repro.analysis.check`.
+
+Runs the four analysis passes over the repo and exits non-zero if any
+unsuppressed violation survives. CI runs this as a required tier-1 step and
+uploads the JSON report (`--report CHECK_report.json`) as an artifact;
+`run_palid --check` is an alias for the same invocation.
+
+Pass selection: all four by default. `--only dispatch,jitboundary` (or
+`--skip`) narrows for local iteration; `--no-runtime` keeps only the pure
+source passes (no jax import, sub-second) for editor/pre-commit hooks.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis.pragmas import PragmaCache
+from repro.analysis.report import Report
+
+SOURCE_PASSES = ("dispatch", "jitboundary", "concurrency")
+RUNTIME_PASSES = ("contracts", "retrace")
+ALL_PASSES = SOURCE_PASSES + RUNTIME_PASSES
+
+
+def find_repo_root(start: str | None = None) -> str:
+    """Walk up from `start` (or cwd) to the directory holding src/repro."""
+    d = os.path.abspath(start or os.getcwd())
+    while True:
+        if os.path.isdir(os.path.join(d, "src", "repro")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            break
+        d = parent
+    # fall back to the package's own checkout (src/repro/analysis/check.py)
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def run_checks(root: str, passes=ALL_PASSES,
+               vmem_budget: int | None = None) -> Report:
+    report = Report(root)
+    pragma_cache = PragmaCache(report)
+    if "dispatch" in passes:
+        from repro.analysis import dispatch
+        dispatch.run(root, report, pragma_cache)
+    if "jitboundary" in passes:
+        from repro.analysis import jitboundary
+        jitboundary.run(root, report, pragma_cache)
+    if "concurrency" in passes:
+        from repro.analysis import concurrency
+        concurrency.run(root, report, pragma_cache)
+    if "contracts" in passes:
+        from repro.analysis import contracts
+        contracts.run(root, report,
+                      vmem_budget or contracts.DEFAULT_VMEM_BUDGET)
+    if "retrace" in passes:
+        from repro.analysis import jitboundary
+        jitboundary.run_streamed_retrace(report)
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="Static + runtime contract checker for the "
+                    "kernel/dispatch/serving stack (CI gate).")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto-detect from cwd)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write the JSON report here (e.g. "
+                         "CHECK_report.json)")
+    ap.add_argument("--only", default=None, metavar="PASSES",
+                    help=f"comma list out of {','.join(ALL_PASSES)}")
+    ap.add_argument("--skip", default=None, metavar="PASSES",
+                    help="comma list of passes to skip")
+    ap.add_argument("--no-runtime", action="store_true",
+                    help="source passes only (no jax import; fast)")
+    ap.add_argument("--vmem-budget-mib", type=float, default=16.0,
+                    help="per-kernel VMEM block budget in MiB (default 16)")
+    args = ap.parse_args(argv)
+
+    passes = list(ALL_PASSES)
+    if args.no_runtime:
+        passes = [p for p in passes if p in SOURCE_PASSES]
+    if args.only:
+        wanted = [p.strip() for p in args.only.split(",") if p.strip()]
+        bad = sorted(set(wanted) - set(ALL_PASSES))
+        if bad:
+            ap.error(f"unknown pass(es) {bad}; choose from {ALL_PASSES}")
+        passes = [p for p in passes if p in wanted]
+    if args.skip:
+        dropped = {p.strip() for p in args.skip.split(",")}
+        passes = [p for p in passes if p not in dropped]
+
+    root = args.root or find_repo_root()
+    report = run_checks(root, passes,
+                        vmem_budget=int(args.vmem_budget_mib * 2 ** 20))
+    if args.report:
+        report.write(args.report)
+    print(report.summary())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,212 @@
+"""Concurrency lint — lock discipline in the threaded layers.
+
+Scanned modules (the ones that own threads + locks): serve/batching.py,
+serve/live.py, core/pipeline.py, core/online.py.
+
+Rules
+-----
+transfer-under-lock   a device transfer / heavy host conversion executed
+                      while holding a lock: direct jax.device_put /
+                      jnp.asarray / np.asarray / Tenant(...) construction
+                      inside a `with <lock>:` block, OR a call to a
+                      module-local function that itself performs one
+                      (one level of intra-module inlining — this is what
+                      catches `tenant.check_query(...)` under the server
+                      lock). Uploads under the registry lock stall every
+                      submit() for the duration of an H2D copy.
+future-under-lock     Future completion callbacks (.set_result /
+                      .set_exception / .cancel / .add_done_callback /
+                      .set_running_or_notify_cancel) invoked under a lock —
+                      `Future.cancel` runs user callbacks synchronously, so
+                      arbitrary user code executes inside the server's
+                      critical section (classic self-deadlock).
+unlocked-mutation     a read-modify-write (`+=` / `-=` style AugAssign) on
+                      an attribute of a class that owns a `_lock`, executed
+                      outside any `with <lock>:` block in that method.
+                      Plain assignments are atomic stores and stay legal.
+lock-order            two locks acquired nested in BOTH orders somewhere in
+                      the module (A outer B inner AND B outer A inner) —
+                      the textbook deadlock shape. Lock identity is the
+                      unparsed `with` expression.
+
+The pragma escape hatch applies (`# analysis: allow(rule): reason`) — e.g.
+a helper documented as "caller must hold the lock".
+"""
+
+from __future__ import annotations
+
+import ast
+import itertools
+from typing import Optional
+
+from repro.analysis import astutil
+from repro.analysis.report import Report, Violation
+
+PASS = "concurrency"
+
+TARGET_MODULES = (
+    "src/repro/serve/batching.py",
+    "src/repro/serve/live.py",
+    "src/repro/core/pipeline.py",
+    "src/repro/core/online.py",
+)
+
+TRANSFER_CALLS = frozenset((
+    "jax.device_put", "jax.device_get", "jax.numpy.asarray",
+    "jax.numpy.array", "numpy.asarray", "numpy.array", "numpy.copy",
+))
+FUTURE_METHODS = frozenset((
+    "set_result", "set_exception", "cancel", "add_done_callback",
+    "set_running_or_notify_cancel",
+))
+# `with self.<attr>:` counts as a lock acquisition when the attr looks like
+# one — Condition variables wrap a lock, so they count too
+LOCK_ATTR_HINTS = ("lock", "_work", "_space", "cond", "_cv", "mutex")
+
+
+def _lock_name(item: ast.withitem) -> Optional[str]:
+    expr = item.context_expr
+    name = astutil.dotted_name(expr)
+    if name is None:
+        return None
+    last = name.rsplit(".", 1)[-1].lower()
+    if any(h in last for h in LOCK_ATTR_HINTS):
+        return name
+    return None
+
+
+def _method_calls_transfer(fn: ast.AST, imports: astutil.ImportTable) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            full = astutil.call_full_name(node, imports)
+            if full in TRANSFER_CALLS:
+                return True
+    return False
+
+
+class _Scanner(ast.NodeVisitor):
+    def __init__(self, rel: str, imports: astutil.ImportTable,
+                 heavy_local: frozenset[str], pragmas):
+        self.rel = rel
+        self.imports = imports
+        self.heavy_local = heavy_local
+        self.pragmas = pragmas
+        self.out: list[Violation] = []
+        self.lock_stack: list[str] = []
+        self.nesting_pairs: set[tuple[str, str, int]] = set()
+        self.class_stack: list[ast.ClassDef] = []
+        self.lock_classes: set[str] = set()
+
+    def emit(self, rule: str, line: int, msg: str) -> None:
+        self.out.append(self.pragmas.apply(
+            Violation(PASS, rule, self.rel, line, msg)))
+
+    # ----- structure ------------------------------------------------------
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.class_stack.append(node)
+        self.generic_visit(node)
+        self.class_stack.pop()
+
+    def visit_With(self, node: ast.With) -> None:
+        names = [n for n in map(_lock_name, node.items) if n]
+        for outer in self.lock_stack:
+            for inner in names:
+                if outer != inner:
+                    self.nesting_pairs.add((outer, inner, node.lineno))
+        self.lock_stack.extend(names)
+        self.generic_visit(node)
+        del self.lock_stack[len(self.lock_stack) - len(names):]
+
+    # ----- rules ----------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        if self.lock_stack:
+            held = self.lock_stack[-1]
+            full = astutil.call_full_name(node, self.imports)
+            if full in TRANSFER_CALLS:
+                self.emit("transfer-under-lock", node.lineno,
+                          f"{full} while holding {held} — move the "
+                          "transfer/conversion outside the critical "
+                          "section")
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in self.heavy_local):
+                self.emit("transfer-under-lock", node.lineno,
+                          f".{node.func.attr}(...) under {held} does a "
+                          "device transfer / host array conversion "
+                          "internally — hoist the call out of the lock")
+            elif isinstance(node.func, ast.Name) and (
+                    node.func.id in self.heavy_local):
+                self.emit("transfer-under-lock", node.lineno,
+                          f"{node.func.id}(...) under {held} does a device "
+                          "transfer / host array conversion internally — "
+                          "hoist the call out of the lock")
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in FUTURE_METHODS):
+                self.emit("future-under-lock", node.lineno,
+                          f"Future.{node.func.attr}() under {held} — "
+                          "completion callbacks run user code inside the "
+                          "critical section")
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if (not self.lock_stack and self.class_stack
+                and self.class_stack[-1].name in self.lock_classes
+                and isinstance(node.target, ast.Attribute)
+                and astutil.base_name(node.target) == "self"):
+            self.emit("unlocked-mutation", node.lineno,
+                      f"read-modify-write of self.{node.target.attr} "
+                      f"outside the lock in lock-owning class "
+                      f"{self.class_stack[-1].name!r}")
+        self.generic_visit(node)
+
+
+def _classes_with_lock(tree: ast.AST) -> set[str]:
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            for sub in ast.walk(node):
+                if (isinstance(sub, ast.Assign)
+                        and any(isinstance(t, ast.Attribute)
+                                and t.attr == "_lock"
+                                and astutil.base_name(t) == "self"
+                                for t in sub.targets)):
+                    out.add(node.name)
+    return out
+
+
+def check_source(rel: str, src: str, tree: ast.AST,
+                 pragmas) -> list[Violation]:
+    imports = astutil.ImportTable(tree)
+    # one level of intra-module inlining: functions/methods that themselves
+    # perform a transfer are "heavy"; calling them under a lock is flagged
+    heavy = frozenset(
+        fn.name for fn in ast.walk(tree)
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+        and _method_calls_transfer(fn, imports))
+    scanner = _Scanner(rel, imports, heavy, pragmas)
+    scanner.lock_classes = _classes_with_lock(tree)
+    scanner.visit(tree)
+    # lock-order: both orders observed anywhere in the module
+    pairs = {(a, b) for a, b, _ in scanner.nesting_pairs}
+    for (a, b), (c, d) in itertools.combinations(sorted(pairs), 2):
+        if (a, b) == (d, c):
+            line = min(ln for x, y, ln in scanner.nesting_pairs
+                       if (x, y) in ((a, b), (c, d)))
+            scanner.emit("lock-order", line,
+                         f"locks {a} and {b} are acquired nested in both "
+                         "orders in this module — deadlock-prone; pick one "
+                         "order")
+    return scanner.out
+
+
+def run(root: str, report: Report, pragma_cache,
+        modules=TARGET_MODULES) -> None:
+    n = 0
+    for rel in modules:
+        try:
+            src, tree = astutil.parse_file(root, rel)
+        except (OSError, SyntaxError):
+            continue
+        n += 1
+        pragmas = pragma_cache.get(rel, src)
+        report.extend(check_source(rel, src, tree, pragmas))
+    report.note(PASS, modules_scanned=n)

@@ -1,0 +1,521 @@
+"""Kernel contract checker — runtime invariants of `repro.kernels.ops`.
+
+Three checks per op, each a rule in the report:
+
+shape-dtype-mismatch  abstract-eval (jax.eval_shape) of the op under
+                      backend="ref" and backend="interpret" on the same
+                      example operands must produce identical shape/dtype
+                      trees. The ref path IS the jnp oracle; interpret runs
+                      the Pallas kernel code as jax ops, so a mismatch means
+                      the kernel's out_shape / epilogue drifted from the
+                      oracle.
+vmem-budget           estimated VMEM working set of every pallas_call the
+                      op issues — sum of BlockSpec block bytes over inputs,
+                      outputs, and scratch (single-buffered estimate; the
+                      pipelined compiler roughly doubles it) — must fit the
+                      budget (default 16 MiB). BlockSpecs are captured by
+                      intercepting pallas_call during an abstract eval, so
+                      nothing is compiled or run.
+padded-tail           the padded-slot contracts, checked by poisoning pad
+                      regions and asserting valid-slot outputs BIT-identical
+                      to a zero-padded baseline (see POISON_CHECKS). NaN is
+                      the poison wherever the contract masks by selection
+                      (`where` kills NaN); where the contract folds masks
+                      into weights (affinity_matvec's c side) the pad rows
+                      get large finite garbage instead — NaN * 0.0 is NaN,
+                      so that contract is zero-rows-don't-matter, not
+                      NaN-proof, and the check matches the contract.
+
+`POISON_CHECKS` is importable — tests/test_kernels.py parametrizes over it
+so the same scenarios run in the pytest tier, not just the CI gate.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import math
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.report import Report, Violation
+
+PASS = "contracts"
+DEFAULT_VMEM_BUDGET = 16 * 2 ** 20        # bytes; per-core VMEM is ~16 MiB
+
+_OPS_PATH = "src/repro/kernels/ops.py"
+
+
+# --------------------------------------------------------------- op corpus --
+class OpCase(NamedTuple):
+    name: str
+    make: Callable[[], tuple[tuple, dict]]   # -> (args, kwargs) for the op
+    has_pallas: bool = True
+
+
+def _rng():
+    return np.random.default_rng(0)
+
+
+def _f32(a):
+    return np.asarray(a, np.float32)
+
+
+def _case_affinity():
+    r = _rng()
+    return (_f32(r.normal(size=(32, 8))), _f32(r.normal(size=(48, 8))),
+            0.5), {}
+
+
+def _case_pairwise_distance():
+    r = _rng()
+    return (_f32(r.normal(size=(16, 8))), _f32(r.normal(size=(24, 8)))), {}
+
+
+def _case_affinity_matvec():
+    r = _rng()
+    return (_f32(r.normal(size=(32, 8))),
+            np.arange(32, dtype=np.int32),
+            _f32(r.normal(size=(64, 8))),
+            np.arange(64, dtype=np.int32),
+            _f32(r.uniform(0.1, 1.0, size=(64,))),
+            0.5), {}
+
+
+def _case_roi_filter():
+    r = _rng()
+    return (_f32(r.normal(size=(64, 8))), _f32(r.normal(size=(8,))),
+            2.0, np.ones((64,), bool)), {}
+
+
+def _case_assign():
+    r = _rng()
+    return (_f32(r.normal(size=(32, 8))),
+            _f32(r.normal(size=(4, 8, 8))),
+            _f32(r.uniform(0.1, 1.0, size=(4, 8))),
+            _f32(r.uniform(0.5, 1.0, size=(4,))),
+            0.5, 0.1), {}
+
+
+def _case_flash_attention():
+    r = _rng()
+    q = _f32(r.normal(size=(2, 2, 32, 64)))
+    k = _f32(r.normal(size=(2, 2, 32, 64)))
+    v = _f32(r.normal(size=(2, 2, 32, 64)))
+    return (q, k, v), {"causal": False}
+
+
+def _case_segment_matmul():
+    r = _rng()
+    seg = np.sort(r.integers(0, 16, size=(64,))).astype(np.int32)
+    return (_f32(r.normal(size=(64, 16))), seg, 16), {}
+
+
+def _case_embedding_bag():
+    r = _rng()
+    return (_f32(r.normal(size=(128, 16))),
+            r.integers(0, 128, size=(64,)).astype(np.int32),
+            np.sort(r.integers(0, 16, size=(64,))).astype(np.int32),
+            16), {}
+
+
+def _case_lsh_hash():
+    r = _rng()
+    return (_f32(r.normal(size=(32, 8))),
+            _f32(r.normal(size=(4, 3, 8))),
+            _f32(r.uniform(0.0, 0.25, size=(4, 3))),
+            0.25), {}
+
+
+OP_CASES = (
+    OpCase("affinity", _case_affinity),
+    OpCase("pairwise_distance", _case_pairwise_distance, has_pallas=False),
+    OpCase("affinity_matvec", _case_affinity_matvec),
+    OpCase("roi_filter", _case_roi_filter),
+    OpCase("assign_clusters", _case_assign),
+    OpCase("flash_attention", _case_flash_attention),
+    OpCase("segment_matmul", _case_segment_matmul),
+    OpCase("embedding_bag", _case_embedding_bag),
+    OpCase("lsh_hash", _case_lsh_hash),
+)
+
+
+# ------------------------------------------------------ pallas_call capture --
+@contextlib.contextmanager
+def record_pallas_calls():
+    """Intercept jax.experimental.pallas.pallas_call and record every
+    (BlockSpecs, operand avals, out_shape, scratch) it would launch with,
+    WITHOUT tracing or running the kernel body. The fake call returns
+    correctly-shaped zeros so tracing of the surrounding op continues."""
+    import jax.experimental.pallas as pl_mod
+    records: list[dict] = []
+    real = pl_mod.pallas_call
+
+    def recorder(kernel, *, out_shape, **kw):
+        grid_spec = kw.get("grid_spec")
+        in_specs = kw.get("in_specs")
+        out_specs = kw.get("out_specs")
+        scratch = kw.get("scratch_shapes") or []
+        n_prefetch = 0
+        if grid_spec is not None:
+            in_specs = getattr(grid_spec, "in_specs", in_specs)
+            out_specs = getattr(grid_spec, "out_specs", out_specs)
+            n_prefetch = int(getattr(grid_spec, "num_scalar_prefetch", 0)
+                             or 0)
+            scratch = list(scratch) + list(
+                getattr(grid_spec, "scratch_shapes", []) or [])
+
+        def fake(*operands):
+            records.append({
+                "in_specs": _as_list(in_specs),
+                "in_avals": [(tuple(o.shape), jnp.result_type(o))
+                             for o in operands[n_prefetch:]],
+                "out_specs": _as_list(out_specs),
+                "out_shape": _as_list(out_shape),
+                "scratch": list(scratch),
+            })
+            return jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), out_shape,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+        return fake
+
+    pl_mod.pallas_call = recorder
+    try:
+        yield records
+    finally:
+        pl_mod.pallas_call = real
+
+
+def _as_list(x):
+    if x is None:
+        return []
+    return list(x) if isinstance(x, (list, tuple)) else [x]
+
+
+def _block_bytes(spec, shape, dtype) -> int:
+    """VMEM bytes one BlockSpec stages for an operand of (shape, dtype).
+    block_shape=None means whole-operand (SMEM scalars) unless the spec
+    pins the operand to ANY/HBM, which stages nothing."""
+    itemsize = jnp.dtype(dtype).itemsize
+    block = getattr(spec, "block_shape", None)
+    if block is None:
+        space = str(getattr(spec, "memory_space", "") or "").lower()
+        if "any" in space:
+            return 0
+        return math.prod(shape) * itemsize if shape else itemsize
+    dims = [int(d) if d is not None else 1 for d in block]
+    return math.prod(dims) * itemsize
+
+
+def estimate_vmem_bytes(record: dict) -> int:
+    total = 0
+    for spec, (shape, dtype) in zip(record["in_specs"], record["in_avals"]):
+        total += _block_bytes(spec, shape, dtype)
+    for spec, sds in zip(record["out_specs"], record["out_shape"]):
+        total += _block_bytes(spec, tuple(sds.shape), sds.dtype)
+    for s in record["scratch"]:
+        shape = tuple(getattr(s, "shape", ()) or ())
+        dtype = getattr(s, "dtype", jnp.float32)
+        total += math.prod(shape) * jnp.dtype(dtype).itemsize
+    return total
+
+
+# ------------------------------------------------------- shape/dtype check --
+def _eval_shape(op: Callable, backend: str, args, kwargs):
+    """Abstract-eval op on the case's operands. Array args become tracers;
+    Python scalars stay closed over — they feed static_argnames of the
+    jitted kernel wrappers and must not be traced."""
+    arr_idx = [i for i, a in enumerate(args)
+               if isinstance(a, (np.ndarray, jax.Array))]
+
+    def fn(*arrs):
+        full = list(args)
+        for i, a in zip(arr_idx, arrs):
+            full[i] = a
+        return op(*full, backend=backend, **kwargs)
+
+    return jax.eval_shape(fn, *[args[i] for i in arr_idx])
+
+
+def _tree_sig(tree):
+    leaves = jax.tree.leaves(tree)
+    return [(tuple(l.shape), str(jnp.dtype(l.dtype))) for l in leaves]
+
+
+def check_shapes(report: Report) -> None:
+    from repro.kernels import ops
+    checked = 0
+    for case in OP_CASES:
+        op = getattr(ops, case.name)
+        args, kwargs = case.make()
+        try:
+            ref = _eval_shape(op, "ref", args, kwargs)
+            itp = _eval_shape(op, "interpret", args, kwargs)
+        except Exception as e:                      # noqa: BLE001 - reported
+            report.add(Violation(
+                PASS, "contract-error", _OPS_PATH, 0,
+                f"{case.name}: abstract eval raised {type(e).__name__}: "
+                f"{e}"))
+            continue
+        checked += 1
+        if _tree_sig(ref) != _tree_sig(itp):
+            report.add(Violation(
+                PASS, "shape-dtype-mismatch", _OPS_PATH, 0,
+                f"{case.name}: ref {_tree_sig(ref)} != interpret "
+                f"{_tree_sig(itp)} — kernel out_shape/epilogue drifted "
+                "from the jnp oracle"))
+    report.note(PASS, ops_shape_checked=checked)
+
+
+# ------------------------------------------------------------- VMEM check --
+def check_vmem(report: Report,
+               budget: int = DEFAULT_VMEM_BUDGET) -> None:
+    from repro.kernels import ops
+    usage: dict[str, int] = {}
+    # the jitted wrappers may already hold real traces (check_shapes runs
+    # first) which would skip pallas_call entirely on a cache hit; clear so
+    # every wrapper re-traces under the recorder. Cleared again afterwards
+    # so the fake (recorded) traces never serve a real call.
+    jax.clear_caches()
+    try:
+        _capture_vmem(ops, usage, report)
+    finally:
+        jax.clear_caches()
+    for name, worst in usage.items():
+        if worst > budget:
+            report.add(Violation(
+                PASS, "vmem-budget", _OPS_PATH, 0,
+                f"{name}: estimated VMEM block working set "
+                f"{worst / 2**20:.2f} MiB exceeds the "
+                f"{budget / 2**20:.0f} MiB budget — shrink the BlockSpec "
+                "tiles"))
+    report.note(PASS, vmem_bytes_by_op={k: int(v) for k, v in usage.items()},
+                vmem_budget_bytes=int(budget))
+
+
+def _capture_vmem(ops, usage: dict, report: Report) -> None:
+    for case in OP_CASES:
+        if not case.has_pallas:
+            continue
+        op = getattr(ops, case.name)
+        args, kwargs = case.make()
+        with record_pallas_calls() as records:
+            try:
+                _eval_shape(op, "interpret", args, kwargs)
+            except Exception as e:                  # noqa: BLE001 - reported
+                report.add(Violation(
+                    PASS, "contract-error", _OPS_PATH, 0,
+                    f"{case.name}: pallas capture raised "
+                    f"{type(e).__name__}: {e}"))
+                continue
+        if not records:
+            report.add(Violation(
+                PASS, "contract-error", _OPS_PATH, 0,
+                f"{case.name}: interpret backend issued no pallas_call — "
+                "dispatch is silently falling back to ref"))
+            continue
+        usage[case.name] = max(estimate_vmem_bytes(r) for r in records)
+
+
+# ------------------------------------------------------- padded-tail check --
+def _bits_equal(a, b) -> bool:
+    a = np.ascontiguousarray(np.asarray(a))
+    b = np.ascontiguousarray(np.asarray(b))
+    return a.shape == b.shape and a.tobytes() == b.tobytes()
+
+
+def _poison_affinity_matvec_q(backend: str) -> Optional[str]:
+    """q-side contract: out_i depends only on row i — NaN/Inf rows past the
+    valid prefix must leave the prefix bit-unchanged."""
+    from repro.kernels import ops
+    (q, qi, c, ci, w, k), _ = _case_affinity_matvec()
+    clean = np.concatenate([q, np.zeros((8, q.shape[1]), np.float32)])
+    dirty = clean.copy()
+    dirty[32:36] = np.nan
+    dirty[36:] = np.inf
+    qi_pad = np.concatenate([qi, np.full((8,), -1, np.int32)])
+    base = ops.affinity_matvec(clean, qi_pad, c, ci, w, k, backend=backend)
+    out = ops.affinity_matvec(dirty, qi_pad, c, ci, w, k, backend=backend)
+    if not _bits_equal(np.asarray(base)[:32], np.asarray(out)[:32]):
+        return "valid-row outputs changed when pad q rows were poisoned"
+    return None
+
+
+def _poison_affinity_matvec_c(backend: str) -> Optional[str]:
+    """c-side contract: pad candidate rows with w=0 contribute exactly 0.0
+    whatever (finite) garbage sits in them."""
+    from repro.kernels import ops
+    (q, qi, c, ci, w, k), _ = _case_affinity_matvec()
+    pad = 16
+    w_pad = np.concatenate([w, np.zeros((pad,), np.float32)])
+    ci_pad = np.concatenate([ci, np.full((pad,), 10_000, np.int32)])
+    c_zero = np.concatenate([c, np.zeros((pad, c.shape[1]), np.float32)])
+    c_junk = np.concatenate([c, np.full((pad, c.shape[1]), 1e6, np.float32)])
+    base = ops.affinity_matvec(q, qi, c_zero, ci_pad, w_pad, k,
+                               backend=backend)
+    out = ops.affinity_matvec(q, qi, c_junk, ci_pad, w_pad, k,
+                              backend=backend)
+    if not _bits_equal(base, out):
+        return "w=0 pad candidate rows leaked into the matvec output"
+    return None
+
+
+def _poison_roi_filter(backend: str) -> Optional[str]:
+    from repro.kernels import ops
+    (vc, center, radius, _valid), _ = _case_roi_filter()
+    valid = np.ones((64,), bool)
+    valid[48:] = False
+    dirty = vc.copy()
+    dirty[48:56] = np.nan
+    dirty[56:] = np.inf
+    clean = vc.copy()
+    clean[48:] = 0.0
+    b_d, b_ok, b_neg = ops.roi_filter(clean, center, radius, valid,
+                                      backend=backend)
+    d, ok, neg = ops.roi_filter(dirty, center, radius, valid,
+                                backend=backend)
+    if not (_bits_equal(np.asarray(b_d)[:48], np.asarray(d)[:48])
+            and _bits_equal(np.asarray(b_ok)[:48], np.asarray(ok)[:48])
+            and _bits_equal(np.asarray(b_neg)[:48], np.asarray(neg)[:48])):
+        return "valid-slot outputs changed when invalid vc rows were poisoned"
+    if np.asarray(ok)[48:].any():
+        return "poisoned invalid slots came back valid_out=True"
+    if not (np.asarray(neg)[48:] == -np.inf).all():
+        return "poisoned invalid slots must rank -inf in neg"
+    return None
+
+
+def _poison_assign(backend: str) -> Optional[str]:
+    from repro.kernels import ops
+    (q, sup_v, sup_w, dens, k, thr), _ = _case_assign()
+    valid = np.ones((32,), bool)
+    valid[24:] = False
+    clean = q.copy()
+    clean[24:] = 0.0
+    dirty = q.copy()
+    dirty[24:28] = np.nan
+    dirty[28:] = np.inf
+    bl, bs = ops.assign_clusters(clean, sup_v, sup_w, dens, k, thr,
+                                 valid=valid, backend=backend)
+    lab, sc = ops.assign_clusters(dirty, sup_v, sup_w, dens, k, thr,
+                                  valid=valid, backend=backend)
+    if not (_bits_equal(np.asarray(bl)[:24], np.asarray(lab)[:24])
+            and _bits_equal(np.asarray(bs)[:24], np.asarray(sc)[:24])):
+        return "valid-slot labels/scores changed when pad q rows were poisoned"
+    if not (np.asarray(lab)[24:] == -1).all():
+        return "poisoned pad slots must get label -1 exactly"
+    if not (np.asarray(sc)[24:] == 0.0).all():
+        return "poisoned pad slots must get score 0.0 exactly"
+    return None
+
+
+def _poison_lsh_hash(backend: str) -> Optional[str]:
+    from repro.kernels import ops
+    (x, proj, bias, seg), _ = _case_lsh_hash()
+    clean = np.concatenate([x, np.zeros((8, x.shape[1]), np.float32)])
+    dirty = clean.copy()
+    dirty[32:] = np.nan
+    base = ops.lsh_hash(clean, proj, bias, seg, backend=backend)
+    out = ops.lsh_hash(dirty, proj, bias, seg, backend=backend)
+    if not _bits_equal(np.asarray(base)[:32], np.asarray(out)[:32]):
+        return "valid-row bucket keys changed when pad rows were poisoned"
+    return None
+
+
+def _poison_flash_attention_kv_start(backend: str) -> Optional[str]:
+    """Left-pad contract: kv slots < kv_start[b] are never attended. K pads
+    get NaN (a masked logit must be killed by selection, not arithmetic); V
+    pads get huge-but-finite garbage — the mask zeroes their softmax weight
+    EXACTLY, and 0 * 1e30 is 0 while 0 * NaN would be NaN even for a
+    correct softmax mask, so NaN-V would over-reject."""
+    from repro.kernels import ops
+    (q, k, v), kw = _case_flash_attention()
+    kv_start = np.asarray([0, 8], np.int32)
+    k_dirty, v_dirty = k.copy(), v.copy()
+    k_dirty[1, :, :8, :] = np.nan
+    v_dirty[1, :, :8, :] = 1e30
+    k_clean, v_clean = k.copy(), v.copy()
+    k_clean[1, :, :8, :] = 0.0
+    v_clean[1, :, :8, :] = 0.0
+    base = ops.flash_attention(q, k_clean, v_clean, kv_start=kv_start,
+                               backend=backend, **kw)
+    out = ops.flash_attention(q, k_dirty, v_dirty, kv_start=kv_start,
+                              backend=backend, **kw)
+    if not _bits_equal(base, out):
+        return "poisoned pre-kv_start slots leaked into attention output"
+    return None
+
+
+def _poison_segment_matmul(backend: str) -> Optional[str]:
+    from repro.kernels import ops
+    (msg, seg, n_seg), _ = _case_segment_matmul()
+    pad = 8
+    seg_pad = np.concatenate([seg, np.full((pad,), -1, np.int32)])
+    m_zero = np.concatenate([msg, np.zeros((pad, msg.shape[1]), np.float32)])
+    m_dirty = np.concatenate(
+        [msg, np.full((pad, msg.shape[1]), np.nan, np.float32)])
+    base = ops.segment_matmul(m_zero, seg_pad, n_seg, backend=backend)
+    out = ops.segment_matmul(m_dirty, seg_pad, n_seg, backend=backend)
+    if not _bits_equal(base, out):
+        return "seg_id=-1 pad rows with NaN messages leaked into segments"
+    return None
+
+
+def _poison_embedding_bag(backend: str) -> Optional[str]:
+    """idx<0 pad contract (no float pad to poison): a padded lookup must be
+    bit-identical to the stripped one."""
+    from repro.kernels import ops
+    (table, idx, bags, n_bags), _ = _case_embedding_bag()
+    pad = 8
+    idx_pad = np.concatenate([idx, np.full((pad,), -1, np.int32)])
+    bags_pad = np.concatenate([bags, np.full((pad,), -1, np.int32)])
+    base = ops.embedding_bag(table, idx, bags, n_bags, backend=backend)
+    out = ops.embedding_bag(table, idx_pad, bags_pad, n_bags,
+                            backend=backend)
+    if not _bits_equal(base, out):
+        return "idx=-1 pad entries changed the pooled bags"
+    return None
+
+
+# name -> check(backend) -> error string or None; importable by the tests
+POISON_CHECKS: dict[str, Callable[[str], Optional[str]]] = {
+    "affinity_matvec_q_side": _poison_affinity_matvec_q,
+    "affinity_matvec_c_side": _poison_affinity_matvec_c,
+    "roi_filter": _poison_roi_filter,
+    "assign_clusters": _poison_assign,
+    "lsh_hash": _poison_lsh_hash,
+    "flash_attention_kv_start": _poison_flash_attention_kv_start,
+    "segment_matmul": _poison_segment_matmul,
+    "embedding_bag": _poison_embedding_bag,
+}
+
+POISON_BACKENDS = ("ref", "interpret")
+
+
+def check_padded_tail(report: Report,
+                      backends=POISON_BACKENDS) -> None:
+    ran = 0
+    for name, check in POISON_CHECKS.items():
+        for backend in backends:
+            try:
+                problem = check(backend)
+            except Exception as e:                  # noqa: BLE001 - reported
+                problem = f"raised {type(e).__name__}: {e}"
+            ran += 1
+            if problem:
+                report.add(Violation(
+                    PASS, "padded-tail", _OPS_PATH, 0,
+                    f"{name} [{backend}]: {problem}"))
+    report.note(PASS, poison_scenarios_run=ran)
+
+
+def run(root: str, report: Report,
+        vmem_budget: int = DEFAULT_VMEM_BUDGET) -> None:
+    del root  # runtime pass; operates on the imported package
+    check_shapes(report)
+    check_vmem(report, vmem_budget)
+    check_padded_tail(report)

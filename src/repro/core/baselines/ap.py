@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
+
 
 @functools.partial(jax.jit, static_argnames=("max_iters",))
 def _ap_iterate(s: jax.Array, max_iters: int = 200, damping: float = 0.7):
@@ -47,8 +49,8 @@ def affinity_propagation(points: np.ndarray, preference: float | None = None,
                          max_iters: int = 200, damping: float = 0.7):
     """Returns (labels, exemplars). Similarity = -||vi - vj||^2."""
     pts = jnp.asarray(points, jnp.float32)
-    d2 = jnp.sum((pts[:, None, :] - pts[None, :, :]) ** 2, -1)
-    s = -d2
+    dist = ops.pairwise_distance(pts, pts)
+    s = -(dist * dist)
     off = ~jnp.eye(s.shape[0], dtype=bool)
     pref = jnp.median(s[off]) if preference is None else preference
     s = jnp.where(jnp.eye(s.shape[0], dtype=bool), pref, s)

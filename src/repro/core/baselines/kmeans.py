@@ -8,13 +8,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
+
 
 @functools.partial(jax.jit, static_argnames=("n_clusters", "max_iters"))
 def _lloyd(points: jax.Array, init: jax.Array, n_clusters: int, max_iters: int = 100):
     def body(carry, _):
         centers, _ = carry
-        d2 = jnp.sum((points[:, None, :] - centers[None, :, :]) ** 2, -1)
-        assign = jnp.argmin(d2, axis=1)
+        dist = ops.pairwise_distance(points, centers)
+        assign = jnp.argmin(dist, axis=1)
         onehot = jax.nn.one_hot(assign, n_clusters, dtype=points.dtype)
         counts = jnp.maximum(onehot.sum(0), 1.0)
         centers = (onehot.T @ points) / counts[:, None]
@@ -31,7 +33,7 @@ def kmeans(points: np.ndarray, n_clusters: int, seed: int = 0, max_iters: int = 
     # k-means++ init
     centers = [pts[rng.integers(len(points))]]
     for _ in range(n_clusters - 1):
-        d2 = np.min(np.stack([np.asarray(jnp.sum((pts - c) ** 2, -1)) for c in centers]), 0)
+        d2 = np.min(np.asarray(ops.pairwise_distance(pts, jnp.stack(centers))), 1) ** 2
         prob = d2 / max(d2.sum(), 1e-12)
         centers.append(pts[rng.choice(len(points), p=prob)])
     init = jnp.stack(centers)

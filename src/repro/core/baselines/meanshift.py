@@ -9,12 +9,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
+
 
 @functools.partial(jax.jit, static_argnames=("max_iters",))
 def _shift(points: jax.Array, bandwidth: float, max_iters: int = 50):
     def body(modes, _):
-        d2 = jnp.sum((modes[:, None, :] - points[None, :, :]) ** 2, -1)
-        w = jnp.exp(-d2 / (2.0 * bandwidth**2))
+        dist = ops.pairwise_distance(modes, points)
+        w = jnp.exp(-(dist * dist) / (2.0 * bandwidth**2))
         num = w @ points
         den = jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-12)
         return num / den, None
@@ -29,13 +31,17 @@ def mean_shift(points: np.ndarray, bandwidth: float, merge_radius: float | None 
     modes = np.asarray(_shift(pts, bandwidth, max_iters))
     merge_radius = bandwidth if merge_radius is None else merge_radius
     labels = np.full(len(points), -1, np.int32)
+    # one mode-to-mode distance pass, then a host merge over the matrix
+    mm = np.asarray(ops.pairwise_distance(jnp.asarray(modes), jnp.asarray(modes)))
+    center_idx: list[int] = []
     centers: list[np.ndarray] = []
     for i, m in enumerate(modes):
-        for ci, c in enumerate(centers):
-            if np.linalg.norm(m - c) < merge_radius:
+        for ci, c_i in enumerate(center_idx):
+            if mm[i, c_i] < merge_radius:
                 labels[i] = ci
                 break
         else:
+            center_idx.append(i)
             centers.append(m)
             labels[i] = len(centers) - 1
     # drop tiny clusters to noise

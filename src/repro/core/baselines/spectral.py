@@ -18,6 +18,7 @@ def spectral_clustering(points: np.ndarray, n_clusters: int, k_aff: float,
     lap = dm[:, None] * a * dm[None, :]
     w, v = jnp.linalg.eigh(lap)
     emb = v[:, -n_clusters:]
+    # analysis: allow(private-distance): row-unit normalization of the spectral embedding, not a pairwise distance
     emb = emb / jnp.maximum(jnp.linalg.norm(emb, axis=1, keepdims=True), 1e-12)
     labels, _ = kmeans(np.asarray(emb), n_clusters, seed=seed)
     return labels

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.pipeline import ScratchShards
 from repro.core.source import DataSource, iter_source_chunks
+from repro.kernels import ops
 from repro.lsh.pstable import (LSHParams, ShardedLSHTables, build_lsh_sharded,
                                hash_chunk, make_projections)
 
@@ -97,8 +98,9 @@ def _build_store_impl(points: jax.Array, params: LSHParams, rng: jax.Array,
 
     cnt = jnp.maximum(jnp.sum(valid, axis=1), 1)
     centers = jnp.sum(shards, axis=1) / cnt[:, None].astype(points.dtype)
-    dist = jnp.sqrt(jnp.maximum(
-        jnp.sum((shards - centers[:, None, :]) ** 2, -1), 0.0))
+    dist = jax.vmap(
+        lambda sh, cen: ops.pairwise_distance(sh, cen[None, :])[:, 0])(
+            shards, centers)
     radii = jnp.max(jnp.where(valid, dist, 0.0), axis=1)
 
     tables = build_lsh_sharded(shards, valid, params, rng, backend)

@@ -22,7 +22,7 @@ def bst_batch(step: jax.Array, *, batch: int, seq_len: int, item_vocab: int,
     seq_items = jax.random.randint(ks[0], (batch, seq_len), 0, item_vocab)
     target = jax.random.randint(ks[1], (batch,), 0, item_vocab)
     # correlated clicks: same "category bucket" as the majority of history
-    cat_of = lambda it: ((it.astype(jnp.uint32) * jnp.uint32(2654435761))
+    cat_of = lambda it: ((it.astype(jnp.uint32) * jnp.uint32(2654435761))  # analysis: allow(private-lsh): Knuth multiplicative hash assigns synthetic category ids, not LSH bucket keys
                          % jnp.uint32(cat_vocab)).astype(jnp.int32)
     seq_cats = cat_of(seq_items)
     tgt_cat = cat_of(target)

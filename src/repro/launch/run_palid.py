@@ -146,7 +146,15 @@ def main():
                     help="support capacity override (0 = auto)")
     ap.add_argument("--seeds-per-round", type=int, default=32)
     ap.add_argument("--rounds", type=int, default=64)
+    ap.add_argument("--check", action="store_true",
+                    help="run the static/runtime contract checker instead "
+                         "of a fit — alias for `python -m "
+                         "repro.analysis.check --report CHECK_report.json` "
+                         "(exits non-zero on any unsuppressed violation)")
     args = ap.parse_args()
+    if args.check:
+        from repro.analysis import check as _check
+        raise SystemExit(_check.main(["--report", "CHECK_report.json"]))
     if args.quick:
         args.n, args.d, args.clusters = 600, 8, 4
         args.rounds = min(args.rounds, 8)

@@ -53,11 +53,12 @@ class ShardedLSHTables(NamedTuple):
 PAD_KEY = jnp.uint32(0xFFFFFFFF)
 
 
-_MIX_MUL = jnp.uint32(0x9E3779B1)  # golden-ratio Weyl constant
+_MIX_MUL = jnp.uint32(0x9E3779B1)  # analysis: allow(private-lsh): golden-ratio Weyl constant for the host-side salt fold below — table seeds, not per-point bucket keys (those route through ops.lsh_hash)
 
 
 def _mix_fold(h: jax.Array) -> jax.Array:
     """Fold (.., m) int32 lattice coords into (..,) uint32 bucket keys."""
+    # analysis: allow(private-lsh): FNV offset basis seeds the salt fold — multi-table seed mixing, not the point hash kernel
     acc = jnp.full(h.shape[:-1], jnp.uint32(0x811C9DC5))
     hu = h.astype(jnp.uint32)
     for j in range(h.shape[-1]):
@@ -151,6 +152,7 @@ def hash_queries(q: jax.Array, proj: jax.Array, bias: jax.Array,
     the fused kernel exists to avoid.
     """
     keys = hash_points(q, proj, bias, seg_len, backend)              # (L, Q)
+    # analysis: allow(private-matmul): duplicate salt projection documented above — fusing it into the hash kernel would force a (Q, L, m) HBM round-trip
     z = (jnp.einsum("nd,lmd->lnm", q.astype(jnp.float32),
                     proj.astype(jnp.float32))
          + bias[:, None, :].astype(jnp.float32))

@@ -189,6 +189,7 @@ def forward(params: dict, cfg: GNNConfig, g: GraphBatch) -> jax.Array:
                 h, lambda hs, hd, ef: (hs, ef), src, dst, valid, n, "mean")
             h = jax.nn.relu(L.dense(h, lp["w_self"]) + L.dense(agg, lp["w_nbr"])
                             + lp["b"])
+            # analysis: allow(private-distance): SAGE l2-normalizes activations row-wise, not a pairwise distance
             h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
         else:  # mgn / graphcast
             def edge_fn(hs, hd, ef):

@@ -400,9 +400,16 @@ class ClusterServer:
         tenants, `ValueError` for wrong dimensionality."""
         with self._lock:
             key = self._resolve(tenant, version)
-            vec = self._tenants[key].check_query(query)
+            tn = self._tenants[key]
+        # validate/convert OUTSIDE the lock: check_query does a host array
+        # copy (np.asarray), and doing that under the registry lock stalls
+        # every other submitter and the worker's batch pop for the duration
+        vec = tn.check_query(query)
+        with self._lock:
             if self._stopping:
                 raise RuntimeError("server is closed")
+            if key not in self._tenants:
+                raise KeyError(f"tenant {key} was removed")
             if self._pending >= self.queue_limit:
                 if self.policy == "reject":
                     self.stats.add("rejected")
@@ -442,8 +449,11 @@ class ClusterServer:
                                         name="cluster-serve", daemon=True)
         self._worker.start()
 
-    def _next_batch(self) -> Optional[list[_Request]]:
-        """Pop up to batch_slots requests of ONE tenant (round-robin).
+    def _next_batch(self) -> Optional[tuple[Tenant, list[_Request]]]:
+        """Pop up to batch_slots requests of ONE tenant (round-robin) and
+        snapshot that tenant in the same critical section — the worker
+        serves the snapshot, so a concurrent remove_tenant/swap_tenant can
+        never yank the registry entry between pop and compute.
         Must hold the lock."""
         for _ in range(len(self._rr)):
             key = self._rr[0]
@@ -452,9 +462,12 @@ class ClusterServer:
             if q:
                 batch = [q.popleft()
                          for _ in range(min(len(q), self.batch_slots))]
-                self._pending -= len(batch)
+                self._pending -= len(batch)  # analysis: allow(unlocked-mutation): _next_batch's contract is "caller holds self._lock" (see docstring + the lock-probe regression test)
                 self._space.notify_all()
-                return batch
+                # same critical section as the pop: remove_tenant drops the
+                # queue and the registry entry together under this lock, so
+                # a non-empty queue implies the tenant is still registered
+                return self._tenants[key], batch
         return None
 
     def _serve_loop(self) -> None:
@@ -465,13 +478,16 @@ class ClusterServer:
                     self._work.wait(0.1)
                 if self._pending == 0 and self._stopping:
                     return
-                batch = self._next_batch()
+                popped = self._next_batch()
             self.stats.add("wait_s", time.perf_counter() - t_idle)
-            if batch:
-                self._serve_batch(batch)
+            if popped:
+                self._serve_batch(*popped)
 
-    def _serve_batch(self, batch: list[_Request]) -> None:
-        tenant = self._tenants.get(batch[0].tenant_key)
+    def _serve_batch(self, tenant: Tenant, batch: list[_Request]) -> None:
+        """Serve one popped batch against its snapshotted Tenant. The
+        snapshot (not the live registry) is what gets served: every label in
+        the batch comes from ONE (name, version) clustering even if a swap
+        or removal lands mid-compute."""
         t_pack = time.perf_counter()
         live: list[tuple[int, _Request]] = []
         for r in batch:
@@ -480,11 +496,6 @@ class ClusterServer:
                 live.append((len(live), r))
             else:
                 self.stats.add("cancelled")
-        if tenant is None:
-            for _, r in live:
-                r.future.set_exception(KeyError(
-                    f"tenant {batch[0].tenant_key} was removed"))
-            return
         q, valid = tenant.staging(self.batch_slots)
         q[:] = 0.0
         valid[:] = False

@@ -1,0 +1,263 @@
+"""Self-tests for the repro.analysis checker: every pass must flag its
+deliberately-bad fixture AND stay clean on the real tree (the CI gate runs
+`python -m repro.analysis.check` on the latter)."""
+
+import ast
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import check, concurrency, dispatch, jitboundary
+from repro.analysis.pragmas import PragmaCache, PragmaIndex
+from repro.analysis.report import Report
+
+ROOT = check.find_repo_root(os.path.dirname(__file__))
+
+
+def _violations(pass_mod, rel, src):
+    src = textwrap.dedent(src)
+    return pass_mod.check_source(rel, src, ast.parse(src),
+                                 PragmaIndex(rel, src))
+
+
+def _rules(vs, active_only=True):
+    return sorted({v.rule for v in vs if not (active_only and v.suppressed)})
+
+
+# ------------------------------------------------------------- dispatch ----
+def test_dispatch_flags_private_matmul():
+    vs = _violations(dispatch, "src/repro/core/bad.py", """
+        import jax.numpy as jnp
+        def f(a, b):
+            return jnp.einsum("id,jd->ij", a, b)
+        """)
+    assert _rules(vs) == ["private-matmul"]
+
+
+def test_dispatch_matmul_scope_excludes_model_stack():
+    vs = _violations(dispatch, "src/repro/models/ok.py", """
+        import jax.numpy as jnp
+        def f(a, b):
+            return jnp.einsum("id,jd->ij", a, b)
+        """)
+    assert _rules(vs) == []
+
+
+def test_dispatch_flags_distance_expansion_and_norm():
+    vs = _violations(dispatch, "examples/bad.py", """
+        import jax.numpy as jnp
+        def f(a, b):
+            d2 = jnp.sum((a[:, None, :] - b[None, :, :]) ** 2, -1)
+            n = jnp.linalg.norm(a - b)
+            return d2, n
+        """)
+    assert _rules(vs) == ["private-distance"]
+    assert len(vs) == 2
+
+
+def test_dispatch_flags_hand_rolled_lsh():
+    vs = _violations(dispatch, "src/repro/lsh/bad.py", """
+        import jax.numpy as jnp
+        MUL = 0x9E3779B1
+        def bucket(x, seg):
+            return jnp.floor(x / seg)
+        """)
+    assert _rules(vs) == ["private-lsh"]
+    assert len(vs) == 2          # the constant AND the floor(div)
+
+
+def test_pragma_requires_reason():
+    src = textwrap.dedent("""
+        import jax.numpy as jnp
+        def f(a, b):
+            # analysis: allow(private-matmul)
+            return jnp.dot(a, b)
+        """)
+    idx = PragmaIndex("src/repro/core/bad.py", src)
+    assert [v.rule for v in idx.errors] == ["pragma-missing-reason"]
+    vs = dispatch.check_source("src/repro/core/bad.py", src,
+                               ast.parse(src), idx)
+    assert _rules(vs) == ["private-matmul"]     # reasonless pragma is inert
+
+
+def test_pragma_with_reason_suppresses_but_stays_reported():
+    vs = _violations(dispatch, "src/repro/core/ok.py", """
+        import jax.numpy as jnp
+        def f(a, b):
+            # analysis: allow(private-matmul): documented comparison arm
+            return jnp.dot(a, b)
+        """)
+    assert _rules(vs) == []
+    assert [v.reason for v in vs if v.suppressed] == [
+        "documented comparison arm"]
+
+
+# ---------------------------------------------------------- jitboundary ----
+def test_jitboundary_flags_host_sync_in_jit():
+    vs = _violations(jitboundary, "src/repro/core/bad.py", """
+        import jax
+        import numpy as np
+        @jax.jit
+        def f(x):
+            return np.asarray(x) + float(x[0]) + x.item()
+        """)
+    assert _rules(vs) == ["host-sync-in-jit"]
+    assert len(vs) == 3
+
+
+def test_jitboundary_ignores_static_params():
+    vs = _violations(jitboundary, "src/repro/core/ok.py", """
+        import functools
+        import jax
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def f(x, n):
+            return x * float(n)
+        """)
+    assert _rules(vs) == []
+
+
+def test_jitboundary_flags_scalar_into_static_arg():
+    vs = _violations(jitboundary, "src/repro/core/bad.py", """
+        import functools
+        import jax
+        @functools.partial(jax.jit, static_argnames=("k",))
+        def f(x, k):
+            return x * k
+        def driver(x, kv):
+            return f(x, k=float(kv)) + f(x, int(kv.sum()))
+        """)
+    assert _rules(vs) == ["scalar-static-arg"]
+    assert len(vs) == 2          # keyword and positional call sites
+
+
+# ---------------------------------------------------------- concurrency ----
+def test_concurrency_flags_transfer_and_future_under_lock():
+    vs = _violations(concurrency, "src/repro/serve/bad.py", """
+        import threading
+        import numpy as np
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+            def convert(self, q):
+                return np.asarray(q)
+            def submit(self, q, fut):
+                with self._lock:
+                    vec = self.convert(q)      # heavy helper under lock
+                    arr = np.asarray(q)        # direct transfer under lock
+                    fut.set_result(1)          # callback under lock
+                return vec, arr
+        """)
+    assert _rules(vs) == ["future-under-lock", "transfer-under-lock"]
+    assert len([v for v in vs if v.rule == "transfer-under-lock"]) == 2
+
+
+def test_concurrency_flags_unlocked_mutation():
+    vs = _violations(concurrency, "src/repro/serve/bad.py", """
+        import threading
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0
+            def hit(self):
+                self.n += 1
+            def safe(self):
+                with self._lock:
+                    self.n += 1
+        """)
+    assert _rules(vs) == ["unlocked-mutation"]
+    assert len(vs) == 1          # __init__ stores and locked += are legal
+
+
+def test_concurrency_flags_lock_order_inversion():
+    vs = _violations(concurrency, "src/repro/core/bad.py", """
+        def a(s):
+            with s._lock:
+                with s._cache_lock:
+                    pass
+        def b(s):
+            with s._cache_lock:
+                with s._lock:
+                    pass
+        """)
+    assert "lock-order" in _rules(vs)
+
+
+# ------------------------------------------------------- real-tree gate ----
+def test_source_passes_clean_on_repo():
+    """The gate invariant: zero unsuppressed source-pass violations on the
+    tree as committed (suppressed ones must all carry reasons)."""
+    report = check.run_checks(ROOT, passes=check.SOURCE_PASSES)
+    assert report.ok, "\n" + report.summary()
+    assert all(v.reason for v in report.suppressed)
+
+
+def test_contract_shapes_clean_on_repo():
+    from repro.analysis import contracts
+    report = Report(ROOT)
+    contracts.check_shapes(report)
+    assert report.ok, "\n" + report.summary()
+    assert report.pass_info["contracts"]["ops_shape_checked"] >= 9
+
+
+def test_vmem_estimator_reads_blockspecs():
+    from repro.analysis import contracts
+    report = Report(ROOT)
+    contracts.check_vmem(report, budget=contracts.DEFAULT_VMEM_BUDGET)
+    assert report.ok, "\n" + report.summary()
+    usage = report.pass_info["contracts"]["vmem_bytes_by_op"]
+    assert set(usage) == {c.name for c in contracts.OP_CASES if c.has_pallas}
+    assert all(0 < b < contracts.DEFAULT_VMEM_BUDGET for b in usage.values())
+
+
+def test_vmem_budget_violation_fires():
+    from repro.analysis import contracts
+    report = Report(ROOT)
+    contracts.check_vmem(report, budget=1)       # nothing fits 1 byte
+    rules = {v.rule for v in report.violations}
+    assert rules == {"vmem-budget"}
+
+
+# ------------------------------------------------------------------ CLI ----
+def _bad_tree(tmp_path):
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    (pkg / "bad.py").write_text(textwrap.dedent("""
+        import jax.numpy as jnp
+        def f(a, b):
+            return jnp.dot(a, b)
+        """))
+    return tmp_path
+
+
+def test_cli_exits_nonzero_on_bad_tree_and_writes_report(tmp_path):
+    bad = _bad_tree(tmp_path)
+    out = tmp_path / "CHECK_report.json"
+    rc = check.main(["--root", str(bad), "--no-runtime",
+                     "--report", str(out)])
+    assert rc == 1
+    data = json.loads(out.read_text())
+    assert data["ok"] is False
+    assert any(v["rule"] == "private-matmul" for v in data["violations"])
+
+
+def test_cli_exits_zero_on_repo(tmp_path):
+    out = tmp_path / "report.json"
+    rc = check.main(["--root", ROOT, "--no-runtime", "--report", str(out)])
+    assert rc == 0
+    assert json.loads(out.read_text())["ok"] is True
+
+
+def test_cli_rejects_unknown_pass():
+    with pytest.raises(SystemExit):
+        check.main(["--only", "nonsense"])
+
+
+def test_pragma_cache_reports_malformed_once():
+    report = Report(ROOT)
+    cache = PragmaCache(report)
+    src = "x = 1  # analysis: allow(private-matmul)\n"
+    cache.get("a.py", src)
+    cache.get("a.py", src)
+    assert len(report.violations) == 1

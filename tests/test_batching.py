@@ -196,3 +196,110 @@ def test_stats_and_occupancy(fitted):
     assert s["batches"] == 2 and s["slots_filled"] == 8
     assert server.stats.occupancy(4) == 1.0           # two full batches
     assert "occupancy" in server.stats.report(batch_slots=4)
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline regressions (found by `python -m repro.analysis.check`)
+# ---------------------------------------------------------------------------
+
+def test_submit_converts_query_outside_lock(fitted):
+    """check_query does a host array copy (np.asarray) — running it under
+    the registry lock stalls every other submitter and the worker's batch
+    pop for the duration. A probe inside check_query must be able to grab
+    the (non-reentrant) server lock, proving submit released it first."""
+    _, res = fitted
+    server = ClusterServer(batch_slots=4, queue_limit=64, start=False)
+    server.add_tenant("t", res)
+    tn = server._tenants[("t", 0)]
+    orig, probes = tn.check_query, []
+
+    def probing(q):
+        free = server._lock.acquire(timeout=0.2)
+        if free:
+            server._lock.release()
+        probes.append(free)
+        return orig(q)
+
+    tn.check_query = probing
+    try:
+        server.submit(np.zeros(8, np.float32), tenant="t")
+    finally:
+        server.close(drain=False)
+    assert probes == [True], "submit held the lock through check_query"
+
+
+def test_popped_batch_survives_tenant_removal(fitted):
+    """_next_batch snapshots the Tenant atomically with the pop, so a batch
+    already handed to the worker serves real labels even when the tenant is
+    removed before compute starts (the worker-vs-remove_tenant race that
+    previously read the registry unlocked in _serve_batch)."""
+    spec, res = fitted
+    members = spec.points[res.labels >= 0][:4].astype(np.float32)
+    want = res.predict(members)
+    server = ClusterServer(batch_slots=4, queue_limit=64, start=False)
+    server.add_tenant("t", res)
+    futs = [server.submit(q, tenant="t") for q in members]
+    with server._lock:
+        popped = server._next_batch()
+    assert popped is not None
+    tenant, batch = popped          # pre-snapshot API returned a bare list
+    server.remove_tenant("t", 0)
+    server._serve_batch(tenant, batch)
+    got = np.asarray([f.result(timeout=5) for f in futs], np.int32)
+    np.testing.assert_array_equal(got, np.asarray(want, np.int32))
+    server.close(drain=False)
+
+
+def test_submit_hammer_during_swap_no_mixed_versions(fitted):
+    """Hammer submit while swap_tenant installs a permuted clustering.
+    Every request pins its version at submit time and every batch serves
+    ONE snapshot, so in submit order the labels must be all-v0 then all-v1
+    — a v0 label after a v1 label would mean a torn/mixed-version batch."""
+    spec, res = fitted
+    rev = res._replace(densities=np.ascontiguousarray(res.densities[::-1]),
+                       support_idx=np.ascontiguousarray(res.support_idx[::-1]),
+                       support_w=np.ascontiguousarray(res.support_w[::-1]),
+                       support_v=np.ascontiguousarray(res.support_v[::-1]))
+    members = spec.points[res.labels >= 0].astype(np.float32)
+    v0 = res.predict(members)
+    v1 = rev.predict(members)
+    keep = v0 != v1                 # queries whose label names the version
+    members, v0, v1 = members[keep], v0[keep], v1[keep]
+    assert len(members) >= 4, "need label-distinguishing queries"
+
+    n_requests = 120
+    with ClusterServer(batch_slots=4, queue_limit=256) as server:
+        server.add_tenant("t", res)
+        futs = []
+        swapped = threading.Event()
+
+        def hammer():
+            for i in range(n_requests):
+                futs.append((i % len(members),
+                             server.submit(members[i % len(members)],
+                                           tenant="t")))
+                if i == n_requests // 3:
+                    swapped.wait(5.0)   # guarantee traffic on both sides
+
+        t = threading.Thread(target=hammer)
+        t.start()
+        time.sleep(0.02)
+        server.swap_tenant("t", rev)
+        swapped.set()
+        t.join(30.0)
+        assert not t.is_alive()
+        versions = []
+        for qi, f in futs:
+            label = f.result(timeout=30)
+            if label == v0[qi]:
+                versions.append(0)
+            elif label == v1[qi]:
+                versions.append(1)
+            else:
+                raise AssertionError(
+                    f"label {label} matches neither tenant version "
+                    f"({v0[qi]} / {v1[qi]}) — mixed-version batch")
+        assert versions == sorted(versions), (
+            "v0 label served after a v1 label: a batch mixed snapshots")
+        assert versions[0] == 0 and versions[-1] == 1, (
+            "swap produced no version transition under load")

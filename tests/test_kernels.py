@@ -381,3 +381,21 @@ def test_lsh_hash_dtype_bit_parity(dtype):
     ).astype(np.uint32)
     np.testing.assert_array_equal(via_pstable, want)
     np.testing.assert_array_equal(via_kernel, want)
+
+
+# ----------------------------------------- padded-tail poison contracts ----
+# The scenarios live in repro.analysis.contracts (the CI gate runs them as
+# `python -m repro.analysis.check`); parametrizing over the same registry
+# here keeps the pytest tier and the gate bit-for-bit in sync.
+from repro.analysis.contracts import POISON_BACKENDS, POISON_CHECKS
+
+
+@pytest.mark.parametrize("backend", POISON_BACKENDS)
+@pytest.mark.parametrize("scenario", sorted(POISON_CHECKS))
+def test_padded_tail_poison_contract(scenario, backend):
+    """NaN/Inf-poison the pad regions of every fused kernel and assert the
+    valid-slot outputs are BIT-identical to a zero-padded baseline (and the
+    pad-slot outputs honor their documented sentinel: label -1, score 0,
+    valid_out False, neg -inf, ...)."""
+    problem = POISON_CHECKS[scenario](backend)
+    assert problem is None, f"{scenario} [{backend}]: {problem}"
