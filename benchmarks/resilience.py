@@ -1,0 +1,151 @@
+"""Clean-path cost of the resilience layer + time-to-recover.
+
+PR 9's failure story (DESIGN.md §11) must be near-free when nothing fails:
+the retry wrap adds one Python frame per source read and the checksum tiers
+add one crc32 per scratch/cache touch. This benchmark measures exactly that
+— the SAME on-disk memmap fit twice with the SAME config and PRNG key:
+
+  * raw       — retry_policy=None (no source wrap), checksum verification
+                off on scratch reads and cache probes;
+  * resilient — the production default: DEFAULT_RETRY wrapping every source
+                read, crc32-verified scratch slabs and cache entries.
+
+The acceptance bar is clean-path overhead < 5% (or under an absolute noise
+floor for CI-sized runs, where sub-second walls make percentages jumpy).
+Labels are asserted bit-identical across arms — resilience is observability
++ recovery, never semantics.
+
+The second half measures time-to-recover: a fit crashed at its midpoint
+round (with round-level checkpoints on) is resumed, and the resume wall is
+compared against the uninterrupted fit — the saved rounds should be
+(roughly) bought back. Results land in BENCH_resilience.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.core.alid import ALIDConfig, EngineSpec
+from repro.core.engine import fit, make_engine
+from repro.core.resilience import DEFAULT_RETRY
+from repro.core.source import MemmapSource
+from repro.data import auto_lsh_params, make_blobs_with_noise
+
+# CI-sized walls are fractions of a second: a few ms of jitter swamps a 5%
+# bar, so overhead also passes under this absolute floor
+ABS_NOISE_FLOOR_S = 0.25
+
+
+def _run_arm(path: str, cfg: ALIDConfig, espec: EngineSpec,
+             resilient: bool) -> dict:
+    source = MemmapSource(path)
+    engine = make_engine(espec)
+    engine.verify_checksums = resilient
+    try:
+        t0 = time.perf_counter()
+        res = fit(source, cfg._replace(spec=espec), jax.random.PRNGKey(0),
+                  engine=engine,
+                  retry_policy=DEFAULT_RETRY if resilient else None)
+        wall = time.perf_counter() - t0
+        stages = engine.stats.snapshot()
+    finally:
+        engine.close()
+    return {"wall_s": wall, "n_rounds": int(res.n_rounds),
+            "n_clusters": int(res.n_clusters),
+            "scratch_reads": stages["scratch_reads"],
+            "cache_hits": stages["cache_hits"],
+            "read_retries": stages["read_retries"],
+            "labels": res.labels}
+
+
+def main(quick: bool = True) -> dict:
+    if quick:
+        n_clusters, cluster_size, n_noise, d = 6, 40, 5760, 48
+        n_shards, seeds, rounds = 4, 4, 6
+    else:
+        n_clusters, cluster_size, n_noise, d = 12, 40, 159520, 128
+        n_shards, seeds, rounds = 4, 4, 20
+    spec = make_blobs_with_noise(n_clusters=n_clusters,
+                                 cluster_size=cluster_size, n_noise=n_noise,
+                                 d=d, seed=2)
+    n = spec.points.shape[0]
+    lshp = auto_lsh_params(spec.points, probe=8)
+    cfg = ALIDConfig(a_cap=64, delta=64, t_lid=16, c_outer=8, lsh=lshp,
+                     seeds_per_round=seeds, max_rounds=rounds)
+    espec = EngineSpec(engine="streamed", n_shards=n_shards)
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "points.npy")
+        np.save(path, spec.points)
+        # warmup runs the FULL round schedule once: later peel rounds hit
+        # shapes round 1 never sees, and an arm that pays their compiles
+        # would swamp the few-percent overhead this benchmark measures
+        _run_arm(path, cfg, espec, resilient=False)
+        raw = _run_arm(path, cfg, espec, resilient=False)
+        res = _run_arm(path, cfg, espec, resilient=True)
+        identical = bool(np.array_equal(raw.pop("labels"),
+                                        res.pop("labels")))
+
+        # ---- time-to-recover: crash at the midpoint round, then resume
+        ckpt = os.path.join(td, "ckpt")
+        full = _run_arm(path, cfg, espec, resilient=True)
+        full_labels = full.pop("labels")
+        crash_round = max(2, full["n_rounds"] // 2)
+        try:
+            fit(MemmapSource(path), cfg._replace(spec=espec),
+                jax.random.PRNGKey(0), checkpoint_dir=ckpt,
+                crash_at_round=crash_round)
+            crashed = False
+        except RuntimeError:
+            crashed = True
+        t0 = time.perf_counter()
+        resumed = fit(MemmapSource(path), cfg._replace(spec=espec),
+                      jax.random.PRNGKey(0), checkpoint_dir=ckpt,
+                      resume=True)
+        recover_s = time.perf_counter() - t0
+        resume_identical = bool(resumed.n_rounds == full["n_rounds"]
+                                and np.array_equal(resumed.labels,
+                                                   full_labels))
+
+    overhead_pct = (res["wall_s"] - raw["wall_s"]) / raw["wall_s"] * 100.0
+    overhead_ok = (overhead_pct < 5.0
+                   or res["wall_s"] - raw["wall_s"] < ABS_NOISE_FLOOR_S)
+    out = {
+        "n": n, "d": d, "n_shards": n_shards, "quick": quick,
+        "raw": raw,
+        "resilient": res,
+        "labels_identical": identical,
+        "overhead_pct": overhead_pct,
+        "overhead_ok": overhead_ok,
+        "crash_round": crash_round, "crashed": crashed,
+        "recover_s": recover_s,
+        "full_wall_s": full["wall_s"],
+        "recover_frac": recover_s / full["wall_s"],
+        "resume_identical": resume_identical,
+    }
+    csv_line("resilience/raw", raw["wall_s"] * 1e6,
+             f"rounds={raw['n_rounds']}")
+    csv_line("resilience/resilient", res["wall_s"] * 1e6,
+             f"overhead_pct={overhead_pct:.2f};ok={overhead_ok};"
+             f"labels_identical={identical}")
+    csv_line("resilience/recover", recover_s * 1e6,
+             f"crash_round={crash_round};frac={out['recover_frac']:.2f}")
+    with open("BENCH_resilience.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    main(quick=not args.full)

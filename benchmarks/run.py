@@ -22,7 +22,7 @@ def main() -> None:
 
     from benchmarks import (fig6_sparsity, fig7_scalability, fig11_noise,
                             kernel_bench, mem_footprint, online_updates,
-                            serving_latency, streamed_throughput,
+                            resilience, serving_latency, streamed_throughput,
                             table2_speedup)
     for name, mod in [("fig6", fig6_sparsity), ("fig7", fig7_scalability),
                       ("table2", table2_speedup), ("fig11", fig11_noise),
@@ -30,6 +30,7 @@ def main() -> None:
                       ("streamed_tput", streamed_throughput),
                       ("serving", serving_latency),
                       ("online", online_updates),
+                      ("resilience", resilience),
                       ("kernels", kernel_bench)]:
         try:
             mod.main(quick=quick)

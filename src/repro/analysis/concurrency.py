@@ -29,6 +29,22 @@ lock-order            two locks acquired nested in BOTH orders somewhere in
                       the textbook deadlock shape. Lock identity is the
                       unparsed `with` expression.
 
+Tree-wide rules (every file `astutil.iter_source_files` yields, not just
+the lock-owning modules — a thread joined without a bound or a hot retry
+loop can hide anywhere):
+
+join-no-timeout       `x.join()` with no arguments — a `Thread.join()`
+                      that can block forever on a wedged thread. Pass a
+                      timeout and handle the still-alive case (see
+                      `ShardPipeline.stream`'s bounded reader join).
+retry-no-backoff      a retry loop that spins with no delay: a `while`
+                      whose body swallows exceptions (handler neither
+                      re-raises nor leaves the loop) with no sleep/wait
+                      call anywhere in the loop, or a `for <attempt|retry>
+                      in range(...)` retry loop with a try but no
+                      sleep/wait. Use `core.resilience.RetryPolicy` —
+                      bounded attempts plus seeded exponential backoff.
+
 The pragma escape hatch applies (`# analysis: allow(rule): reason`) — e.g.
 a helper documented as "caller must hold the lock".
 """
@@ -173,6 +189,100 @@ def _classes_with_lock(tree: ast.AST) -> set[str]:
     return out
 
 
+# ------------------------------------------------------- tree-wide rules --
+RETRY_VAR_HINTS = ("attempt", "retry", "retries", "tries", "trial")
+SLEEP_HINTS = ("sleep", "wait", "backoff")
+
+
+def _has_backoff_call(loop: ast.AST) -> bool:
+    """Any call in the loop whose name smells like a delay: time.sleep,
+    cond.wait, an injected `sleep(...)` parameter, `policy.backoff()`."""
+    for node in ast.walk(loop):
+        if isinstance(node, ast.Call):
+            name = astutil.dotted_name(node.func)
+            if name is None:
+                continue
+            last = name.rsplit(".", 1)[-1].lower()
+            if any(h in last for h in SLEEP_HINTS):
+                return True
+    return False
+
+
+def _handler_leaves_loop(handler: ast.ExceptHandler) -> bool:
+    """True if the except body always or conditionally escapes the retry
+    loop (re-raise, return, break) — then the loop is bounded by the
+    handler, not pure spin."""
+    return any(isinstance(n, (ast.Raise, ast.Return, ast.Break))
+               for n in ast.walk(handler))
+
+
+def _is_retry_for(node: ast.For) -> bool:
+    if not (isinstance(node.iter, ast.Call)
+            and astutil.dotted_name(node.iter.func) == "range"):
+        return False
+    target = node.target
+    if not isinstance(target, ast.Name):
+        return False
+    name = target.id.lower()
+    return any(h in name for h in RETRY_VAR_HINTS)
+
+
+class _TreeScanner(ast.NodeVisitor):
+    """join-no-timeout + retry-no-backoff over one module."""
+
+    def __init__(self, rel: str, pragmas):
+        self.rel = rel
+        self.pragmas = pragmas
+        self.out: list[Violation] = []
+
+    def emit(self, rule: str, line: int, msg: str) -> None:
+        self.out.append(self.pragmas.apply(
+            Violation(PASS, rule, self.rel, line, msg)))
+
+    def visit_Call(self, node: ast.Call) -> None:
+        # zero-arg .join() can only be a Thread/Process-style join (the
+        # str.join/os.path.join signatures require arguments) — and a
+        # zero-arg thread join blocks forever on a wedged thread
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "join"
+                and not node.args and not node.keywords):
+            self.emit("join-no-timeout", node.lineno,
+                      f"{astutil.dotted_name(node.func) or '.join'}() has "
+                      "no timeout — it blocks forever if the thread is "
+                      "wedged; join with a bound and handle is_alive()")
+        self.generic_visit(node)
+
+    def _check_retry_loop(self, node) -> None:
+        swallows = False
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Try):
+                for h in sub.handlers:
+                    if not _handler_leaves_loop(h):
+                        swallows = True
+        if swallows and not _has_backoff_call(node):
+            self.emit("retry-no-backoff", node.lineno,
+                      "retry loop swallows exceptions with no sleep/wait "
+                      "between attempts — hot-spins on a persistent "
+                      "failure; use core.resilience.RetryPolicy (bounded "
+                      "attempts + seeded exponential backoff)")
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_retry_loop(node)
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For) -> None:
+        if _is_retry_for(node):
+            self._check_retry_loop(node)
+        self.generic_visit(node)
+
+
+def check_tree_rules(rel: str, src: str, tree: ast.AST,
+                     pragmas) -> list[Violation]:
+    scanner = _TreeScanner(rel, pragmas)
+    scanner.visit(tree)
+    return scanner.out
+
+
 def check_source(rel: str, src: str, tree: ast.AST,
                  pragmas) -> list[Violation]:
     imports = astutil.ImportTable(tree)
@@ -209,4 +319,15 @@ def run(root: str, report: Report, pragma_cache,
         n += 1
         pragmas = pragma_cache.get(rel, src)
         report.extend(check_source(rel, src, tree, pragmas))
-    report.note(PASS, modules_scanned=n)
+    # join-no-timeout / retry-no-backoff apply everywhere, not just the
+    # lock-owning modules
+    tree_n = 0
+    for rel in astutil.iter_source_files(root):
+        try:
+            src, tree = astutil.parse_file(root, rel)
+        except (OSError, SyntaxError):
+            continue
+        tree_n += 1
+        pragmas = pragma_cache.get(rel, src)
+        report.extend(check_tree_rules(rel, src, tree, pragmas))
+    report.note(PASS, modules_scanned=n, tree_modules_scanned=tree_n)

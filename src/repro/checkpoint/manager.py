@@ -25,6 +25,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -32,6 +33,18 @@ import jax.numpy as jnp
 import numpy as np
 
 _SEP = "//"
+
+
+class CheckpointCorruption(RuntimeError):
+    """A checkpoint leaf failed its recorded crc32 on restore — the bytes on
+    disk are not the bytes that were saved. Callers fall back to an earlier
+    step (see `engine._restore_fit_checkpoint`) rather than silently
+    resuming from poisoned state."""
+
+
+def _crc32(arr: np.ndarray) -> int:
+    # reshape(-1) first: a 0-d leaf cannot be viewed at a different itemsize
+    return zlib.crc32(np.ascontiguousarray(arr).reshape(-1).view(np.uint8))
 
 
 def _flatten(tree: Any) -> dict[str, Any]:
@@ -58,13 +71,15 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
     for key, leaf in flat.items():
         arr = np.asarray(jax.device_get(leaf))
         if arr.dtype == jnp.bfloat16:
-            manifest["leaves"][key] = {"dtype": "bfloat16",
-                                       "shape": list(arr.shape)}
-            arrays[key] = arr.view(np.uint16)
+            arr = arr.view(np.uint16)
+            info = {"dtype": "bfloat16", "shape": list(arr.shape)}
         else:
-            manifest["leaves"][key] = {"dtype": str(arr.dtype),
-                                       "shape": list(arr.shape)}
-            arrays[key] = arr
+            info = {"dtype": str(arr.dtype), "shape": list(arr.shape)}
+        # integrity: crc32 of the bytes as SAVED (post bf16->uint16 view),
+        # verified on restore before any bit of the leaf is trusted
+        info["crc32"] = _crc32(arr)
+        manifest["leaves"][key] = info
+        arrays[key] = arr
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -104,7 +119,18 @@ def load_manifest(ckpt_dir: str, step: int) -> dict:
         return json.load(f)
 
 
-def restore_checkpoint_tree(ckpt_dir: str, step: int
+def _verify_leaf(key: str, info: dict, arr: np.ndarray, where: str) -> None:
+    """Check a loaded leaf against its manifest crc32 (pre bf16 view — the
+    bytes as saved). Checkpoints written before crcs existed simply lack
+    the field and skip verification."""
+    want = info.get("crc32")
+    if want is not None and _crc32(arr) != want:
+        raise CheckpointCorruption(
+            f"leaf {key!r} in {where} failed its crc32 — the checkpoint "
+            "bytes on disk are corrupt")
+
+
+def restore_checkpoint_tree(ckpt_dir: str, step: int, verify: bool = True
                             ) -> tuple[dict, dict[str, np.ndarray]]:
     """Structure-free restore: shapes and dtypes come from the MANIFEST, not
     a `like` template. `restore_checkpoint` asserts every leaf matches the
@@ -113,13 +139,17 @@ def restore_checkpoint_tree(ckpt_dir: str, step: int
     and shrinks between epochs, so there is nothing valid to template from.
     Returns (manifest, {flat_key: host array}); nesting (if any) stays
     encoded in the `//`-joined keys, which for the flat dict trees the
-    online subsystem saves are simply the dict keys."""
+    online subsystem saves are simply the dict keys. `verify=True` checks
+    every leaf against its manifest crc32 and raises `CheckpointCorruption`
+    on mismatch."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     manifest = load_manifest(ckpt_dir, step)
     out: dict[str, np.ndarray] = {}
     with np.load(os.path.join(path, "arrays.npz")) as data:
         for key, info in manifest["leaves"].items():
             arr = np.array(data[key])
+            if verify:
+                _verify_leaf(key, info, arr, path)
             if info["dtype"] == "bfloat16":
                 arr = arr.view(jnp.bfloat16)
             out[key] = arr
@@ -127,10 +157,12 @@ def restore_checkpoint_tree(ckpt_dir: str, step: int
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, like: Any,
-                       shardings: Any = None) -> tuple[int, Any]:
+                       shardings: Any = None,
+                       verify: bool = True) -> tuple[int, Any]:
     """Restore into the structure of `like` (abstract or concrete tree).
     `shardings`: optional matching tree of jax.sharding.Sharding — arrays are
-    device_put under them (elastic reshard happens here)."""
+    device_put under them (elastic reshard happens here). `verify=True`
+    checks each leaf's manifest crc32 (`CheckpointCorruption` on mismatch)."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -146,6 +178,8 @@ def restore_checkpoint(ckpt_dir: str, step: int, like: Any,
                         for p in kpath)
         info = manifest["leaves"][key]
         arr = data[key]
+        if verify:
+            _verify_leaf(key, info, arr, path)
         if info["dtype"] == "bfloat16":
             arr = arr.view(jnp.bfloat16)
         assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)

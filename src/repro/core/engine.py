@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import functools
 import time
+import warnings
 from typing import Optional, Protocol
 
 import jax
@@ -60,6 +61,7 @@ from repro.core.civs import (_ROUTE_EPS, compact_support, finalize_retrieval,
                              retrieve_chunk)
 from repro.core.lid import init_state_from, lid_solve
 from repro.core.pipeline import PipelineStats, ShardPipeline
+from repro.core.resilience import DEFAULT_RETRY, RetryPolicy, resilient
 from repro.core.roi import estimate_roi
 from repro.core.source import (DataSource, as_source, strided_sample_indices)
 from repro.core.store import (build_store, build_store_streamed,
@@ -478,6 +480,13 @@ class StreamedEngine(_EngineBase):
         self._pipeline: Optional[ShardPipeline] = None
         self._store = None
         self._executor = None               # round-overlap seed prefetch
+        # fault-injection hooks (core.resilience.PipelineFaults): set BEFORE
+        # build_source/fit and they are installed on the shard pipeline —
+        # None in production, used by chaos tests / run_palid --inject-faults
+        self.faults = None
+        # checksum verification on scratch/cache reads; benchmarks/
+        # resilience.py turns it off to measure the clean-path overhead
+        self.verify_checksums = True
         # pending (seeds_np, Future[device rows]) pairs, newest last. Two
         # can be in flight at once: round r's rows (ready to consume) and
         # round r+1's speculation (announced before round r runs)
@@ -492,7 +501,8 @@ class StreamedEngine(_EngineBase):
         self._bsizes = jnp.asarray(self._store.bucket_sizes)
         self._pipeline = ShardPipeline(
             self._store, cache_bytes=self.spec.cache_bytes,
-            prefetch_depth=self.spec.prefetch_depth, stats=self.stats)
+            prefetch_depth=self.spec.prefetch_depth, stats=self.stats,
+            faults=self.faults, verify_checksums=self.verify_checksums)
 
     def build(self, points, cfg, rng):
         self.build_source(as_source(np.asarray(points)), cfg, rng)
@@ -672,9 +682,67 @@ def make_engine(spec: EngineSpec) -> Engine:
 
 
 # ------------------------------------------------------------- the driver --
+def _save_fit_checkpoint(ckpt_dir: str, rounds: int, labels, active_np, rng,
+                         seeds, seed_valid, any_eligible, densities,
+                         sup_idx, sup_w, sup_v, next_label: int,
+                         cap: int, d: int) -> None:
+    """Persist the driver's round-level state (the resume point after round
+    `rounds`). Everything the loop reads next round is here: the labels +
+    active mask, the PRNG chain value, the ALREADY-SAMPLED next-round seed
+    batch (seeds are drawn one round ahead for speculation, so saving the
+    key alone would replay the wrong schedule), and the peeled supports."""
+    from repro.checkpoint.manager import save_checkpoint
+    tree = {
+        "labels": labels,
+        "active": active_np,
+        "rng": np.asarray(rng),
+        "seeds": np.asarray(seeds),
+        "seed_valid": np.asarray(seed_valid),
+        "densities": np.asarray(densities, np.float32),
+        "sup_idx": (np.stack(sup_idx) if sup_idx
+                    else np.zeros((0, cap), np.int32)),
+        "sup_w": (np.stack(sup_w) if sup_w
+                  else np.zeros((0, cap), np.float32)),
+        "sup_v": (np.stack(sup_v).astype(np.float32) if sup_v
+                  else np.zeros((0, cap, d), np.float32)),
+    }
+    save_checkpoint(ckpt_dir, rounds, tree, metadata={
+        "kind": "alid-fit", "round": int(rounds),
+        "next_label": int(next_label), "any_eligible": bool(any_eligible),
+        "n": int(labels.shape[0])})
+
+
+def _restore_fit_checkpoint(ckpt_dir: str):
+    """Latest INTACT fit checkpoint: steps are tried newest-first, and a
+    step whose bytes fail their crc32 (or cannot be read at all) is skipped
+    with a warning — a torn/corrupt latest checkpoint degrades to the one
+    before it instead of aborting the resume."""
+    from repro.checkpoint.manager import (CheckpointCorruption,
+                                          list_checkpoints,
+                                          restore_checkpoint_tree)
+    for step in reversed(list_checkpoints(ckpt_dir)):
+        try:
+            manifest, tree = restore_checkpoint_tree(ckpt_dir, step)
+        except (CheckpointCorruption, OSError, KeyError, ValueError) as exc:
+            warnings.warn(
+                f"fit checkpoint step {step} is unusable ({exc}); falling "
+                "back to the previous one", RuntimeWarning)
+            continue
+        if manifest.get("metadata", {}).get("kind") != "alid-fit":
+            raise ValueError(
+                f"checkpoint step {step} in {ckpt_dir!r} is not a fit-driver "
+                f"checkpoint (kind="
+                f"{manifest.get('metadata', {}).get('kind')!r})")
+        return manifest, tree
+    return None, None
+
+
 def fit(data, cfg: ALIDConfig = ALIDConfig(),
         rng: Optional[jax.Array] = None,
-        engine: Optional[Engine] = None) -> Clustering:
+        engine: Optional[Engine] = None, *,
+        retry_policy: Optional[RetryPolicy] = DEFAULT_RETRY,
+        checkpoint_dir: Optional[str] = None, checkpoint_every: int = 1,
+        resume: bool = False, crash_at_round: int = 0) -> Clustering:
     """Dominant-cluster detection: THE host peel-reduce loop (Sec. 4.4).
 
     `data` is a `DataSource` (InMemorySource / MemmapSource / ChunkedSource,
@@ -707,10 +775,22 @@ def fit(data, cfg: ALIDConfig = ALIDConfig(),
     way out (releasing the streamed engine's device slots, cache, scratch
     file, and worker threads).
 
+    Resilience (DESIGN.md §11): the source is wrapped so every read —
+    build chunks, seed rows, support gathers, the shard-prefetch reader —
+    retries transient `OSError`s under `retry_policy` (None disables).
+    With `checkpoint_dir` set, the driver persists its round-level state
+    every `checkpoint_every` rounds through `checkpoint/manager.py`;
+    `resume=True` restores the latest intact checkpoint and continues,
+    producing labels BIT-IDENTICAL to the uninterrupted run (the engine
+    rebuild is deterministic — same rng, same store — and the saved state
+    includes the already-sampled next-round seed batch, so the PRNG
+    schedule replays exactly). `crash_at_round=r` raises at the START of
+    round r — the deterministic mid-fit crash used by the chaos tests.
+
     Returns a `Clustering` carrying per-cluster weighted supports, so the
     result can `predict` new points and serialize without the dataset.
     """
-    source = as_source(data)
+    source = resilient(as_source(data), retry_policy)
     rng = jax.random.PRNGKey(0) if rng is None else rng
     n = source.n
 
@@ -720,34 +800,76 @@ def fit(data, cfg: ALIDConfig = ALIDConfig(),
     rng, kb = jax.random.split(rng)
     engine.build_source(source, cfg, kb)
     try:
-        return _fit_loop(source, cfg, rng, engine)
+        return _fit_loop(source, cfg, rng, engine,
+                         checkpoint_dir=checkpoint_dir,
+                         checkpoint_every=max(1, int(checkpoint_every)),
+                         resume=resume, crash_at_round=int(crash_at_round))
     finally:
         if owns_engine:
             engine.close()
 
 
 def _fit_loop(source: DataSource, cfg: ALIDConfig, rng: jax.Array,
-              engine: Engine) -> Clustering:
+              engine: Engine, checkpoint_dir: Optional[str] = None,
+              checkpoint_every: int = 1, resume: bool = False,
+              crash_at_round: int = 0) -> Clustering:
     n = source.n
     bsizes = engine.bucket_sizes
     bsizes_np = np.asarray(bsizes)
     stats = getattr(engine, "stats", None)
+    cap, d = cfg.cap, source.dim
 
-    active_np = np.ones((n,), bool)
-    active = jnp.asarray(active_np)
-    labels = np.full((n,), -1, np.int32)
-    densities: list[float] = []
-    sup_idx: list[np.ndarray] = []
-    sup_w: list[np.ndarray] = []
-    sup_v: list[np.ndarray] = []
-    next_label = 0
-    rounds = 0
+    restored = None
+    if resume:
+        if checkpoint_dir is None:
+            raise ValueError("fit(resume=True) needs checkpoint_dir=...")
+        manifest, tree = _restore_fit_checkpoint(checkpoint_dir)
+        if manifest is not None:
+            meta = manifest["metadata"]
+            if int(meta["n"]) != n:
+                raise ValueError(
+                    f"checkpoint in {checkpoint_dir!r} was written for "
+                    f"n={meta['n']} points, this fit has n={n}")
+            restored = (meta, tree)
 
-    rng, kr = jax.random.split(rng)
-    seeds, seed_valid, any_eligible = _sample_seeds(active, bsizes, kr, cfg)
-    any_eligible = bool(any_eligible)
+    if restored is not None:
+        meta, tree = restored
+        labels = np.asarray(tree["labels"], np.int32)
+        active_np = np.asarray(tree["active"], bool)
+        active = jnp.asarray(active_np)
+        # the restored PRNG value REPLACES the local chain: the build split
+        # already happened (deterministically) in fit(), and the saved key
+        # is the post-round-r chain value of the original run
+        rng = jnp.asarray(tree["rng"])
+        seeds = jnp.asarray(tree["seeds"])
+        seed_valid = jnp.asarray(tree["seed_valid"])
+        densities = [float(x) for x in tree["densities"]]
+        sup_idx = [np.asarray(r, np.int32) for r in tree["sup_idx"]]
+        sup_w = [np.asarray(r, np.float32) for r in tree["sup_w"]]
+        sup_v = [np.asarray(r, np.float32) for r in tree["sup_v"]]
+        next_label = int(meta["next_label"])
+        any_eligible = bool(meta["any_eligible"])
+        start_round = int(meta["round"])
+    else:
+        active_np = np.ones((n,), bool)
+        active = jnp.asarray(active_np)
+        labels = np.full((n,), -1, np.int32)
+        densities = []
+        sup_idx = []
+        sup_w = []
+        sup_v = []
+        next_label = 0
+        start_round = 0
 
-    for rounds in range(1, cfg.max_rounds + 1):
+        rng, kr = jax.random.split(rng)
+        seeds, seed_valid, any_eligible = _sample_seeds(active, bsizes, kr,
+                                                        cfg)
+        any_eligible = bool(any_eligible)
+    rounds = start_round
+
+    for rounds in range(start_round + 1, cfg.max_rounds + 1):
+        if crash_at_round and rounds == crash_at_round:
+            raise RuntimeError(f"injected crash at round {rounds}")
         if not bool(jnp.any(seed_valid)):
             break
         if not cfg.exhaustive and not any_eligible:
@@ -826,8 +948,16 @@ def _fit_loop(source: DataSource, cfg: ALIDConfig, rng: jax.Array,
         next_label += int(keep.sum())
         if not active_np.any():
             break
+        # round-level resume point — saved only when the loop continues, so
+        # a resumed run re-enters at round+1 exactly where the uninterrupted
+        # run did (crashing AFTER the final round just re-runs it, which is
+        # deterministic and lands on the same labels)
+        if checkpoint_dir is not None and rounds % checkpoint_every == 0:
+            _save_fit_checkpoint(checkpoint_dir, rounds, labels, active_np,
+                                 rng, seeds, seed_valid, any_eligible,
+                                 densities, sup_idx, sup_w, sup_v,
+                                 next_label, cap, d)
 
-    cap, d = cfg.cap, source.dim
     return Clustering(
         labels=labels,
         densities=np.asarray(densities, np.float32),

@@ -47,14 +47,23 @@ import queue
 import tempfile
 import threading
 import time
+import warnings
+import zlib
 from collections import OrderedDict
 from typing import Iterable, Iterator, Optional
 
 import jax
 import numpy as np
 
+from repro.core.resilience import (CorruptionError, DEFAULT_RETRY,
+                                   RetryPolicy)
+
 __all__ = ["PipelineStats", "ScratchShards", "ShardBundleCache",
            "ShardPipeline", "DEFAULT_CACHE_BYTES"]
+
+
+def _crc32(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).reshape(-1).view(np.uint8))
 
 DEFAULT_CACHE_BYTES = 256 * 2**20          # 256 MiB of hot shard payloads
 
@@ -78,7 +87,9 @@ class PipelineStats:
     _FIELDS = ("read_s", "put_s", "compute_s", "wait_s", "cache_hits",
                "cache_misses", "cache_stale", "scratch_reads", "source_reads",
                "shards_streamed", "seed_prefetch_hits", "seed_prefetch_misses",
-               "rounds_speculated", "rounds_resampled")
+               "rounds_speculated", "rounds_resampled", "read_retries",
+               "corruptions", "tier_fallbacks", "reader_deaths",
+               "readers_abandoned")
 
     def __init__(self) -> None:
         for f in self._FIELDS:
@@ -105,7 +116,11 @@ class PipelineStats:
                 f"source={s['source_reads']} | seed-prefetch "
                 f"{s['seed_prefetch_hits']}/{s['seed_prefetch_hits'] + s['seed_prefetch_misses']}"
                 f" hit, rounds speculated={s['rounds_speculated']} "
-                f"resampled={s['rounds_resampled']}")
+                f"resampled={s['rounds_resampled']} | resilience: "
+                f"retries={s['read_retries']} corrupt={s['corruptions']} "
+                f"fallbacks={s['tier_fallbacks']} "
+                f"reader_deaths={s['reader_deaths']} "
+                f"abandoned={s['readers_abandoned']}")
 
 
 class ScratchShards:
@@ -116,11 +131,20 @@ class ScratchShards:
     shard read is one contiguous slab — sequential disk I/O instead of a
     scattered per-row gather through the source. The file is unlinked by
     `close()` (invoked from the engine's teardown).
+
+    Integrity: every `write` records a crc32 of the FULL zero-padded slab,
+    and `read(verify=True)` checks it — a flipped bit on the scratch tier
+    surfaces as `CorruptionError` instead of silently poisoning a fit. The
+    pipeline handles the error by refetching from the source (generation 0
+    shards only — a mutated shard's scratch slab is the sole owner of its
+    bytes). `corrupt()` is the test/chaos hook: it tampers the slab without
+    updating the checksum.
     """
 
     def __init__(self, path: str, mm: np.memmap):
         self.path = path
         self._mm = mm
+        self._crc: dict[int, int] = {}
 
     @classmethod
     def create(cls, n_shards: int, cap: int, dim: int,
@@ -143,11 +167,31 @@ class ScratchShards:
 
     def write(self, s: int, rows: np.ndarray) -> None:
         self._mm[s, :rows.shape[0]] = rows
+        # checksum the full padded slab (what read() returns), so a verify
+        # covers the zero tail as well as the written rows
+        self._crc[int(s)] = _crc32(np.asarray(self._mm[s]))
 
-    def read(self, s: int) -> np.ndarray:
+    def read(self, s: int, verify: bool = True) -> np.ndarray:
         """One sequential (cap, d) slab read, returned as an OWNED array so
-        callers (the LRU, device_put) never hold views into the file."""
-        return np.array(self._mm[s], np.float32)
+        callers (the LRU, device_put) never hold views into the file.
+        `verify=True` checks the slab against the crc recorded at write
+        time and raises `CorruptionError` on mismatch."""
+        out = np.array(self._mm[s], np.float32)
+        if verify:
+            want = self._crc.get(int(s))
+            if want is not None and _crc32(out) != want:
+                raise CorruptionError(
+                    f"scratch slab for shard {int(s)} failed its checksum")
+        return out
+
+    def corrupt(self, s: int) -> None:
+        """Chaos hook: flip one mantissa bit in shard `s`'s slab WITHOUT
+        updating the recorded checksum — the next verified read must detect
+        it (an XOR changes the bytes for ANY float value, unlike += 1.0
+        which is absorbed above 2**24)."""
+        v = np.array(self._mm[s, 0, 0], np.float32)
+        self._mm[s, 0, 0] = (v.view(np.uint32) ^ np.uint32(1)).view(
+            np.float32)
 
     def flush(self) -> None:
         self._mm.flush()
@@ -180,13 +224,20 @@ class ShardBundleCache:
     stores). A probe with a newer generation drops the entry and misses —
     an online `update_shard_points` can therefore never be shadowed by a
     stale cached bundle. `stale_evictions` counts those drops.
+
+    Each entry also carries a crc32 of its points bytes, recorded at `put`
+    and (with `verify` on) re-checked at `get`: a corrupted resident bundle
+    drops + misses (`corrupt_evictions`) instead of serving poisoned bytes,
+    and the fetch falls through to the scratch/source tiers below.
     """
 
-    def __init__(self, budget_bytes: int):
+    def __init__(self, budget_bytes: int, verify: bool = True):
         self.budget = int(budget_bytes)
-        self._entries: OrderedDict[int, tuple[int, tuple]] = OrderedDict()
+        self.verify = bool(verify)
+        self._entries: OrderedDict[int, tuple[int, int, tuple]] = OrderedDict()
         self._bytes = 0
         self.stale_evictions = 0
+        self.corrupt_evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -196,17 +247,21 @@ class ShardBundleCache:
         return self._bytes
 
     def _drop(self, s: int) -> None:
-        _, old = self._entries.pop(s)
+        _, _, old = self._entries.pop(s)
         self._bytes -= int(old[0].nbytes)
 
     def get(self, s: int, gen: int = 0):
         entry = self._entries.get(s)
         if entry is None:
             return None
-        egen, bundle = entry
+        egen, ecrc, bundle = entry
         if egen != gen:                     # filled before the last mutation
             self._drop(s)
             self.stale_evictions += 1
+            return None
+        if self.verify and _crc32(bundle[0]) != ecrc:
+            self._drop(s)                   # poisoned resident bytes
+            self.corrupt_evictions += 1
             return None
         self._entries.move_to_end(s)
         return bundle
@@ -222,9 +277,9 @@ class ShardBundleCache:
             self._drop(s)                   # replace the stale entry
             self.stale_evictions += 1
         while self._bytes + cost > self.budget and self._entries:
-            _, (_, old) = self._entries.popitem(last=False)
+            _, (_, _, old) = self._entries.popitem(last=False)
             self._bytes -= int(old[0].nbytes)
-        self._entries[s] = (gen, bundle)
+        self._entries[s] = (gen, _crc32(bundle[0]), bundle)
         self._bytes += cost
 
     def clear(self) -> None:
@@ -256,22 +311,72 @@ class ShardPipeline:
     """
 
     def __init__(self, store, cache_bytes: int = 0, prefetch_depth: int = 0,
-                 stats: Optional[PipelineStats] = None):
+                 stats: Optional[PipelineStats] = None,
+                 retry: RetryPolicy = DEFAULT_RETRY,
+                 verify_checksums: bool = True, faults=None,
+                 join_timeout: float = 5.0):
         self.store = store
         self.depth = max(0, int(prefetch_depth))
-        self.cache = (ShardBundleCache(cache_bytes)
+        self.verify_checksums = bool(verify_checksums)
+        self.cache = (ShardBundleCache(cache_bytes, verify=verify_checksums)
                       if cache_bytes > 0 else None)
         self.stats = stats if stats is not None else PipelineStats()
+        self.retry = retry if retry is not None else RetryPolicy(attempts=1)
+        # fault-injection hooks (core.resilience.PipelineFaults) — None in
+        # production; installed by chaos tests / run_palid --inject-faults
+        self.faults = faults
+        self.join_timeout = float(join_timeout)
         self._slots: list = [None, None]    # sync-mode double buffer
         self._slot = 0
 
     # -- host fetch tier: cache -> scratch -> source -----------------------
+    def _count_retry(self, attempt, exc) -> None:
+        self.stats.add("read_retries")
+
+    def _read_points(self, s: int, gen: int) -> np.ndarray:
+        """Tiered shard-payload read below the cache: scratch slab (verified
+        + retried) first, source re-gather as the fallback. Transient
+        `OSError`s retry under the policy; a checksum failure falls back ONE
+        tier (re-reading corrupt bytes cannot help) — unless the shard was
+        mutated in place, in which case the scratch slab is the sole owner
+        of its bytes and the corruption is surfaced."""
+        store = self.store
+        scratch = getattr(store, "scratch", None)
+        if scratch is not None:
+            try:
+                pts = self.retry.call(scratch.read, s,
+                                      verify=self.verify_checksums,
+                                      on_retry=self._count_retry)
+                self.stats.add("scratch_reads")
+                return pts
+            except CorruptionError:
+                self.stats.add("corruptions")
+                if gen > 0:
+                    raise CorruptionError(
+                        f"scratch slab for shard {s} is corrupt at "
+                        f"generation {gen}: the shard was mutated in place "
+                        "(update_shard_points), so the source holds "
+                        "pre-mutation bytes and no clean tier remains")
+        gather = getattr(store, "gather_shard_points", store.shard_points)
+        pts = self.retry.call(gather, s, on_retry=self._count_retry)
+        self.stats.add("source_reads")
+        if scratch is not None:
+            # heal the corrupt slab with the authoritative source bytes so
+            # the next read is a clean sequential slab again
+            self.stats.add("tier_fallbacks")
+            scratch.write(s, pts)
+        return pts
+
     def fetch_bundle(self, s: int) -> tuple:
         stats = self.stats
+        s = int(s)
         gens = getattr(self.store, "generations", None)
         gen = int(gens[s]) if gens is not None else 0
+        if self.faults is not None:
+            self.faults.on_fetch(self, s)
         if self.cache is not None:
             stale0 = self.cache.stale_evictions
+            corrupt0 = self.cache.corrupt_evictions
             bundle = self.cache.get(s, gen=gen)
             if bundle is not None:
                 stats.add("cache_hits")
@@ -279,11 +384,12 @@ class ShardPipeline:
             stats.add("cache_misses")
             if self.cache.stale_evictions > stale0:
                 stats.add("cache_stale")
+            if self.cache.corrupt_evictions > corrupt0:
+                stats.add("corruptions")
+                stats.add("tier_fallbacks")
         t0 = time.perf_counter()
-        pts = self.store.shard_points(int(s))
+        pts = self._read_points(s, gen)
         stats.add("read_s", time.perf_counter() - t0)
-        stats.add("scratch_reads" if getattr(self.store, "scratch", None)
-                  is not None else "source_reads")
         bundle = (pts, self.store.sorted_keys[s], self.store.perm[s],
                   self.store.global_idx[s])
         if self.cache is not None:
@@ -338,6 +444,8 @@ class ShardPipeline:
                 for s in routed:
                     if not acquire_cancellable():
                         return
+                    if self.faults is not None:
+                        self.faults.on_produce()
                     ring.put(self._device_put(self.fetch_bundle(s)))
             except BaseException as exc:    # surfaced on the consumer side
                 ring.put(_ProducerError(exc))
@@ -351,14 +459,38 @@ class ShardPipeline:
                 item = ring.get()
                 self.stats.add("wait_s", time.perf_counter() - t0)
                 if isinstance(item, _ProducerError):
-                    raise item.exc
+                    # the reader died before producing bundle `pos` (its
+                    # error lands in FIFO order after its last good bundle).
+                    # A dead reader must not kill the fit: finish the routed
+                    # list INLINE, in order — consumption order is unchanged,
+                    # so the carry folds (and the labels) stay bit-identical.
+                    # A genuine per-shard error (bad index, exhausted
+                    # retries) re-raises right here when the inline fetch
+                    # hits the same shard — fallback never masks bugs.
+                    self.stats.add("reader_deaths")
+                    for pos2 in range(pos, len(routed)):
+                        dev = self._device_put(
+                            self.fetch_bundle(routed[pos2]))
+                        self._slot ^= 1
+                        self._slots[self._slot] = dev
+                        yield pos2, routed[pos2], dev
+                    return
                 # the popped bundle is now the consumer-held "+1"; free its
                 # ring slot so the reader can run one further ahead
                 slots.release()
                 yield pos, s, item
         finally:
             cancel.set()
-            reader.join()
+            reader.join(self.join_timeout)
+            if reader.is_alive():
+                # a source read stuck past the cancel flag: abandoning the
+                # daemon thread (bounded join) beats hanging fit teardown
+                # forever — the satellite fix for the unbounded join
+                self.stats.add("readers_abandoned")
+                warnings.warn(
+                    "alid-shard-prefetch reader did not exit within "
+                    f"{self.join_timeout}s of cancellation; abandoning the "
+                    "daemon thread", RuntimeWarning)
 
     def release(self) -> None:
         """Drop every reference the pipeline holds (device slots + host

@@ -191,6 +191,15 @@ class StreamedStore(NamedTuple):
         Peak host memory O(shard)."""
         if self.scratch is not None:
             return self.scratch.read(s)
+        return self.gather_shard_points(s)
+
+    def gather_shard_points(self, s: int) -> np.ndarray:
+        """Re-gather one shard's rows from the SOURCE, bypassing scratch —
+        the bottom of the pipeline's tier chain (cache -> scratch -> here).
+        Only valid as a fallback at generation 0: after an in-place
+        mutation (`update_shard_points`) the scratch slab is the sole owner
+        of the shard's bytes and the source holds the pre-mutation rows —
+        `ShardPipeline._read_points` enforces that."""
         m = self.shard_count(s)
         out = np.zeros((self.shard_cap, self.dim), np.float32)
         out[:m] = self.source.sample(self.global_idx[s, :m])

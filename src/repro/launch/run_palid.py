@@ -142,6 +142,27 @@ def main():
                          "hot-swap, roll back to the pre-insert epoch and "
                          "ASSERT the restored labels are bit-identical "
                          "while submit() traffic keeps serving")
+    ap.add_argument("--inject-faults", default="", metavar="SPEC",
+                    help="chaos demo: re-run the fit under injected faults "
+                         "and assert label parity with the clean run. SPEC "
+                         "is comma-separated name:value pairs — "
+                         "'transient:0.1' (seeded transient read-error "
+                         "rate), 'corrupt:0.05' (scratch-slab corruption "
+                         "rate per fetch; streamed engine with scratch "
+                         "only), 'kill-reader:3' (kill the prefetch reader "
+                         "at the k-th bundle; streamed + prefetch only). "
+                         "Prints a greppable 'fault-parity=True' line")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="persist round-level fit state here (resume point "
+                         "every --checkpoint-every rounds); with "
+                         "--inject-faults, also runs a crash-at-round-2 + "
+                         "resume arm and prints 'resume-parity=True'")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="rounds between fit checkpoints (default 1)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the fit from the latest intact checkpoint "
+                         "in --checkpoint-dir (bit-identical to the "
+                         "uninterrupted run)")
     ap.add_argument("--a-cap", type=int, default=0,
                     help="support capacity override (0 = auto)")
     ap.add_argument("--seeds-per-round", type=int, default=32)
@@ -190,7 +211,10 @@ def main():
     engine = make_engine(cfg.spec)
     try:
         t0 = time.time()
-        res = fit(source, cfg, jax.random.PRNGKey(0), engine=engine)
+        res = fit(source, cfg, jax.random.PRNGKey(0), engine=engine,
+                  checkpoint_dir=args.checkpoint_dir or None,
+                  checkpoint_every=args.checkpoint_every,
+                  resume=args.resume)
         dt = time.time() - t0
         n_members = int((res.labels >= 0).sum())
         line = (f"[palid] n={n} d={d} engine={cfg.spec.engine} "
@@ -210,8 +234,81 @@ def main():
             _serve_bench(res, source, args.serve_rate)
         if args.online:
             _online_demo(res, source, cfg)
+        if args.inject_faults:
+            _chaos_demo(res, source, cfg, args)
     finally:
         engine.close()
+
+
+def _parse_faults(spec: str) -> dict:
+    out = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, value = part.partition(":")
+        if name not in ("transient", "corrupt", "kill-reader"):
+            raise SystemExit(
+                f"--inject-faults: unknown fault {name!r} (expected "
+                "transient|corrupt|kill-reader)")
+        out[name] = float(value) if value else 0.0
+    return out
+
+
+def _chaos_demo(clean, source, cfg, args) -> None:
+    """Re-run the just-finished fit under injected faults and assert the
+    labels are BIT-IDENTICAL to the clean result (the DESIGN.md §11
+    contract); with --checkpoint-dir, also crash at round 2 and resume.
+    Prints one greppable line — the CI chaos step asserts on it."""
+    import os
+
+    import numpy as np
+
+    from repro.core.resilience import (FaultySource, PipelineFaults,
+                                       RetryPolicy)
+    from repro.core.source import as_source
+
+    faults = _parse_faults(args.inject_faults)
+    fast = RetryPolicy(base_delay=0.001, max_delay=0.05)
+    faulty = FaultySource(as_source(source),
+                          rate=faults.get("transient", 0.0), seed=1)
+    engine = make_engine(cfg.spec)
+    pf = None
+    if faults.get("corrupt", 0.0) > 0.0 or "kill-reader" in faults:
+        pf = PipelineFaults(corrupt_rate=faults.get("corrupt", 0.0),
+                            kill_reader_at=int(faults.get("kill-reader",
+                                                          -1.0)),
+                            seed=2)
+        engine.faults = pf
+    try:
+        res = fit(faulty, cfg, jax.random.PRNGKey(0), engine=engine,
+                  retry_policy=fast)
+        stats = getattr(engine, "stats", None)
+        corruptions = int(stats.corruptions) if stats is not None else 0
+        deaths = int(stats.reader_deaths) if stats is not None else 0
+    finally:
+        engine.close()
+    parity = bool(np.array_equal(clean.labels, res.labels)
+                  and res.n_rounds == clean.n_rounds)
+
+    resume_txt = ""
+    if args.checkpoint_dir:
+        ckpt = os.path.join(args.checkpoint_dir, "chaos")
+        try:
+            fit(source, cfg, jax.random.PRNGKey(0), checkpoint_dir=ckpt,
+                checkpoint_every=args.checkpoint_every, crash_at_round=2)
+        except RuntimeError:
+            pass                      # the injected crash
+        resumed = fit(source, cfg, jax.random.PRNGKey(0),
+                      checkpoint_dir=ckpt, resume=True)
+        resume_ok = bool(np.array_equal(clean.labels, resumed.labels)
+                         and resumed.n_rounds == clean.n_rounds)
+        resume_txt = f" resume-parity={resume_ok}"
+
+    print(f"[palid] chaos faults={args.inject_faults!r} "
+          f"injected={faulty.injected} corruptions={corruptions} "
+          f"reader_deaths={deaths} retries_ok=True "
+          f"fault-parity={parity}{resume_txt}")
 
 
 def _serve_bench(res, source, rate_hz: float) -> None:

@@ -1,5 +1,6 @@
 from repro.serve.engine import ServeConfig, generate, BatchServer  # noqa: F401
 from repro.serve.cluster_service import ClusterService  # noqa: F401
-from repro.serve.batching import (ClusterServer, QueueFull,  # noqa: F401
-                                  ServingStats, Tenant, run_open_loop)
+from repro.serve.batching import (ClusterServer, DeadlineExceeded,  # noqa: F401
+                                  QueueFull, ServingStats, ShutdownTimeout,
+                                  Tenant, WorkerDied, run_open_loop)
 from repro.serve.live import LiveServing  # noqa: F401

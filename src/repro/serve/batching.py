@@ -44,7 +44,7 @@ import functools
 import threading
 import time
 from collections import deque
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from typing import Optional
 
 import jax
@@ -58,6 +58,51 @@ from repro.kernels import ops
 class QueueFull(RuntimeError):
     """Admission control rejected a submit: the bounded queue is full
     (policy="reject"), or policy="block" timed out waiting for space."""
+
+
+class DeadlineExceeded(TimeoutError):
+    """A request's per-submit deadline expired before the worker packed it —
+    the future resolves with this instead of a stale label."""
+
+
+class WorkerDied(RuntimeError):
+    """The serving worker died (and was not respawned): every pending
+    future — queued AND in-flight — resolves with this. No future can hang
+    on a dead worker."""
+
+
+class ShutdownTimeout(RuntimeError):
+    """`close(timeout=...)` gave up waiting for a stuck worker: the pending
+    futures resolve with this instead of hanging forever (the pre-fix bug
+    set `_worker = None` and orphaned them silently)."""
+
+
+def _safe_set_result(fut: Future, value) -> bool:
+    """Resolve a future that MAY have been resolved concurrently (a timed-
+    out close or a supervisor racing the worker): first writer wins, the
+    loser backs off instead of raising out of the worker thread."""
+    try:
+        fut.set_result(value)
+        return True
+    except InvalidStateError:
+        return False
+
+
+def _safe_set_exception(fut: Future, exc: BaseException) -> bool:
+    try:
+        fut.set_exception(exc)
+        return True
+    except InvalidStateError:
+        return False
+
+
+def _try_set_running(fut: Future) -> bool:
+    # RuntimeError: set_running_or_notify_cancel on a future that is already
+    # RUNNING/FINISHED (a close-timeout resolved it while it sat queued)
+    try:
+        return fut.set_running_or_notify_cancel()
+    except (InvalidStateError, RuntimeError):
+        return False
 
 
 # ---------------------------------------------------------------- metrics --
@@ -74,9 +119,11 @@ class ServingStats:
     rising queue_depth_peak means the device is the bottleneck.
     """
 
-    _FIELDS = ("submitted", "served", "rejected", "cancelled", "batches",
-               "slots_filled", "queue_depth_peak", "version_swaps",
-               "rollbacks", "queue_wait_s", "pack_s", "compute_s", "wait_s")
+    _FIELDS = ("submitted", "served", "rejected", "cancelled", "expired",
+               "batches", "slots_filled", "queue_depth_peak",
+               "version_swaps", "rollbacks", "worker_deaths", "respawns",
+               "failed_shutdowns", "queue_wait_s", "pack_s", "compute_s",
+               "wait_s")
 
     def __init__(self) -> None:
         for f in self._FIELDS:
@@ -106,10 +153,13 @@ class ServingStats:
                if batch_slots else "")
         return ("serving: "
                 f"submitted={s['submitted']} served={s['served']} "
-                f"rejected={s['rejected']} cancelled={s['cancelled']} | "
+                f"rejected={s['rejected']} cancelled={s['cancelled']} "
+                f"expired={s['expired']} | "
                 f"batches={s['batches']}{occ} "
                 f"queue_peak={s['queue_depth_peak']} | "
                 f"swaps={s['version_swaps']} rollbacks={s['rollbacks']} | "
+                f"deaths={s['worker_deaths']} respawns={s['respawns']} "
+                f"failed_shutdowns={s['failed_shutdowns']} | "
                 f"queue_wait={s['queue_wait_s']:.3f}s "
                 f"pack={s['pack_s']:.3f}s compute={s['compute_s']:.3f}s "
                 f"idle={s['wait_s']:.3f}s")
@@ -224,13 +274,14 @@ class Tenant:
 
 # ----------------------------------------------------------------- server --
 class _Request:
-    __slots__ = ("tenant_key", "vec", "future", "t_submit")
+    __slots__ = ("tenant_key", "vec", "future", "t_submit", "deadline")
 
-    def __init__(self, tenant_key, vec, future, t_submit):
+    def __init__(self, tenant_key, vec, future, t_submit, deadline=None):
         self.tenant_key = tenant_key
         self.vec = vec
         self.future = future
         self.t_submit = t_submit
+        self.deadline = deadline   # absolute time.monotonic(), or None
 
 
 class ClusterServer:
@@ -260,17 +311,32 @@ class ClusterServer:
     `close(drain=True)` stops intake, serves everything already queued,
     then joins the worker; `close(drain=False)` cancels queued futures
     (callers blocked in `result()` get `CancelledError`).
+
+    Supervision: the worker runs under `_worker_main`, which catches ANY
+    escaping exception and hands it to `_handle_worker_death`. Depending on
+    `on_worker_death` the server either respawns a fresh worker (up to
+    `max_respawns` times; only the in-flight batch fails with `WorkerDied`,
+    queued requests survive and are served by the new worker) or fails the
+    whole server (every pending future resolves with `WorkerDied`, later
+    submits raise). Either way NO future can hang on a dead worker — the
+    invariant tests/test_batching.py locks down.
     """
 
     def __init__(self, batch_slots: int = 64, queue_limit: int = 1024,
-                 policy: str = "block", start: bool = True):
+                 policy: str = "block", start: bool = True,
+                 on_worker_death: str = "respawn", max_respawns: int = 3):
         if policy not in ("block", "reject"):
             raise ValueError(f"policy must be 'block'|'reject', got {policy!r}")
+        if on_worker_death not in ("respawn", "fail"):
+            raise ValueError("on_worker_death must be 'respawn'|'fail', "
+                             f"got {on_worker_death!r}")
         if queue_limit < 1:
             raise ValueError("queue_limit must be >= 1")
         self.batch_slots = int(batch_slots)
         self.queue_limit = int(queue_limit)
         self.policy = policy
+        self.on_worker_death = on_worker_death
+        self.max_respawns = int(max_respawns)
         self.stats = ServingStats()
         self._tenants: dict[tuple[str, int], Tenant] = {}
         self._queues: dict[tuple[str, int], deque[_Request]] = {}
@@ -281,6 +347,10 @@ class ClusterServer:
         self._space = threading.Condition(self._lock)  # blocked submitters
         self._stopping = False
         self._draining = False
+        self._failed = False       # worker died and was not respawned
+        self._respawns = 0
+        self._kill_worker = False  # fault-injection flag (tests/chaos demo)
+        self._inflight: list[_Request] = []  # batch the worker currently owns
         self._worker: Optional[threading.Thread] = None
         if start:
             self.start()
@@ -393,19 +463,32 @@ class ClusterServer:
     # -------------------------------------------------------------- intake
     def submit(self, query, tenant: str = "default",
                version: Optional[int] = None,
-               timeout: Optional[float] = None) -> Future:
+               timeout: Optional[float] = None,
+               deadline: Optional[float] = None) -> Future:
         """Enqueue one query for `tenant` (latest version unless pinned);
         returns a Future resolving to the int cluster label (-1 = none).
         Raises `QueueFull` under admission control, `KeyError` for unknown
-        tenants, `ValueError` for wrong dimensionality."""
+        tenants, `ValueError` for wrong dimensionality. `deadline` (seconds
+        from now) bounds how long the request may sit queued: a request the
+        worker packs after its deadline resolves with `DeadlineExceeded`
+        instead of a stale label."""
         with self._lock:
+            if self._failed:
+                raise RuntimeError(
+                    "server worker died and was not respawned — server "
+                    "is failed (see stats.worker_deaths)")
             key = self._resolve(tenant, version)
             tn = self._tenants[key]
         # validate/convert OUTSIDE the lock: check_query does a host array
         # copy (np.asarray), and doing that under the registry lock stalls
         # every other submitter and the worker's batch pop for the duration
         vec = tn.check_query(query)
+        dl = None if deadline is None else time.monotonic() + float(deadline)
         with self._lock:
+            if self._failed:
+                raise RuntimeError(
+                    "server worker died and was not respawned — server "
+                    "is failed (see stats.worker_deaths)")
             if self._stopping:
                 raise RuntimeError("server is closed")
             if key not in self._tenants:
@@ -429,7 +512,7 @@ class ClusterServer:
                             f"after {timeout}s (policy=block)")
             fut: Future = Future()
             self._queues[key].append(
-                _Request(key, vec, fut, time.perf_counter()))
+                _Request(key, vec, fut, time.perf_counter(), dl))
             self._pending += 1
             self.stats.add("submitted")
             self.stats.peak("queue_depth_peak", self._pending)
@@ -444,10 +527,72 @@ class ClusterServer:
     def start(self) -> None:
         if self._worker is not None and self._worker.is_alive():
             return
-        self._stopping = False
-        self._worker = threading.Thread(target=self._serve_loop,
+        with self._lock:
+            self._stopping = False
+            self._failed = False
+            self._respawns = 0
+        self._worker = threading.Thread(target=self._worker_main,
                                         name="cluster-serve", daemon=True)
         self._worker.start()
+
+    def _worker_main(self) -> None:
+        """Supervised worker entry: any exception that escapes the serve
+        loop — a bug, a device error, an injected fault — reaches the
+        supervisor instead of silently killing the thread with futures
+        still pending."""
+        try:
+            self._serve_loop()
+        except BaseException as exc:   # noqa: BLE001 — supervisor boundary
+            self._handle_worker_death(exc)
+
+    def _handle_worker_death(self, exc: BaseException) -> None:
+        """Runs ON the dying worker thread. Decides respawn-vs-fail under
+        the lock, then resolves the dropped futures OUTSIDE it.
+
+        respawn: only the in-flight batch (popped, unresolved) fails with
+        `WorkerDied`; queued requests stay queued for the fresh worker.
+        fail: the server transitions to failed — in-flight AND queued
+        futures all resolve with `WorkerDied`, blocked submitters wake and
+        raise, later submits raise immediately."""
+        self.stats.add("worker_deaths")
+        with self._lock:
+            dropped = list(self._inflight)
+            self._inflight = []
+            respawn = (self.on_worker_death == "respawn"
+                       and self._respawns < self.max_respawns
+                       and not self._stopping)
+            if respawn:
+                self._respawns += 1
+                self._worker = threading.Thread(
+                    target=self._worker_main, name="cluster-serve",
+                    daemon=True)
+                self._worker.start()
+            else:
+                self._failed = True
+                self._stopping = True
+                for q in self._queues.values():
+                    dropped.extend(q)
+                    q.clear()
+                self._pending = 0
+                self._work.notify_all()
+                self._space.notify_all()
+        if respawn:
+            self.stats.add("respawns")
+        err = WorkerDied(f"serving worker died: {exc!r}")
+        err.__cause__ = exc
+        for r in dropped:
+            # set_exception is legal from PENDING and RUNNING alike, so this
+            # covers both the queued and the already-packed (in-flight)
+            # futures; cancelled/finished ones back off harmlessly
+            _safe_set_exception(r.future, err)
+
+    def inject_worker_fault(self) -> None:
+        """Deterministic fault injection for tests and the chaos demo: the
+        worker raises at its next loop iteration, exercising the real
+        `_handle_worker_death` path (not a simulation of it)."""
+        with self._lock:
+            self._kill_worker = True
+            self._work.notify()
 
     def _next_batch(self) -> Optional[tuple[Tenant, list[_Request]]]:
         """Pop up to batch_slots requests of ONE tenant (round-robin) and
@@ -463,6 +608,10 @@ class ClusterServer:
                 batch = [q.popleft()
                          for _ in range(min(len(q), self.batch_slots))]
                 self._pending -= len(batch)  # analysis: allow(unlocked-mutation): _next_batch's contract is "caller holds self._lock" (see docstring + the lock-probe regression test)
+                # popped requests are the worker's responsibility until it
+                # explicitly resolves them — the supervisor fails whatever
+                # is still here if the worker dies mid-batch
+                self._inflight = batch
                 self._space.notify_all()
                 # same critical section as the pop: remove_tenant drops the
                 # queue and the registry entry together under this lock, so
@@ -474,8 +623,12 @@ class ClusterServer:
         while True:
             t_idle = time.perf_counter()
             with self._work:
-                while self._pending == 0 and not self._stopping:
+                while (self._pending == 0 and not self._stopping
+                       and not self._kill_worker):
                     self._work.wait(0.1)
+                if self._kill_worker:
+                    self._kill_worker = False
+                    raise RuntimeError("injected worker fault")
                 if self._pending == 0 and self._stopping:
                     return
                 popped = self._next_batch()
@@ -489,13 +642,21 @@ class ClusterServer:
         the batch comes from ONE (name, version) clustering even if a swap
         or removal lands mid-compute."""
         t_pack = time.perf_counter()
+        now = time.monotonic()
         live: list[tuple[int, _Request]] = []
+        expired: list[_Request] = []
         for r in batch:
+            if r.deadline is not None and now > r.deadline:
+                expired.append(r)
             # a future cancelled while queued never reaches the device
-            if r.future.set_running_or_notify_cancel():
+            elif _try_set_running(r.future):
                 live.append((len(live), r))
             else:
                 self.stats.add("cancelled")
+        for r in expired:   # resolve outside any lock, before the compute
+            self.stats.add("expired")
+            _safe_set_exception(r.future, DeadlineExceeded(
+                "request deadline expired before it was packed"))
         q, valid = tenant.staging(self.batch_slots)
         q[:] = 0.0
         valid[:] = False
@@ -509,20 +670,35 @@ class ClusterServer:
             labels = tenant.assign_np(q, valid)
         except Exception as e:               # resolve, don't kill the worker
             for _, r in live:
-                r.future.set_exception(e)
+                _safe_set_exception(r.future, e)
+            with self._lock:
+                self._inflight = []
             return
         self.stats.add("compute_s", time.perf_counter() - t_comp)
         self.stats.add("batches")
         self.stats.add("slots_filled", len(live))
         self.stats.add("served", len(live))
         for i, r in live:
-            r.future.set_result(int(labels[i]))
+            _safe_set_result(r.future, int(labels[i]))
+        # only after every future is resolved does the worker disown the
+        # batch — an exception anywhere above leaves _inflight set so the
+        # supervisor can fail the remainder
+        with self._lock:
+            self._inflight = []
 
     # ------------------------------------------------------------ shutdown
     def close(self, drain: bool = True, timeout: Optional[float] = None
-              ) -> None:
+              ) -> bool:
         """Stop the server. drain=True serves everything already queued
-        first; drain=False cancels queued futures. Idempotent."""
+        first; drain=False cancels queued futures. Idempotent.
+
+        Returns True on clean shutdown. If `timeout` elapses with the
+        worker still alive (stuck in a device call, wedged), the stuck
+        pending futures — in-flight and queued — resolve with
+        `ShutdownTimeout` (never left hanging), `_worker` is KEPT so the
+        failure is observable, and close returns False. The pre-fix code
+        set `_worker = None` after a timed-out join, silently orphaning
+        every queued future."""
         with self._lock:
             self._stopping = True
             if not drain:
@@ -537,9 +713,29 @@ class ClusterServer:
             for r in dropped:
                 if r.future.cancel():
                     self.stats.add("cancelled")
-        if self._worker is not None:
-            self._worker.join(timeout)
-            self._worker = None
+        worker = self._worker
+        if worker is None:
+            return True
+        worker.join(timeout)
+        if worker.is_alive():
+            self.stats.add("failed_shutdowns")
+            with self._lock:
+                stuck = list(self._inflight)
+                self._inflight = []
+                for q in self._queues.values():
+                    stuck.extend(q)
+                    q.clear()
+                self._pending = 0
+                self._work.notify_all()
+                self._space.notify_all()
+            err = ShutdownTimeout(
+                f"worker still alive after close(timeout={timeout}) — "
+                "resolving its pending futures with this error")
+            for r in stuck:
+                _safe_set_exception(r.future, err)
+            return False
+        self._worker = None
+        return True
 
     def __enter__(self) -> "ClusterServer":
         return self

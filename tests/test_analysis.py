@@ -184,6 +184,69 @@ def test_concurrency_flags_lock_order_inversion():
     assert "lock-order" in _rules(vs)
 
 
+def _tree_violations(rel, src):
+    src = textwrap.dedent(src)
+    return concurrency.check_tree_rules(rel, src, ast.parse(src),
+                                        PragmaIndex(rel, src))
+
+
+def test_concurrency_flags_join_without_timeout():
+    vs = _tree_violations("src/repro/core/bad.py", """
+        def stop(worker):
+            worker.join()
+        def ok(worker):
+            worker.join(5.0)
+            worker.join(timeout=1.0)
+        def strings(parts):
+            return ",".join(parts)      # has args: not a thread join
+        """)
+    assert _rules(vs) == ["join-no-timeout"]
+    assert len(vs) == 1
+
+
+def test_concurrency_flags_retry_without_backoff():
+    vs = _tree_violations("src/repro/core/bad.py", """
+        def spin(fetch):
+            while True:
+                try:
+                    return fetch()
+                except OSError:
+                    pass                 # hot-spins, no delay
+        def bounded(fetch, n):
+            for attempt in range(n):
+                try:
+                    return fetch()
+                except OSError:
+                    continue             # bounded but still no delay
+        """)
+    assert _rules(vs) == ["retry-no-backoff"]
+    assert len(vs) == 2
+
+
+def test_concurrency_retry_with_backoff_is_clean():
+    vs = _tree_violations("src/repro/core/ok.py", """
+        import time
+        def retried(fetch, n):
+            for attempt in range(n):
+                try:
+                    return fetch()
+                except OSError:
+                    if attempt == n - 1:
+                        raise
+                time.sleep(0.1 * 2 ** attempt)
+        def consumer(q, stop):
+            while not stop.is_set():
+                try:
+                    return q.get_nowait()
+                except KeyError:
+                    stop.wait(0.05)      # cond wait counts as backoff
+        def plain_loop(items):
+            for item in items:           # not a retry loop: no try at all
+                yield item
+        """)
+    assert _rules(vs) == []
+
+
 # ------------------------------------------------------- real-tree gate ----
 def test_source_passes_clean_on_repo():
     """The gate invariant: zero unsuppressed source-pass violations on the

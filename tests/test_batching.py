@@ -1,5 +1,6 @@
 """Continuous-batching ClusterServer: async futures, interleaved traffic,
-multi-tenant round-robin, admission control, drain/cancel shutdown."""
+multi-tenant round-robin, admission control, drain/cancel shutdown, and
+worker supervision (deadlines, worker death fail/respawn, bounded close)."""
 
 import threading
 import time
@@ -13,6 +14,8 @@ from repro.core.alid import ALIDConfig, Clustering
 from repro.core.engine import fit
 from repro.data import auto_lsh_params, make_blobs_with_noise
 from repro.serve import ClusterServer, QueueFull
+from repro.serve.batching import (DeadlineExceeded, ShutdownTimeout,
+                                  WorkerDied)
 
 
 @pytest.fixture(scope="module")
@@ -196,6 +199,166 @@ def test_stats_and_occupancy(fitted):
     assert s["batches"] == 2 and s["slots_filled"] == 8
     assert server.stats.occupancy(4) == 1.0           # two full batches
     assert "occupancy" in server.stats.report(batch_slots=4)
+
+
+# ---------------------------------------------------------------------------
+# supervision: deadlines, worker death, bounded shutdown
+# ---------------------------------------------------------------------------
+
+def test_deadline_expired_request_resolves_with_error(fitted):
+    """A request whose deadline passes while queued gets DeadlineExceeded at
+    pack time instead of a stale label; fresh requests in the same batch
+    still serve."""
+    spec, res = fitted
+    server = ClusterServer(batch_slots=4, queue_limit=64, start=False)
+    server.add_tenant("default", res)
+    stale = server.submit(spec.points[0], deadline=0.01)
+    fresh = server.submit(spec.points[1])
+    time.sleep(0.05)
+    server.start()
+    with pytest.raises(DeadlineExceeded):
+        stale.result(timeout=30)
+    assert isinstance(fresh.result(timeout=30), int)
+    assert server.stats.expired == 1
+    assert server.stats.served == 1
+    server.close()
+
+
+def test_close_timeout_resolves_stuck_futures(fitted):
+    """THE pre-fix-failing regression: close(timeout) on a wedged worker
+    used to set `_worker = None` and silently orphan every queued future —
+    callers blocked in result() hung forever. Now the stuck futures resolve
+    with ShutdownTimeout promptly, close reports failure, and the dead
+    worker stays observable."""
+    spec, res = fitted
+    server = ClusterServer(batch_slots=2, queue_limit=64)
+    server.add_tenant("default", res)
+    tn = server._tenants[("default", 0)]
+    release = threading.Event()
+    orig = tn.assign_np
+
+    def wedged(q, valid):
+        release.wait(30.0)           # the worker hangs mid-compute
+        return orig(q, valid)
+
+    tn.assign_np = wedged
+    try:
+        futs = [server.submit(p) for p in spec.points[:6]]
+        t0 = time.perf_counter()
+        ok = server.close(drain=True, timeout=0.2)
+        assert ok is False
+        assert server.stats.failed_shutdowns == 1
+        assert server._worker is not None     # failure stays observable
+        for f in futs:                        # resolved promptly, not hung
+            with pytest.raises(ShutdownTimeout):
+                f.result(timeout=5)
+        assert time.perf_counter() - t0 < 5.0
+    finally:
+        release.set()
+    server._worker.join(10.0)
+    assert not server._worker.is_alive()
+
+
+def test_clean_close_returns_true(fitted):
+    spec, res = fitted
+    server = ClusterServer(batch_slots=4, queue_limit=64)
+    server.add_tenant("default", res)
+    server.submit(spec.points[0]).result(timeout=30)
+    assert server.close(drain=True, timeout=30) is True
+    assert server._worker is None
+    assert server.stats.failed_shutdowns == 0
+
+
+def test_worker_death_fail_mode_resolves_everything(fitted):
+    """on_worker_death='fail': an injected worker fault fails the server —
+    every queued future resolves with WorkerDied (nothing hangs) and later
+    submits raise immediately."""
+    spec, res = fitted
+    server = ClusterServer(batch_slots=4, queue_limit=64, start=False,
+                           on_worker_death="fail")
+    server.add_tenant("default", res)
+    futs = [server.submit(p) for p in spec.points[:5]]
+    server.inject_worker_fault()
+    server.start()
+    for f in futs:
+        with pytest.raises(WorkerDied):
+            f.result(timeout=30)
+    assert server.stats.worker_deaths == 1
+    assert server.stats.respawns == 0
+    with pytest.raises(RuntimeError, match="died"):
+        server.submit(spec.points[0])
+    server.close(timeout=10)
+
+
+def test_worker_death_respawn_keeps_serving(fitted):
+    """on_worker_death='respawn' (the default): the worker dies, a fresh one
+    takes over, and queued traffic keeps serving exact labels."""
+    spec, res = fitted
+    members = spec.points[res.labels >= 0][:6].astype(np.float32)
+    want = res.predict(members)
+    server = ClusterServer(batch_slots=4, queue_limit=64)
+    server.add_tenant("default", res)
+    assert server.submit(members[0]).result(timeout=30) == want[0]
+    server.inject_worker_fault()
+    got = [server.submit(q).result(timeout=30) for q in members]
+    np.testing.assert_array_equal(np.asarray(got, np.int32),
+                                  np.asarray(want, np.int32))
+    assert server.stats.worker_deaths == 1
+    assert server.stats.respawns == 1
+    server.close(timeout=10)
+
+
+def test_worker_death_midbatch_fails_inflight_serves_queued(fitted):
+    """A death while a batch is in flight: the popped (in-flight) futures
+    fail with WorkerDied — never hang — while requests still queued survive
+    and are served by the respawned worker."""
+    spec, res = fitted
+    members = spec.points[res.labels >= 0][:6].astype(np.float32)
+    want = res.predict(members)
+    server = ClusterServer(batch_slots=4, queue_limit=64, start=False)
+    server.add_tenant("default", res)
+    tn = server._tenants[("default", 0)]
+    orig, boom = tn.staging, [True]
+
+    def exploding(slots):
+        if boom:
+            boom.clear()
+            raise MemoryError("injected mid-batch death")
+        return orig(slots)
+
+    tn.staging = exploding
+    futs = [server.submit(q) for q in members]    # 4 in-flight + 2 queued
+    server.start()
+    for f in futs[:4]:
+        with pytest.raises(WorkerDied):
+            f.result(timeout=30)
+    got = [f.result(timeout=30) for f in futs[4:]]
+    np.testing.assert_array_equal(np.asarray(got, np.int32),
+                                  np.asarray(want[4:], np.int32))
+    assert server.stats.worker_deaths == 1
+    assert server.stats.respawns == 1
+    server.close(timeout=10)
+
+
+def test_respawn_budget_exhausts_to_failure(fitted):
+    """max_respawns bounds the supervision: one death too many flips the
+    server to failed instead of respawn-looping forever."""
+    spec, res = fitted
+    server = ClusterServer(batch_slots=4, queue_limit=64,
+                           on_worker_death="respawn", max_respawns=1)
+    server.add_tenant("default", res)
+    server.inject_worker_fault()
+    assert isinstance(server.submit(spec.points[0]).result(timeout=30), int)
+    assert server.stats.respawns == 1
+    server.inject_worker_fault()      # wakes the idle worker by itself
+    deadline = time.monotonic() + 10.0
+    while not server._failed and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert server._failed
+    assert server.stats.worker_deaths == 2 and server.stats.respawns == 1
+    with pytest.raises(RuntimeError, match="died"):
+        server.submit(spec.points[1])
+    server.close(timeout=10)
 
 
 # ---------------------------------------------------------------------------

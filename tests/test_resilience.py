@@ -1,0 +1,389 @@
+"""Fault-injection parity + crash/resume: RetryPolicy schedules, resilient
+source wrapping, FaultySource transient-error fits, checksum-guarded tiers
+(cache / scratch / source fallback), reader-death inline fallback, bounded
+reader joins, and round-level checkpoint resume — every chaos arm must land
+on labels BIT-IDENTICAL to the clean run (DESIGN.md §11)."""
+
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.alid import ALIDConfig, EngineSpec
+from repro.core.engine import fit, make_engine
+from repro.core.pipeline import ShardPipeline
+from repro.core.resilience import (CorruptionError, FaultySource,
+                                   InjectedFault, PipelineFaults, ReaderKilled,
+                                   ResilientSource, RetryPolicy, resilient)
+from repro.core.source import CountingSource, InMemorySource
+from repro.core.store import build_store_streamed, update_shard_points
+from repro.data import auto_lsh_params, make_blobs_with_noise
+
+# zero-delay policy: same retry semantics, no wall-clock in the test suite
+FAST_RETRY = RetryPolicy(attempts=4, base_delay=0.0, jitter=0.0)
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return make_blobs_with_noise(n_clusters=4, cluster_size=25, n_noise=80,
+                                 d=10, seed=7, overlap_pairs=0)
+
+
+@pytest.fixture(scope="module")
+def cfg(blobs):
+    lshp = auto_lsh_params(blobs.points, probe=128)
+    # exhaustive -> the loop peels noise too (~6 rounds on this data), so
+    # crash-at-round-2/3 lands mid-run with several checkpoints on disk
+    return ALIDConfig(a_cap=48, delta=48, lsh=lshp, seeds_per_round=16,
+                      max_rounds=20, exhaustive=True)
+
+
+@pytest.fixture(scope="module")
+def reference(blobs, cfg):
+    res = fit(blobs.points, cfg, jax.random.PRNGKey(0))
+    assert res.n_rounds > 3          # crash-at-round-2/3 must be mid-run
+    return res
+
+
+# ------------------------------------------------------------ RetryPolicy --
+def test_retry_schedule_is_deterministic_and_bounded():
+    p = RetryPolicy(attempts=5, base_delay=0.1, max_delay=0.35, jitter=0.25,
+                    seed=3)
+    d1, d2 = p.delays(), p.delays()
+    assert d1 == d2                  # seeded per call: reproducible
+    assert len(d1) == 4
+    # exponential then capped, jitter within +/-25%
+    caps = [0.1, 0.2, 0.35, 0.35]
+    for got, cap in zip(d1, caps):
+        assert cap * 0.75 <= got <= cap * 1.25
+
+
+def test_retry_call_retries_transient_then_succeeds():
+    p = RetryPolicy(attempts=4, base_delay=0.1, jitter=0.25, seed=0)
+    calls, sleeps, retries = [], [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return 42
+
+    out = p.call(flaky, on_retry=lambda a, e: retries.append(a),
+                 sleep=sleeps.append)
+    assert out == 42
+    assert len(calls) == 3
+    assert retries == [0, 1]
+    assert sleeps == p.delays()[:2]  # slept exactly the seeded schedule
+
+
+def test_retry_call_exhausts_and_raises():
+    calls = []
+
+    def dead():
+        calls.append(1)
+        raise OSError("persistent")
+
+    with pytest.raises(OSError, match="persistent"):
+        FAST_RETRY.call(dead, sleep=lambda d: None)
+    assert len(calls) == FAST_RETRY.attempts
+
+
+def test_retry_call_never_masks_bugs():
+    calls = []
+
+    def bug():
+        calls.append(1)
+        raise ValueError("not transient")
+
+    with pytest.raises(ValueError):
+        FAST_RETRY.call(bug, sleep=lambda d: None)
+    assert len(calls) == 1           # non-retryable propagates immediately
+
+
+def test_resilient_wrap_is_idempotent(blobs):
+    src = InMemorySource(blobs.points)
+    wrapped = resilient(src, FAST_RETRY)
+    assert isinstance(wrapped, ResilientSource)
+    assert resilient(wrapped, FAST_RETRY) is wrapped
+    assert resilient(src, None) is src
+    np.testing.assert_array_equal(wrapped.get_chunk(3, 5),
+                                  src.get_chunk(3, 5))
+    np.testing.assert_array_equal(wrapped.sample(np.array([1, 7, 2])),
+                                  src.sample(np.array([1, 7, 2])))
+
+
+# ------------------------------------------------------------ FaultySource --
+def test_faulty_source_budget_guarantees_success(blobs):
+    """rate=1.0 still succeeds through retries: fail_times bounds the
+    consecutive failures per logical request below the attempt budget."""
+    faulty = FaultySource(InMemorySource(blobs.points), rate=1.0, seed=0,
+                          fail_times=2)
+    wrapped = ResilientSource(faulty, FAST_RETRY, sleep=lambda d: None)
+    got = wrapped.get_chunk(0, 8)
+    np.testing.assert_array_equal(got, blobs.points[:8])
+    assert faulty.injected == 2 and wrapped.retries == 2
+
+
+def test_faulty_source_schedule_is_seeded(blobs):
+    def run(seed):
+        f = FaultySource(InMemorySource(blobs.points), rate=0.5, seed=seed)
+        hits = []
+        for i in range(20):
+            try:
+                f.get_chunk(i, 4)
+                hits.append(0)
+            except InjectedFault:
+                hits.append(1)
+        return hits
+
+    assert run(1) == run(1)
+    assert run(1) != run(2)
+
+
+def test_streamed_fit_under_transient_faults_is_bit_identical(blobs, cfg,
+                                                              reference):
+    """THE tentpole oracle: ~10% injected transient read errors across every
+    source touch point, labels bit-identical to the clean run."""
+    espec = EngineSpec(engine="streamed", n_shards=5)
+    faulty = FaultySource(InMemorySource(blobs.points), rate=0.1, seed=1)
+    res = fit(faulty, cfg._replace(spec=espec), jax.random.PRNGKey(0),
+              retry_policy=FAST_RETRY)
+    np.testing.assert_array_equal(reference.labels, res.labels)
+    np.testing.assert_allclose(reference.densities, res.densities, rtol=1e-6)
+    assert res.n_rounds == reference.n_rounds
+    assert faulty.injected > 0       # the chaos actually fired
+
+
+# ------------------------------------------------- checksum + tier chain --
+@pytest.fixture()
+def store(blobs, cfg, tmp_path):
+    src = CountingSource(InMemorySource(blobs.points))
+    st = build_store_streamed(src, cfg.lsh, jax.random.PRNGKey(3),
+                              n_shards=5, scratch_dir=str(tmp_path))
+    yield st
+    st.scratch.close()
+
+
+def test_scratch_corruption_falls_back_to_source_and_heals(store):
+    pipe = ShardPipeline(store, cache_bytes=0, retry=FAST_RETRY)
+    clean = pipe.fetch_bundle(2)[0].copy()
+    store.scratch.corrupt(2)
+    with pytest.raises(CorruptionError):
+        store.scratch.read(2)        # the slab really is poisoned
+    healed = pipe.fetch_bundle(2)[0]
+    np.testing.assert_array_equal(healed, clean)
+    assert pipe.stats.corruptions == 1
+    assert pipe.stats.tier_fallbacks == 1
+    assert pipe.stats.source_reads == 1
+    # the fallback rewrote the slab: next fetch reads scratch cleanly
+    pipe.fetch_bundle(2)
+    assert pipe.stats.corruptions == 1
+    np.testing.assert_array_equal(store.scratch.read(2)[:clean.shape[0]],
+                                  clean)
+
+
+def test_cache_corruption_drops_entry_and_refetches(store):
+    pipe = ShardPipeline(store, cache_bytes=1 << 30, retry=FAST_RETRY)
+    first = pipe.fetch_bundle(1)
+    # poison the resident cached bytes in place (bit flip, crc now stale)
+    entry = pipe.cache._entries[1][2][0]
+    entry[0, 0] = np.float32(np.float64(entry[0, 0]) + 1.0) \
+        if entry[0, 0] < 1e6 else 0.0
+    again = pipe.fetch_bundle(1)
+    assert again is not first
+    assert pipe.cache.corrupt_evictions == 1
+    assert pipe.stats.corruptions == 1
+    np.testing.assert_array_equal(
+        again[0][:store.shard_count(1)],
+        store.source.sample(store.global_idx[1, :store.shard_count(1)]))
+
+
+def test_mutated_shard_corruption_is_unrecoverable(store):
+    """After update_shard_points the scratch slab is the SOLE owner of the
+    bytes — the source still holds pre-mutation rows, so corruption there
+    must surface, never silently fall back to stale data."""
+    pipe = ShardPipeline(store, cache_bytes=0, retry=FAST_RETRY)
+    rows = pipe.fetch_bundle(1)[0].copy()
+    rows[0, 0] += 5.0
+    update_shard_points(store, 1, rows)
+    store.scratch.corrupt(1)
+    with pytest.raises(CorruptionError, match="no clean tier"):
+        pipe.fetch_bundle(1)
+
+
+def test_fit_with_forced_scratch_corruption_is_bit_identical(blobs, cfg,
+                                                             reference):
+    espec = EngineSpec(engine="streamed", n_shards=5, cache_bytes=0)
+    engine = make_engine(espec)
+    engine.faults = PipelineFaults(corrupt_rate=0.3, seed=2)
+    try:
+        res = fit(blobs.points, cfg._replace(spec=espec),
+                  jax.random.PRNGKey(0), engine=engine,
+                  retry_policy=FAST_RETRY)
+        np.testing.assert_array_equal(reference.labels, res.labels)
+        assert res.n_rounds == reference.n_rounds
+        assert engine.faults.corrupted > 0
+        assert engine.stats.corruptions == engine.faults.corrupted
+        assert engine.stats.tier_fallbacks == engine.faults.corrupted
+    finally:
+        engine.close()
+
+
+# ------------------------------------------------------ prefetch reader --
+def test_reader_death_falls_back_inline_bit_identical(store):
+    faults = PipelineFaults(kill_reader_at=1)
+    pipe = ShardPipeline(store, cache_bytes=0, prefetch_depth=2,
+                         retry=FAST_RETRY, faults=faults)
+    sync = ShardPipeline(store, cache_bytes=0, retry=FAST_RETRY)
+    routed = [3, 0, 4, 2]
+    seen = []
+    for pos, s, dev in pipe.stream(routed):
+        seen.append((pos, s))
+        np.testing.assert_array_equal(np.asarray(dev[0]),
+                                      sync.fetch_bundle(s)[0])
+    assert seen == list(enumerate(routed))   # order preserved through death
+    assert faults.reader_kills == 1
+    assert pipe.stats.reader_deaths == 1
+    assert pipe.stats.shards_streamed == len(routed)
+
+
+def test_reader_death_does_not_mask_real_errors(store):
+    pipe = ShardPipeline(store, cache_bytes=0, prefetch_depth=2,
+                         retry=FAST_RETRY)
+    with pytest.raises(IndexError):
+        list(pipe.stream([0, store.n_shards + 17]))
+
+
+def test_fit_with_reader_kill_is_bit_identical(blobs, cfg, reference):
+    espec = EngineSpec(engine="streamed", n_shards=5, cache_bytes=0,
+                       prefetch_depth=2)
+    engine = make_engine(espec)
+    engine.faults = PipelineFaults(kill_reader_at=3)
+    try:
+        res = fit(blobs.points, cfg._replace(spec=espec),
+                  jax.random.PRNGKey(0), engine=engine,
+                  retry_policy=FAST_RETRY)
+        np.testing.assert_array_equal(reference.labels, res.labels)
+        assert res.n_rounds == reference.n_rounds
+        assert engine.faults.reader_kills == 1
+        assert engine.stats.reader_deaths == 1
+    finally:
+        engine.close()
+
+
+def test_wedged_reader_join_is_bounded(store):
+    """Abandoning a stream whose producer is stuck must not hang teardown:
+    the bounded join gives up, warns, and counts the abandoned reader."""
+    pipe = ShardPipeline(store, cache_bytes=0, prefetch_depth=2,
+                         retry=FAST_RETRY, join_timeout=0.2)
+    release = threading.Event()
+    orig = pipe.fetch_bundle
+
+    def wedged(s):
+        if s == 1:
+            release.wait(30.0)       # producer stalls on shard 1
+        return orig(s)
+
+    pipe.fetch_bundle = wedged
+    try:
+        gen = pipe.stream([0, 1, 2])
+        next(gen)                    # shard 0 arrives; producer wedges on 1
+        with pytest.warns(RuntimeWarning, match="abandon"):
+            gen.close()              # finally: bounded join, not forever
+        assert pipe.stats.readers_abandoned == 1
+    finally:
+        release.set()
+
+
+# ------------------------------------------------------- crash + resume --
+def test_crash_then_resume_is_bit_identical(blobs, cfg, reference, tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    with pytest.raises(RuntimeError, match="injected crash at round 2"):
+        fit(blobs.points, cfg, jax.random.PRNGKey(0), checkpoint_dir=ckpt,
+            crash_at_round=2)
+    res = fit(blobs.points, cfg, jax.random.PRNGKey(0), checkpoint_dir=ckpt,
+              resume=True)
+    np.testing.assert_array_equal(reference.labels, res.labels)
+    np.testing.assert_allclose(reference.densities, res.densities, rtol=1e-6)
+    assert res.n_rounds == reference.n_rounds
+    assert res.n_clusters == reference.n_clusters
+
+
+def test_crash_resume_streamed_engine(blobs, cfg, reference, tmp_path):
+    espec = EngineSpec(engine="streamed", n_shards=5)
+    ckpt = str(tmp_path / "ckpt")
+    scfg = cfg._replace(spec=espec)
+    with pytest.raises(RuntimeError, match="injected crash"):
+        fit(blobs.points, scfg, jax.random.PRNGKey(0), checkpoint_dir=ckpt,
+            crash_at_round=3)
+    res = fit(blobs.points, scfg, jax.random.PRNGKey(0), checkpoint_dir=ckpt,
+              resume=True)
+    np.testing.assert_array_equal(reference.labels, res.labels)
+    assert res.n_rounds == reference.n_rounds
+
+
+def test_resume_with_empty_dir_runs_from_scratch(blobs, cfg, reference,
+                                                 tmp_path):
+    res = fit(blobs.points, cfg, jax.random.PRNGKey(0),
+              checkpoint_dir=str(tmp_path / "none"), resume=True)
+    np.testing.assert_array_equal(reference.labels, res.labels)
+    assert res.n_rounds == reference.n_rounds
+
+
+def test_resume_requires_checkpoint_dir(blobs, cfg):
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        fit(blobs.points, cfg, jax.random.PRNGKey(0), resume=True)
+
+
+def test_resume_rejects_mismatched_dataset(blobs, cfg, tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    with pytest.raises(RuntimeError, match="injected crash"):
+        fit(blobs.points, cfg, jax.random.PRNGKey(0), checkpoint_dir=ckpt,
+            crash_at_round=2)
+    with pytest.raises(ValueError, match="n="):
+        fit(blobs.points[:-3], cfg, jax.random.PRNGKey(0),
+            checkpoint_dir=ckpt, resume=True)
+
+
+def test_corrupt_checkpoint_falls_back_to_previous_step(blobs, cfg,
+                                                        reference, tmp_path):
+    """A torn/corrupt latest checkpoint degrades to the step before it (crc
+    catch + warning) instead of resuming from poisoned state."""
+    from repro.checkpoint.manager import list_checkpoints
+    ckpt = str(tmp_path / "ckpt")
+    with pytest.raises(RuntimeError, match="injected crash"):
+        fit(blobs.points, cfg, jax.random.PRNGKey(0), checkpoint_dir=ckpt,
+            crash_at_round=3)
+    steps = list_checkpoints(ckpt)
+    assert len(steps) >= 2           # rounds 1 and 2 both checkpointed
+    # flip bytes in the newest step's payload, keeping the zip valid — the
+    # manifest crc is now stale, exactly what torn storage looks like
+    npz = tmp_path / "ckpt" / f"step_{steps[-1]:08d}" / "arrays.npz"
+    with np.load(str(npz)) as z:
+        arrays = {k: np.array(z[k]) for k in z.files}
+    arrays["labels"][0] ^= 1
+    np.savez(str(npz), **arrays)
+    with pytest.warns(RuntimeWarning, match="unusable"):
+        res = fit(blobs.points, cfg, jax.random.PRNGKey(0),
+                  checkpoint_dir=ckpt, resume=True)
+    np.testing.assert_array_equal(reference.labels, res.labels)
+    assert res.n_rounds == reference.n_rounds
+
+
+def test_checkpoint_restore_detects_corruption(tmp_path):
+    from repro.checkpoint.manager import (CheckpointCorruption,
+                                          restore_checkpoint_tree,
+                                          save_checkpoint)
+    tree = {"w": np.arange(12, dtype=np.float32), "step": np.int64(7)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    npz = tmp_path / "step_00000001" / "arrays.npz"
+    with np.load(str(npz)) as z:
+        arrays = {k: np.array(z[k]) for k in z.files}
+    arrays["w"][3] += 1.0
+    np.savez(str(npz), **arrays)
+    with pytest.raises(CheckpointCorruption, match="crc32"):
+        restore_checkpoint_tree(str(tmp_path), 1)
+    # verify=False loads the bytes as-is (forensics escape hatch)
+    _, loaded = restore_checkpoint_tree(str(tmp_path), 1, verify=False)
+    assert loaded["w"][3] == 4.0
