@@ -4,18 +4,55 @@ roofline summary (reads dry-run artifacts if present).
 
     PYTHONPATH=src python -m benchmarks.run          # quick (CI-sized)
     PYTHONPATH=src python -m benchmarks.run --full
+    PYTHONPATH=src python -m benchmarks.run --device-report
+                                        # kernel + roofline device-perf only
 """
 
 import argparse
+import json
+import os
 import sys
 import time
+
+
+def device_report() -> None:
+    """The merged device-perf report: the per-op half (kernel_bench's
+    fused/unfused timings + analytic flops/bytes/roofline placement, written
+    to BENCH_kernels.json v2) and the per-cell half (roofline.py's program
+    rows from dry-run artifacts, when present), one JSON."""
+    from benchmarks import kernel_bench
+    from benchmarks.roofline import HBM, PEAK, build_rows
+
+    kernel_bench.main(quick=True)
+    with open("BENCH_kernels.json") as f:
+        kernels = json.load(f)
+    try:
+        cells = build_rows("single")
+    except Exception as e:                  # no dry-run artifacts staged
+        cells = [{"status": "unavailable", "note": type(e).__name__}]
+    out = {"model": {"peak_flops": PEAK, "hbm_bytes_s": HBM},
+           "kernels": kernels, "cells": cells}
+    path = os.path.join("experiments", "device_perf.json")
+    os.makedirs("experiments", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    n_warn = len(kernels.get("warnings", []))
+    print(f"device_report/written,0,{path};ops={len(kernels['fused_ops'])};"
+          f"warnings={n_warn}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--device-report", action="store_true",
+                    help="only the kernel + roofline device-perf report")
     args = ap.parse_args()
     quick = not args.full
+
+    if args.device_report:
+        print("name,us_per_call,derived")
+        device_report()
+        return
 
     print("name,us_per_call,derived")
     t0 = time.time()

@@ -122,6 +122,22 @@ def _case_embedding_bag():
             16), {}
 
 
+def _case_lid_sweep():
+    r = _rng()
+    x = np.zeros((32,), np.float32)
+    x[0] = 1.0
+    # n_iters/converged as 0-d ndarrays so _eval_shape traces them (the op
+    # treats them as dynamic carry, not statics)
+    return (_f32(r.normal(size=(32, 8))),
+            np.arange(32, dtype=np.int32),
+            np.ones((32,), bool),
+            x,
+            np.zeros((32,), np.float32),
+            np.asarray(0, np.int32),
+            np.asarray(False),
+            0.5), {"n_steps": 8, "max_iters": 32, "tol": 1e-5}
+
+
 def _case_lsh_hash():
     r = _rng()
     return (_f32(r.normal(size=(32, 8))),
@@ -140,6 +156,7 @@ OP_CASES = (
     OpCase("segment_matmul", _case_segment_matmul),
     OpCase("embedding_bag", _case_embedding_bag),
     OpCase("lsh_hash", _case_lsh_hash),
+    OpCase("lid_sweep", _case_lid_sweep),
 )
 
 
@@ -213,9 +230,13 @@ def _block_bytes(spec, shape, dtype) -> int:
 
 def estimate_vmem_bytes(record: dict) -> int:
     total = 0
-    for spec, (shape, dtype) in zip(record["in_specs"], record["in_avals"]):
+    # a pallas_call with no grid/BlockSpecs stages every operand whole
+    # (lid_sweep's single-program layout) — fall back to the avals
+    in_specs = record["in_specs"] or [None] * len(record["in_avals"])
+    out_specs = record["out_specs"] or [None] * len(record["out_shape"])
+    for spec, (shape, dtype) in zip(in_specs, record["in_avals"]):
         total += _block_bytes(spec, shape, dtype)
-    for spec, sds in zip(record["out_specs"], record["out_shape"]):
+    for spec, sds in zip(out_specs, record["out_shape"]):
         total += _block_bytes(spec, tuple(sds.shape), sds.dtype)
     for s in record["scratch"]:
         shape = tuple(getattr(s, "shape", ()) or ())
@@ -481,6 +502,58 @@ def _poison_embedding_bag(backend: str) -> Optional[str]:
     return None
 
 
+def _poison_lid_sweep(backend: str, refresh_every: int,
+                      finite: bool) -> Optional[str]:
+    """Masked-off v_beta rows must never reach valid-slot outputs. With the
+    periodic refresh OFF the per-step column is pure selection (`where`
+    kills NaN/Inf pads); with refresh ON the pad columns fold into the
+    masked matvec as weight-0 terms — 0 * finite == 0 exactly but
+    0 * NaN is NaN, so that contract (like affinity_matvec's c side) is
+    zero-weight-doesn't-matter, and its poison is large finite garbage."""
+    from repro.kernels import ops
+    r = np.random.default_rng(3)
+    n_valid, pad, d = 24, 8, 8
+    cap = n_valid + pad
+    v = _f32(r.normal(size=(cap, d)))
+    idx = np.arange(cap, dtype=np.int32)
+    mask = np.zeros((cap,), bool)
+    mask[:n_valid] = True
+    clean = v.copy()
+    clean[n_valid:] = 0.0
+    dirty = v.copy()
+    if finite:
+        dirty[n_valid:] = 1e6
+    else:
+        dirty[n_valid:n_valid + 4] = np.nan
+        dirty[n_valid + 4:] = np.inf
+    k = 0.5
+    x = np.zeros((cap,), np.float32)
+    x[0] = 1.0
+    ax = np.zeros((cap,), np.float32)
+    dist = np.sqrt(((clean[:n_valid] - clean[0]) ** 2).sum(-1))
+    ax[:n_valid] = np.exp(-k * dist)
+    ax[0] = 0.0
+    kw = dict(n_steps=16, max_iters=64, tol=1e-5,
+              refresh_every=refresh_every, backend=backend)
+    it0, cv0 = np.asarray(0, np.int32), np.asarray(False)
+    base = ops.lid_sweep(clean, idx, mask, x, ax, it0, cv0, k, **kw)
+    out = ops.lid_sweep(dirty, idx, mask, x, ax, it0, cv0, k, **kw)
+    if int(base[2]) < 2:
+        return "scenario converged immediately — poison never exercised"
+    for name, b_, o_ in zip(("x", "ax", "n_iters", "converged"), base, out):
+        if not _bits_equal(b_, o_):
+            return f"poisoned pad rows changed {name} on valid slots"
+    return None
+
+
+def _poison_lid_sweep_pad(backend: str) -> Optional[str]:
+    return _poison_lid_sweep(backend, refresh_every=0, finite=False)
+
+
+def _poison_lid_sweep_refresh(backend: str) -> Optional[str]:
+    return _poison_lid_sweep(backend, refresh_every=2, finite=True)
+
+
 # name -> check(backend) -> error string or None; importable by the tests
 POISON_CHECKS: dict[str, Callable[[str], Optional[str]]] = {
     "affinity_matvec_q_side": _poison_affinity_matvec_q,
@@ -491,6 +564,8 @@ POISON_CHECKS: dict[str, Callable[[str], Optional[str]]] = {
     "flash_attention_kv_start": _poison_flash_attention_kv_start,
     "segment_matmul": _poison_segment_matmul,
     "embedding_bag": _poison_embedding_bag,
+    "lid_sweep_pad_rows": _poison_lid_sweep_pad,
+    "lid_sweep_refresh_pad": _poison_lid_sweep_refresh,
 }
 
 POISON_BACKENDS = ("ref", "interpret")

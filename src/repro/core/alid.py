@@ -80,6 +80,16 @@ class EngineSpec(NamedTuple):
               kernels emulated as jax ops; the engine-parity suite runs
               interpret-vs-ref fits and asserts bit-identical labels). See
               `repro.kernels.ops.resolve_backend`.
+    dtype:    point STORAGE dtype — "float32" (default) or "bfloat16".
+              bf16 halves the memory/bandwidth of every (n, d) / (cap, d)
+              tensor (replicated points, store shards, v_beta support
+              blocks); the LID accumulators (x, ax, pi) and every distance/
+              affinity contraction stay f32 (`lid_sweep`'s mixed-precision
+              contract). Engines cast points to the storage dtype BEFORE
+              LSH hashing and k estimation, so replicated / sharded /
+              streamed fits see identical bf16 bits and stay label-parity
+              with each other. Results (`Clustering` supports) are always
+              exported as f32.
     """
     engine: str = "replicated"
     n_shards: int = 0
@@ -89,6 +99,11 @@ class EngineSpec(NamedTuple):
     prefetch_depth: int = 2
     scratch_dir: Optional[str] = ""
     backend: str = "auto"
+    dtype: str = "float32"
+
+
+# re-exported so config-level callers don't reach into the kernel layer
+from repro.kernels.ops import DTYPES, storage_dtype  # noqa: E402,F401
 
 
 class ALIDConfig(NamedTuple):
@@ -110,6 +125,8 @@ class ALIDConfig(NamedTuple):
     min_bucket: int = 5           # paper: seed from buckets with > 5 items
     exhaustive: bool = False      # peel until no active point remains
     spec: EngineSpec = EngineSpec()
+    sweep_steps: int = 8          # LID iterations fused per lid_sweep launch
+    refresh_every: int = 0        # in-sweep exact Ax refresh period (0 = off)
 
     @property
     def cap(self) -> int:
@@ -119,6 +136,11 @@ class ALIDConfig(NamedTuple):
     def backend(self) -> str:
         """Kernel backend (EngineSpec.backend — one knob for every op)."""
         return self.spec.backend
+
+    @property
+    def dtype(self) -> str:
+        """Point storage dtype (EngineSpec.dtype): float32 | bfloat16."""
+        return self.spec.dtype
 
 
 class SeedResult(NamedTuple):
@@ -322,7 +344,9 @@ def alid_from_seed(
     def body(carry):
         state, c, _, overflow = carry
         state = lid_solve(state, k, max_iters=cfg.t_lid, tol=cfg.tol, p=cfg.p,
-                          backend=cfg.backend)
+                          backend=cfg.backend, sweep_steps=cfg.sweep_steps,
+                          refresh_every=cfg.refresh_every,
+                          support_eps=cfg.support_eps)
         roi = estimate_roi(state.v_beta, state.beta_idx, state.beta_mask, state.x,
                            k, c, r0=cfg.r0, p=cfg.p, support_eps=cfg.support_eps,
                            backend=cfg.backend)
@@ -346,7 +370,9 @@ def alid_from_seed(
         cond, body, (state0, jnp.int32(1), jnp.array(False), jnp.array(False)))
     # final polish: converge LID on the last beta
     state = lid_solve(state, k, max_iters=cfg.t_lid, tol=cfg.tol, p=cfg.p,
-                      backend=cfg.backend)
+                      backend=cfg.backend, sweep_steps=cfg.sweep_steps,
+                      refresh_every=cfg.refresh_every,
+                      support_eps=cfg.support_eps)
 
     sup = state.beta_mask & (state.x > cfg.support_eps)
     return SeedResult(

@@ -54,7 +54,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.alid import (ALIDConfig, Clustering, EngineSpec, SeedResult,
-                             _sample_seeds, alid_from_seed)
+                             _sample_seeds, alid_from_seed, storage_dtype)
 from repro.core.affinity import estimate_k
 from repro.core.civs import (_ROUTE_EPS, compact_support, finalize_retrieval,
                              init_retrieval_carry, rebuild_support,
@@ -258,8 +258,10 @@ class ReplicatedEngine(_EngineBase):
 
     def build(self, points, cfg, rng):
         self._setup_k_from_points(points, cfg)
-        self._points = points
-        self._tables = build_lsh(points, cfg.lsh, rng, cfg.backend)
+        # round to the storage dtype BEFORE hashing (k estimation above
+        # samples the unrounded source, identically across engines)
+        self._points = jnp.asarray(points, storage_dtype(cfg.dtype))
+        self._tables = build_lsh(self._points, cfg.lsh, rng, cfg.backend)
         self._bsizes = bucket_sizes(self._tables)
 
     def run_round(self, active, seeds, seed_valid):
@@ -280,7 +282,7 @@ class ShardedEngine(_EngineBase):
         self._setup_k_from_points(points, cfg)
         self._store = build_store(points, cfg.lsh, rng,
                                   n_shards=max(1, self.spec.n_shards),
-                                  backend=cfg.backend)
+                                  backend=cfg.backend, dtype=cfg.dtype)
         self._bsizes = global_bucket_sizes(self._store)
 
     def run_round(self, active, seeds, seed_valid):
@@ -312,12 +314,12 @@ class MeshEngine(_EngineBase):
         n_data = self.ctx.n_data
         assert cfg.seeds_per_round % n_data == 0, \
             (cfg.seeds_per_round, n_data)
-        self._points = points
+        self._points = jnp.asarray(points, storage_dtype(cfg.dtype))
         n_shards = self.spec.n_shards
         if n_shards > 0:
             assert n_shards % n_data == 0, (n_shards, n_data)
             store = build_store(points, cfg.lsh, rng, n_shards=n_shards,
-                                backend=cfg.backend)
+                                backend=cfg.backend, dtype=cfg.dtype)
             self._store = jax.device_put(store, jax.tree.map(
                 lambda s: NamedSharding(self.ctx.mesh, s), store_specs(store),
                 is_leaf=lambda s: isinstance(s, P)))
@@ -325,7 +327,7 @@ class MeshEngine(_EngineBase):
             self._tables = None
         else:
             self._store = None
-            self._tables = build_lsh(points, cfg.lsh, rng, cfg.backend)
+            self._tables = build_lsh(self._points, cfg.lsh, rng, cfg.backend)
             self._bsizes = bucket_sizes(self._tables)
 
     def run_round(self, active, seeds, seed_valid):
@@ -352,8 +354,11 @@ class MeshEngine(_EngineBase):
 # what vmap-of-while_loop does implicitly — so the math (and therefore the
 # labels, on tie-free data) is identical to the in-jit engines.
 
-@functools.partial(jax.jit, static_argnames=("cap",))
-def _init_states_batch(seed_rows, seeds, cap: int):
+@functools.partial(jax.jit, static_argnames=("cap", "dtype"))
+def _init_states_batch(seed_rows, seeds, cap: int, dtype: str = "float32"):
+    # storage rounding is idempotent: slab rows are already bf16-rounded
+    # (exact recast) and raw source rows round here — same bits either way
+    seed_rows = seed_rows.astype(storage_dtype(dtype))
     return jax.vmap(lambda v, s: init_state_from(v, s, cap))(seed_rows, seeds)
 
 
@@ -361,7 +366,10 @@ def _init_states_batch(seed_rows, seeds, cap: int):
 def _lid_batch(state, k, cfg: ALIDConfig):
     return jax.vmap(lambda s: lid_solve(s, k, max_iters=cfg.t_lid,
                                         tol=cfg.tol, p=cfg.p,
-                                        backend=cfg.backend))(state)
+                                        backend=cfg.backend,
+                                        sweep_steps=cfg.sweep_steps,
+                                        refresh_every=cfg.refresh_every,
+                                        support_eps=cfg.support_eps))(state)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -386,22 +394,28 @@ def _hash_queries_batch(sup_v, proj, bias, seg_len: float,
         lambda q: hash_queries(q, proj, bias, seg_len, backend))(sup_v)
 
 
-@functools.partial(jax.jit, static_argnames=("b", "delta", "d"))
-def _init_carry_batch(b: int, delta: int, d: int):
+@functools.partial(jax.jit, static_argnames=("b", "delta", "d", "dtype"))
+def _init_carry_batch(b: int, delta: int, d: int, dtype: str = "float32"):
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (b,) + x.shape),
-                        init_retrieval_carry(delta, d))
+                        init_retrieval_carry(delta, d, storage_dtype(dtype)))
 
 
-@functools.partial(jax.jit, static_argnames=("probe", "p", "backend"))
+@functools.partial(jax.jit, static_argnames=("probe", "p", "backend",
+                                             "dtype"))
 def _stream_chunk_batch(carry, pts_s, sk, pm, gmap, keys, starts, lo, hi,
                         center, radius, active, sup_idx, sup_slot_mask,
-                        touch, probe: int, p: float, backend: str = "auto"):
+                        touch, probe: int, p: float, backend: str = "auto",
+                        dtype: str = "float32"):
     """One device-resident shard folded into every seed lane's carry.
 
     The shard leaves (pts_s/sk/pm/gmap) broadcast; everything per-seed maps.
     `touch` replays the lax.cond-under-vmap select of `_retrieve_sharded`:
     lanes whose ROI ball misses the shard ball keep their carry untouched.
+    The np.float32 slab holds storage-rounded values, so the astype to the
+    storage dtype is exact (matching ShardedEngine's `store.shards` dtype).
     """
+    pts_s = pts_s.astype(storage_dtype(dtype))
+
     def one(carry1, keys1, st1, lo1, hi1, cen1, rad1, sidx1, smask1, t1):
         new = retrieve_chunk(carry1, pts_s, sk, pm, gmap, keys1, st1, lo1,
                              hi1, cen1, rad1, active, sidx1, smask1,
@@ -497,7 +511,8 @@ class StreamedEngine(_EngineBase):
         self._store = build_store_streamed(
             source, cfg.lsh, rng, n_shards=max(1, self.spec.n_shards or 8),
             chunk_size=self.spec.chunk_size,
-            scratch_dir=self.spec.scratch_dir, backend=cfg.backend)
+            scratch_dir=self.spec.scratch_dir, backend=cfg.backend,
+            dtype=cfg.dtype)
         self._bsizes = jnp.asarray(self._store.bucket_sizes)
         self._pipeline = ShardPipeline(
             self._store, cache_bytes=self.spec.cache_bytes,
@@ -584,7 +599,8 @@ class StreamedEngine(_EngineBase):
         b, d = int(seeds.shape[0]), store.dim
         probe = cfg.lsh.probe
 
-        state = _init_states_batch(self._seed_rows(seeds), seeds, cfg.cap)
+        state = _init_states_batch(self._seed_rows(seeds), seeds, cfg.cap,
+                                   cfg.dtype)
         c_np = np.ones((b,), np.int64)
         done_np = np.zeros((b,), bool)
         overflow_np = np.zeros((b,), bool)
@@ -604,7 +620,7 @@ class StreamedEngine(_EngineBase):
             # so don't let their stale ROIs force shard uploads
             touch = self._route(roi, cfg.p) & lane_np[:, None]
             routed = np.flatnonzero(touch.any(axis=0))
-            carry = _init_carry_batch(b, cfg.delta, d)
+            carry = _init_carry_batch(b, cfg.delta, d, cfg.dtype)
             if routed.size:
                 # global probe windows, carved on host from the host tables
                 # — ROUTED shards only: an untouched shard holds no point
@@ -635,7 +651,8 @@ class StreamedEngine(_EngineBase):
                         jnp.asarray(st[pos]), jnp.asarray(lo[pos]),
                         jnp.asarray(hi[pos]), roi.center, roi.radius,
                         active, sup_idx, sup_mask,
-                        jnp.asarray(touch[:, s]), probe, cfg.p, cfg.backend)
+                        jnp.asarray(touch[:, s]), probe, cfg.p, cfg.backend,
+                        cfg.dtype)
                     self.stats.add("compute_s", time.perf_counter() - t0)
                 del pts_s, sk, pm, gmap, bundle, st, lo, hi
             psi_idx, psi_valid, psi_v, n_cand = _finalize_batch(carry)

@@ -56,11 +56,50 @@ def init_state(points: jax.Array, seed_idx: jax.Array, cap: int) -> LIDState:
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters", "tol", "p",
-                                             "backend"))
+                                             "backend", "sweep_steps",
+                                             "refresh_every", "support_eps"))
 def lid_solve(state: LIDState, k: jax.Array, max_iters: int = 200,
-              tol: float = 1e-5, p: float = 2.0,
-              backend: str = "auto") -> LIDState:
-    """Run LID to convergence within the (masked) local range."""
+              tol: float = 1e-5, p: float = 2.0, backend: str = "auto",
+              sweep_steps: int = 8, refresh_every: int = 0,
+              support_eps: float = 1e-6) -> LIDState:
+    """Run LID to convergence within the (masked) local range.
+
+    Implemented as a while over `ops.lid_sweep` chunks: each chunk runs up
+    to `sweep_steps` fused iterations (one kernel launch on the Pallas
+    path), and the outer loop re-checks `~converged & (n_iters < max_iters)`
+    between chunks. Because the sweep's per-step guard is the same
+    predicate, the executed-iteration sequence — and therefore x/ax/n_iters
+    — is bit-identical to the historical single-step while_loop
+    (`lid_solve_unfused`) on the ref backend. `sweep_steps <= 0` means one
+    full-`max_iters` sweep. `refresh_every=M > 0` opts into the in-sweep
+    exact Ax recompute every M iterations (recommended with bf16 storage).
+    """
+    n_steps = min(sweep_steps, max_iters) if sweep_steps > 0 else max_iters
+
+    def cond(s: LIDState):
+        return (~s.converged) & (s.n_iters < max_iters)
+
+    def body(s: LIDState):
+        x, ax, it, cv = ops.lid_sweep(
+            s.v_beta, s.beta_idx, s.beta_mask, s.x, s.ax, s.n_iters,
+            s.converged, k, n_steps=n_steps, max_iters=max_iters, tol=tol,
+            p=p, refresh_every=refresh_every, support_eps=support_eps,
+            backend=backend)
+        return LIDState(s.beta_idx, s.beta_mask, s.v_beta, x, ax, it, cv)
+
+    return jax.lax.while_loop(cond, body,
+                              state._replace(converged=jnp.array(False)))
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "tol", "p",
+                                             "backend"))
+def lid_solve_unfused(state: LIDState, k: jax.Array, max_iters: int = 200,
+                      tol: float = 1e-5, p: float = 2.0,
+                      backend: str = "auto") -> LIDState:
+    """The pre-sweep reference loop: one XLA-dispatched iteration per
+    while_loop step. Kept as the bit-parity oracle for `lid_solve`'s
+    chunked sweeps (tests/test_lid_sweep.py) and as the unfused arm of the
+    kernel benchmark — not called on any hot path."""
 
     def cond(s: LIDState):
         return (~s.converged) & (s.n_iters < max_iters)
@@ -74,28 +113,33 @@ def lid_solve(state: LIDState, k: jax.Array, max_iters: int = 200,
         i = jnp.argmax(score)
         done = score[i] <= tol
 
-        ri = r[i]
-        xi = s.x[i]
-        mu = jnp.where(ri > 0.0, 1.0, xi / jnp.minimum(xi - 1.0, -1e-12))
-        num = mu * ri
-        den = mu * mu * (-2.0 * s.ax[i] + pi)       # mu^2 * pi(s_i - x), a_ii = 0
-        eps = jnp.where(den < 0.0, jnp.minimum(-num / den, 1.0), 1.0)
-        scale = eps * mu
+        def update(args):
+            x, ax = args
+            ri = r[i]
+            xi = x[i]
+            mu = jnp.where(ri > 0.0, 1.0, xi / jnp.minimum(xi - 1.0, -1e-12))
+            num = mu * ri
+            den = mu * mu * (-2.0 * ax[i] + pi)  # mu^2 * pi(s_i - x), a_ii=0
+            eps = jnp.where(den < 0.0, jnp.minimum(-num / den, 1.0), 1.0)
+            scale = eps * mu
 
-        col = affinity_column(s.v_beta, s.beta_idx, s.v_beta[i], s.beta_idx[i],
-                              k, p, backend)
-        col = jnp.where(s.beta_mask, col, 0.0)
+            col = affinity_column(s.v_beta, s.beta_idx, s.v_beta[i],
+                                  s.beta_idx[i], k, p, backend)
+            col = jnp.where(s.beta_mask, col, 0.0)
 
-        onehot = jnp.zeros_like(s.x).at[i].set(1.0)
-        x_new = jnp.maximum(s.x + scale * (onehot - s.x), 0.0)
-        ax_new = s.ax + scale * (col - s.ax)
+            onehot = jnp.zeros_like(x).at[i].set(1.0)
+            x_new = jnp.maximum(x + scale * (onehot - x), 0.0)
+            ax_new = ax + scale * (col - ax)
+            return x_new, ax_new
 
-        x = jnp.where(done, s.x, x_new)
-        ax = jnp.where(done, s.ax, ax_new)
+        # the converged iteration is O(cap): the affinity column (the only
+        # O(cap*d) work) is gated on `done` instead of discarded by a where
+        x, ax = jax.lax.cond(done, lambda a: a, update, (s.x, s.ax))
         return LIDState(s.beta_idx, s.beta_mask, s.v_beta, x, ax,
                         s.n_iters + 1, done)
 
-    return jax.lax.while_loop(cond, body, state._replace(converged=jnp.array(False)))
+    return jax.lax.while_loop(cond, body,
+                              state._replace(converged=jnp.array(False)))
 
 
 def refresh_ax(state: LIDState, k: jax.Array, p: float = 2.0,

@@ -55,7 +55,8 @@ import numpy as np
 from repro.checkpoint.manager import (latest_step, list_checkpoints,
                                       restore_checkpoint_tree,
                                       save_checkpoint)
-from repro.core.alid import ALIDConfig, Clustering, EngineSpec
+from repro.core.alid import (ALIDConfig, Clustering, EngineSpec,
+                             storage_dtype)
 from repro.core.civs import _ROUTE_EPS
 from repro.core.lid import LIDState, density, lid_solve, refresh_ax
 from repro.core.roi import estimate_roi
@@ -116,9 +117,13 @@ class OnlineStats:
 
 # ------------------------------------------------------------- jit helpers --
 @functools.partial(jax.jit, static_argnames=("t_lid", "tol", "p",
-                                             "support_eps", "backend"))
+                                             "support_eps", "backend",
+                                             "dtype", "sweep_steps",
+                                             "refresh_every"))
 def _warm_lid(beta_idx, beta_mask, v_beta, x, k, t_lid: int, tol: float,
-              p: float, support_eps: float, backend: str):
+              p: float, support_eps: float, backend: str,
+              dtype: str = "float32", sweep_steps: int = 8,
+              refresh_every: int = 0):
     """Warm-started LID re-convergence over one (cap,) support buffer.
 
     The buffer holds the stored support (weights = stored w) plus routed
@@ -127,14 +132,19 @@ def _warm_lid(beta_idx, beta_mask, v_beta, x, k, t_lid: int, tol: float,
     beta_mask — then `lid_solve` runs the infection-immunization dynamics:
     an infective candidate (payoff > pi + tol) is invaded (absorbed), an
     over-weighted member is immunized (peeled). Shapes are fixed at the
-    support cap, so this compiles once per store."""
+    support cap, so this compiles once per store. `dtype` casts the host-f32
+    support rows back to the engine's storage dtype (exact for bf16-rounded
+    rows), so warm-started solves run the same mixed-precision path as the
+    fit-time engines."""
+    v_beta = v_beta.astype(storage_dtype(dtype))
     state = LIDState(beta_idx=beta_idx, beta_mask=beta_mask, v_beta=v_beta,
                      x=x, ax=jnp.zeros_like(x), n_iters=jnp.int32(0),
                      converged=jnp.array(False))
     state = refresh_ax(state, k, p=p, support_eps=support_eps,
                        backend=backend)
     state = lid_solve(state, k, max_iters=t_lid, tol=tol, p=p,
-                      backend=backend)
+                      backend=backend, sweep_steps=sweep_steps,
+                      refresh_every=refresh_every, support_eps=support_eps)
     return state.x, state.ax, density(state)
 
 
@@ -388,7 +398,8 @@ class OnlineClustering:
             jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(v),
             jnp.asarray(w), jnp.float32(self.k), self.cfg.t_lid,
             self.cfg.tol, self.cfg.p, self.cfg.support_eps,
-            self.cfg.backend)
+            self.cfg.backend, self.cfg.dtype, self.cfg.sweep_steps,
+            self.cfg.refresh_every)
         x_new = np.asarray(x_new)
 
         if not removing and np.array_equal(x_new, w):

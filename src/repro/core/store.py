@@ -79,8 +79,8 @@ def _build_store_impl(points: jax.Array, params: LSHParams, rng: jax.Array,
     # Spatial ordering: project onto the first LSH direction. jax PRNG keys
     # are pure, so regenerating proj here matches build_lsh_sharded exactly
     # without threading the array through.
-    proj, _ = make_projections(rng, params, d, points.dtype)
-    score = points @ proj[0, 0]
+    proj, _ = make_projections(rng, params, d, jnp.float32)
+    score = points @ proj[0, 0]  # bf16 @ f32 promotes to f32, like hash_chunk
     order = jnp.argsort(score).astype(jnp.int32)           # (n,)
 
     gidx = jnp.concatenate([order, jnp.full((pad,), -1, jnp.int32)])
@@ -97,7 +97,11 @@ def _build_store_impl(points: jax.Array, params: LSHParams, rng: jax.Array,
         jnp.broadcast_to(slot[None, :], gidx.shape).reshape(-1))[:n]
 
     cnt = jnp.maximum(jnp.sum(valid, axis=1), 1)
-    centers = jnp.sum(shards, axis=1) / cnt[:, None].astype(points.dtype)
+    # centers in f32 even for bf16 shards: a bf16 row-sum accumulator loses
+    # mantissa long before shard_cap rows. Routing stays exact — radii are
+    # the f32 max distance from this center to the STORED (rounded) points.
+    centers = (jnp.sum(shards.astype(jnp.float32), axis=1)
+               / cnt[:, None].astype(jnp.float32))
     dist = jax.vmap(
         lambda sh, cen: ops.pairwise_distance(sh, cen[None, :])[:, 0])(
             shards, centers)
@@ -110,15 +114,19 @@ def _build_store_impl(points: jax.Array, params: LSHParams, rng: jax.Array,
 
 
 def build_store(points: jax.Array, params: LSHParams, rng: jax.Array,
-                n_shards: int = 8, backend: str = "auto") -> ShardedStore:
+                n_shards: int = 8, backend: str = "auto",
+                dtype: str = "float32") -> ShardedStore:
     """Partition `points` + LSH into `n_shards` routing-aware shards.
 
     Consumes `rng` exactly like `build_lsh` (one split -> proj, bias), so a
     store built with the same key is query-for-query consistent with the
     monolithic tables — the basis of the replicated/sharded parity tests.
     `backend` selects the hashing kernel (repro.kernels.ops.lsh_hash).
+    `dtype` is the point STORAGE dtype (`repro.kernels.ops.DTYPES`): points
+    are rounded to it here, BEFORE hashing, so LSH keys match a replicated
+    build over the same rounded points bit-for-bit.
     """
-    points = jnp.asarray(points, jnp.float32)
+    points = jnp.asarray(points, ops.storage_dtype(dtype))
     n_shards = max(1, min(int(n_shards), points.shape[0]))
     return _build_store_impl(points, params, rng, n_shards, backend)
 
@@ -126,6 +134,19 @@ def build_store(points: jax.Array, params: LSHParams, rng: jax.Array,
 # ----------------------------------------------------- host-streamed store --
 _PAD_KEY_NP = np.uint32(0xFFFFFFFF)
 _DEFAULT_CHUNK = 32768
+
+
+def _round_to_storage(rows: np.ndarray, dtype: str) -> np.ndarray:
+    """Round an np.float32 slab to the storage dtype, kept in np.float32.
+
+    numpy has no bf16, so streamed slabs stay np.float32 on the host but
+    hold bf16-ROUNDED values: f32 -> bf16 -> f32 is an exact round-trip, so
+    a device-side `astype(bfloat16)` of the slab recovers the stored bf16
+    bits, and every engine sees the same rounded points."""
+    if dtype == "bfloat16":
+        return np.asarray(
+            jnp.asarray(rows).astype(jnp.bfloat16).astype(jnp.float32))
+    return rows
 
 
 class StreamedStore(NamedTuple):
@@ -160,6 +181,11 @@ class StreamedStore(NamedTuple):
     # and a mismatch on probe drops the stale bundle (online deltas would
     # otherwise serve pre-mutation bytes out of the LRU forever)
     generations: Optional[np.ndarray] = None
+    # point STORAGE dtype knob (repro.kernels.ops.DTYPES). Slabs are always
+    # np.float32 on the host, but with dtype="bfloat16" they hold
+    # bf16-rounded values (see _round_to_storage) so the streamed engine's
+    # device-side astype(bfloat16) is exact and matches the other engines.
+    dtype: str = "float32"
 
     @property
     def n_shards(self) -> int:
@@ -202,7 +228,9 @@ class StreamedStore(NamedTuple):
         `ShardPipeline._read_points` enforces that."""
         m = self.shard_count(s)
         out = np.zeros((self.shard_cap, self.dim), np.float32)
-        out[:m] = self.source.sample(self.global_idx[s, :m])
+        out[:m] = _round_to_storage(
+            np.asarray(self.source.sample(self.global_idx[s, :m]),
+                       np.float32), self.dtype)
         return out
 
 
@@ -210,7 +238,8 @@ def build_store_streamed(source: DataSource, params: LSHParams,
                          rng: jax.Array, n_shards: int = 8,
                          chunk_size: int = 0,
                          scratch_dir: Optional[str] = None,
-                         backend: str = "auto") -> StreamedStore:
+                         backend: str = "auto",
+                         dtype: str = "float32") -> StreamedStore:
     """Build the streamed store shard-by-shard from source chunks.
 
     Two passes, neither materializing more than O(chunk) rows on device or
@@ -240,7 +269,12 @@ def build_store_streamed(source: DataSource, params: LSHParams,
     global table-0 bucket sizes are re-aggregated host-side from the
     per-shard tables, so seeding statistics match the replicated engine
     integer-for-integer.
+
+    `dtype` is the point storage dtype: chunks are rounded to it BEFORE
+    hashing (matching `build_store`'s pre-hash rounding), and the slabs
+    persist the rounded values (see `_round_to_storage`).
     """
+    ops.storage_dtype(dtype)  # validate the knob up front
     chunk_size = int(chunk_size) or _DEFAULT_CHUNK
     n, d = source.n, source.dim
     n_shards = max(1, min(int(n_shards), n))
@@ -251,7 +285,8 @@ def build_store_streamed(source: DataSource, params: LSHParams,
     scores = np.empty((n,), np.float32)
     keys_full = np.empty((n_tables, n), np.uint32)
     for start, block in iter_source_chunks(source, chunk_size):
-        kk, sc = hash_chunk(jnp.asarray(block, jnp.float32), proj, bias,
+        block32 = _round_to_storage(np.asarray(block, np.float32), dtype)
+        kk, sc = hash_chunk(jnp.asarray(block32, jnp.float32), proj, bias,
                             params.seg_len, backend)
         stop = start + block.shape[0]
         keys_full[:, start:stop] = np.asarray(kk)
@@ -272,7 +307,8 @@ def build_store_streamed(source: DataSource, params: LSHParams,
     for s in range(n_shards):
         idx = order[s * cap:min((s + 1) * cap, n)]
         m = idx.shape[0]
-        rows = np.asarray(source.sample(idx), np.float32)
+        rows = _round_to_storage(np.asarray(source.sample(idx), np.float32),
+                                 dtype)
         if scratch is not None:
             scratch.write(s, rows)
         global_idx[s, :m] = idx
@@ -303,7 +339,8 @@ def build_store_streamed(source: DataSource, params: LSHParams,
                          centers=centers, radii=radii,
                          bucket_sizes=bsizes.astype(np.int32),
                          proj=proj, bias=bias, scratch=scratch,
-                         generations=np.zeros((n_shards,), np.int64))
+                         generations=np.zeros((n_shards,), np.int64),
+                         dtype=dtype)
 
 
 def update_shard_points(store: StreamedStore, s: int,
@@ -325,7 +362,7 @@ def update_shard_points(store: StreamedStore, s: int,
     if store.generations is None:
         raise ValueError("store predates generation counters — rebuild "
                          "with build_store_streamed")
-    rows = np.asarray(rows, np.float32)
+    rows = _round_to_storage(np.asarray(rows, np.float32), store.dtype)
     if rows.shape != (store.shard_cap, store.dim):
         raise ValueError(f"expected a full ({store.shard_cap}, {store.dim}) "
                          f"zero-padded slab, got {rows.shape}")

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import tree_matvec
+
 
 def _matvec_kernel(k_ref, q_ref, qi_ref, c_ref, ci_ref, w_ref, o_ref):
     q = q_ref[...].astype(jnp.float32)            # (bm, d)
@@ -35,9 +37,13 @@ def _matvec_kernel(k_ref, q_ref, qi_ref, c_ref, ci_ref, w_ref, o_ref):
         q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
     a = jnp.exp(-k_scale * jnp.sqrt(jnp.maximum(d2, 0.0)))
     a = jnp.where(qi_ref[...] == ci_ref[...], 0.0, a)         # (bm,1)==(1,n)
-    o_ref[...] = jax.lax.dot_general(
-        a, w_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)                   # (bm, 1)
+    # the weights contraction is the ONE stage of this op whose bits reach
+    # continuous results (densities via the Ax refresh), so it uses the
+    # order-pinned tree_matvec the ref oracle also uses: a lax.dot_general
+    # here is reassociated differently by XLA depending on batching context
+    # (standalone gemv vs vmapped batched gemm), which broke ref-vs-interpret
+    # engine parity by 1 ulp
+    o_ref[...] = tree_matvec(a, w_ref[...][:, 0])[:, None]    # (bm, 1)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))

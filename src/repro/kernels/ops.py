@@ -37,11 +37,29 @@ from repro.kernels.affinity_matvec import affinity_matvec_pallas
 from repro.kernels.assign import assign_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lid_sweep import lid_sweep_pallas
 from repro.kernels.lsh_hash import lsh_hash_pallas
 from repro.kernels.roi_filter import roi_filter_pallas
 from repro.kernels.segment_matmul import segment_matmul_pallas
 
 BACKENDS = ("auto", "ref", "pallas", "interpret")
+DTYPES = ("float32", "bfloat16")
+
+
+def storage_dtype(name: str):
+    """Map the `EngineSpec.dtype` knob to the jnp STORAGE dtype (validated).
+
+    Part of the kernel layer's mixed-precision contract: points / store
+    shards / v_beta support blocks are stored in this dtype, while every
+    distance, affinity, and LID accumulator (x, ax, pi) stays f32 — each op
+    upcasts storage inputs exactly once at entry. All engine/store builds
+    route their point casts through this helper so the bf16 rounding happens
+    once, BEFORE hashing (LSH keys of the rounded values are then identical
+    across replicated / sharded / streamed builds)."""
+    if name not in DTYPES:
+        raise ValueError(
+            f"unknown storage dtype {name!r}; expected one of {DTYPES}")
+    return jnp.bfloat16 if name == "bfloat16" else jnp.float32
 
 
 def resolve_backend(backend: str = "auto") -> str:
@@ -107,6 +125,41 @@ def affinity_matvec(q: jax.Array, q_idx: jax.Array, c: jax.Array,
     return affinity_matvec_pallas(q, q_idx, c, c_idx, w,
                                   jnp.asarray(k_scale, jnp.float32),
                                   interpret=(mode == "interpret"), **kw)
+
+
+def lid_sweep(v_beta: jax.Array, beta_idx: jax.Array, beta_mask: jax.Array,
+              x: jax.Array, ax: jax.Array, n_iters: jax.Array,
+              converged: jax.Array, k_scale, *, n_steps: int, max_iters: int,
+              tol: float, p: float = 2.0, refresh_every: int = 0,
+              support_eps: float = 1e-6, backend: str = "auto",
+              **kw) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused multi-iteration LID sweep (Sec. 4.1, Eq. 9-14): up to `n_steps`
+    infection-immunization iterations over one (cap, d) support block
+    entirely in VMEM — on-demand affinity column, residual/argmax, invasion
+    share, x/Ax update per step, gated on the early-exit flag.
+
+    (x, ax, n_iters, converged) in, same out; `n_iters` is CUMULATIVE (the
+    step guard is `~converged & (n_iters < max_iters)`), so `lid_solve`'s
+    while-over-chunks composition is bit-identical to the historical
+    single-step while_loop on the ref backend. `v_beta` may be bf16 storage;
+    x/ax/pi accumulate in f32 on every backend. `refresh_every=M > 0` adds
+    an exact in-sweep Ax recompute (masked matvec) every M iterations —
+    off by default to preserve the incremental-update bit contract.
+    Batched seeds: vmap — the kernel path batches onto a leading grid dim.
+    """
+    mode = resolve_backend(backend)
+    if mode == "ref" or p != 2.0:
+        return _ref.lid_sweep_ref(v_beta, beta_idx, beta_mask, x, ax,
+                                  n_iters, converged,
+                                  jnp.asarray(k_scale, jnp.float32),
+                                  n_steps, max_iters, tol, p,
+                                  refresh_every, support_eps)
+    return lid_sweep_pallas(v_beta, beta_idx, beta_mask, x, ax, n_iters,
+                            converged, jnp.asarray(k_scale, jnp.float32),
+                            n_steps=n_steps, max_iters=max_iters, tol=tol,
+                            refresh_every=refresh_every,
+                            support_eps=support_eps,
+                            interpret=(mode == "interpret"), **kw)
 
 
 def roi_filter(vc: jax.Array, center: jax.Array, radius, valid: jax.Array,

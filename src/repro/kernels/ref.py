@@ -14,6 +14,27 @@ import jax.numpy as jnp
 MASK_VALUE = -1e30
 
 
+def tree_matvec(a: jax.Array, w: jax.Array) -> jax.Array:
+    """(m, n) @ (n,) with a FIXED binary-tree reduction order: (m,) f32.
+
+    XLA picks the reduction order of `a @ w` per lowering context — the same
+    contraction lowers to a gemv standalone but a batched gemm under vmap,
+    and the two associate the n-sum differently (a 1-ulp density drift that
+    broke ref-vs-interpret engine parity). Spelling the tree out as explicit
+    pairwise adds pins the dataflow: every backend, batched or not, fused or
+    not, computes bit-identical output. Cost is log2(n) vectorized adds on a
+    zero-padded pow2 width — VPU-friendly, no MXU needed for a matvec.
+    """
+    p = a.astype(jnp.float32) * w.astype(jnp.float32)[None, :]
+    n = p.shape[-1]
+    size = 1 << max(n - 1, 0).bit_length()
+    p = jnp.pad(p, ((0, 0), (0, size - n)))
+    while p.shape[-1] > 1:
+        half = p.shape[-1] // 2
+        p = p[:, :half] + p[:, half:]
+    return p[:, 0]
+
+
 # ---------------------------------------------------------------- affinity --
 def pairwise_distance_ref(q: jax.Array, c: jax.Array,
                           p: float = 2.0) -> jax.Array:
@@ -61,10 +82,14 @@ def affinity_matvec_ref(q: jax.Array, q_idx: jax.Array, c: jax.Array,
     compare realizes a_ii = 0 (and dedup defensiveness) without a separate
     mask tensor; slot-validity masks fold into `w` (c side) and a row select
     on the output (q side), so callers never materialize the (m, n) block.
+    The contraction goes through `tree_matvec` (NOT `a @ w`) because this
+    op's output lands in continuous results (densities via the Ax refresh),
+    where context-dependent reduction order would leak into user-visible
+    bits.
     """
     a = affinity_ref(q, c, k_scale, p).astype(jnp.float32)
     a = jnp.where(q_idx[:, None] == c_idx[None, :], 0.0, a)
-    return a @ w.astype(jnp.float32)
+    return tree_matvec(a, w)
 
 
 def roi_filter_ref(vc: jax.Array, center: jax.Array, radius: jax.Array,
@@ -76,11 +101,113 @@ def roi_filter_ref(vc: jax.Array, center: jax.Array, radius: jax.Array,
     (dist (C,) f32, valid_out (C,) bool, neg (C,) f32) with
     valid_out = valid & (dist <= radius) and neg = -dist on valid_out else
     -inf (the score `jax.lax.top_k` ranks, nearest-first).
+
+    Single-center special case: the distance is the DIRECT per-row
+    sum((v - c)^2) reduction, not `pairwise_distance_ref`'s matmul
+    expansion. With one center the expansion degenerates to a (C, d)x(d, 1)
+    matmul plus a separate |v|^2 sweep — strictly more arithmetic than the
+    fused subtract-square-reduce loop XLA emits for this form (it
+    benchmarked SLOWER than the pre-fusion composition) — and the direct
+    form is also the numerically tighter one (no |v|^2 cancellation). The
+    Pallas tile computes the identical per-row reduction, so ref/interpret
+    stay bit-aligned; cross-engine parity needs only every engine routing
+    through THIS op, which they do (civs.retrieve_chunk /
+    _retrieve_replicated).
     """
-    dist = pairwise_distance_ref(vc, center[None, :], 2.0)[:, 0]
+    vc32 = vc.astype(jnp.float32)
+    cen32 = center.astype(jnp.float32)
+    diff = vc32 - cen32[None, :]
+    dist = jnp.sqrt(jnp.sum(diff * diff, -1))
     ok = valid & (dist <= radius)
     neg = jnp.where(ok, -dist, -jnp.inf)
     return dist, ok, neg
+
+
+def lid_sweep_ref(v_beta: jax.Array, beta_idx: jax.Array,
+                  beta_mask: jax.Array, x: jax.Array, ax: jax.Array,
+                  n_iters: jax.Array, converged: jax.Array,
+                  k_scale: jax.Array, n_steps: int, max_iters: int,
+                  tol: float, p: float = 2.0, refresh_every: int = 0,
+                  support_eps: float = 1e-6
+                  ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused multi-iteration LID sweep (paper Sec. 4.1, Eq. 9-14): up to
+    `n_steps` infection-immunization iterations over ONE seed's (cap, d)
+    support block, stopping early on convergence or `n_iters == max_iters`.
+
+    v_beta:(cap,d), beta_idx:(cap,) i32, beta_mask:(cap,) bool, x/ax:(cap,)
+    f32 accumulators, n_iters:() i32 (CUMULATIVE across sweeps — the caller's
+    while-over-chunks threads it through), converged:() bool ->
+    (x, ax, n_iters, converged).
+
+    Each executed step is bit-identical to one iteration of the pre-sweep
+    `lid_solve` body: residual r = Ax - pi(x), C1∪C2 argmax (Eq. 6), invasion
+    share eps (Eq. 9/11/12), the on-demand affinity column (Eq. 13/14), and
+    the x/Ax updates. The column (the only O(cap*d) work) is gated on the
+    convergence flag, so the detecting iteration is O(cap). Mixed precision:
+    `v_beta` may be bf16 STORAGE — it is upcast to f32 once at entry and the
+    column/accumulator math runs entirely in f32 (bf16 never re-enters).
+
+    `refresh_every=M > 0` recomputes Ax exactly from the support (the
+    `refresh_ax` masked matvec, same op order as `affinity_matvec_ref`) every
+    M cumulative iterations, killing incremental f32 drift inside long
+    sweeps. Default 0 = off: the incremental Eq. 14 updates are kept
+    bit-identical to the historical `lid_solve` path.
+    """
+    # jnp coercion up front: raw numpy operands would otherwise be indexed
+    # with traced argmax results inside the while_loop body
+    v32 = jnp.asarray(v_beta).astype(jnp.float32)
+    idx = jnp.asarray(beta_idx, jnp.int32)
+    mask = jnp.asarray(beta_mask)
+    k32 = jnp.asarray(k_scale, jnp.float32)
+
+    def step(carry):
+        t, x, ax, it, _ = carry
+        pi = jnp.sum(x * ax)
+        r = jnp.where(mask, ax - pi, 0.0)
+        c1 = mask & (r > tol)
+        c2 = mask & (r < -tol) & (x > 0.0)
+        score = jnp.where(c1 | c2, jnp.abs(r), -jnp.inf)
+        i = jnp.argmax(score)
+        done = score[i] <= tol
+
+        def update(args):
+            x, ax = args
+            ri = r[i]
+            xi = x[i]
+            mu = jnp.where(ri > 0.0, 1.0, xi / jnp.minimum(xi - 1.0, -1e-12))
+            num = mu * ri
+            den = mu * mu * (-2.0 * ax[i] + pi)   # mu^2 * pi(s_i - x), a_ii=0
+            eps = jnp.where(den < 0.0, jnp.minimum(-num / den, 1.0), 1.0)
+            scale = eps * mu
+            col = affinity_ref(v32, v32[i][None, :], k32, p)[:, 0]
+            col = jnp.where(idx == idx[i], 0.0, col)
+            col = jnp.where(mask, col, 0.0)
+            onehot = jnp.zeros_like(x).at[i].set(1.0)
+            x_new = jnp.maximum(x + scale * (onehot - x), 0.0)
+            ax_new = ax + scale * (col - ax)
+            if refresh_every > 0:
+                def refresh(args):
+                    x_new, ax_new = args
+                    w = jnp.where(mask & (x_new > support_eps), x_new, 0.0)
+                    full = affinity_matvec_ref(v32, idx, v32, idx, w, k32, p)
+                    return jnp.where(mask, full, 0.0)
+                hit = (it + 1) % refresh_every == 0
+                ax_new = jax.lax.cond(hit, refresh, lambda a: a[1],
+                                      (x_new, ax_new))
+            return x_new, ax_new
+
+        x, ax = jax.lax.cond(done, lambda a: a, update, (x, ax))
+        return t + 1, x, ax, it + 1, done
+
+    def cond(carry):
+        t, _, _, it, cv = carry
+        return (t < n_steps) & (~cv) & (it < max_iters)
+
+    _, x, ax, it, cv = jax.lax.while_loop(
+        cond, step,
+        (jnp.int32(0), x.astype(jnp.float32), ax.astype(jnp.float32),
+         jnp.asarray(n_iters, jnp.int32), jnp.asarray(converged, bool)))
+    return x, ax, it, cv
 
 
 def assign_weight_matrix(sup_w: jax.Array) -> jax.Array:
@@ -97,7 +224,8 @@ def assign_weight_matrix(sup_w: jax.Array) -> jax.Array:
 
 def assign_ref(q: jax.Array, sup_flat: jax.Array, w_mat: jax.Array,
                dens: jax.Array, k_scale: jax.Array,
-               threshold: jax.Array) -> tuple[jax.Array, jax.Array]:
+               threshold: jax.Array, bm: int = 512
+               ) -> tuple[jax.Array, jax.Array]:
     """Fused batched cluster assignment (Clustering.predict / ClusterService):
     affinity against every cluster support + weighted score + argmax +
     density-threshold accept, one pass.
@@ -105,13 +233,38 @@ def assign_ref(q: jax.Array, sup_flat: jax.Array, w_mat: jax.Array,
     q:(m,d), sup_flat:(C*A,d), w_mat:(C*A,C) (see `assign_weight_matrix`),
     dens:(C,), threshold:() -> (labels (m,) int32 with -1 = no cluster,
     best_score (m,) f32).
+
+    Two CPU-side perf choices, both verified bitwise-neutral vs the naive
+    flat form on the benchmark shapes:
+      - the block-diagonal `w_mat` contraction collapses to a per-cluster
+        segment reduce (einsum over the A axis) — the dense (C*A, C) gemm
+        is free on the MXU but 32x redundant flops on the ref path;
+      - queries process in `bm`-row chunks mirroring the Pallas grid, so
+        the (bm, C*A) affinity block stays cache-resident instead of a
+        whole (m, C*A) round-trip (measured ~2x on m=4096, C*A=2048).
     """
-    aff = affinity_ref(q, sup_flat, k_scale).astype(jnp.float32)
-    scores = aff @ w_mat                                   # (m, C)
-    best = jnp.argmax(scores, axis=-1).astype(jnp.int32)
-    bscore = jnp.max(scores, axis=-1)
-    ok = bscore >= threshold * dens[best]
-    return jnp.where(ok, best, -1).astype(jnp.int32), bscore
+    n_clusters = w_mat.shape[1]
+    a_cap = w_mat.shape[0] // n_clusters
+    # recover the (C, A) weights from the block-diagonal matrix
+    sup_w = jnp.einsum(
+        "cac->ca", w_mat.reshape(n_clusters, a_cap, n_clusters))
+
+    def block(qb):
+        aff = affinity_ref(qb, sup_flat, k_scale).astype(jnp.float32)
+        scores = jnp.einsum(
+            "mca,ca->mc", aff.reshape(-1, n_clusters, a_cap), sup_w)
+        best = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+        bscore = jnp.max(scores, axis=-1)
+        ok = bscore >= threshold * dens[best]
+        return jnp.where(ok, best, -1).astype(jnp.int32), bscore
+
+    m = q.shape[0]
+    if m <= bm:
+        return block(q)
+    pm = (-m) % bm
+    qp = jnp.pad(q, ((0, pm), (0, 0)))          # pad labels sliced off below
+    labels, bscore = jax.lax.map(block, qp.reshape(-1, bm, q.shape[1]))
+    return labels.reshape(-1)[:m], bscore.reshape(-1)[:m]
 
 
 # --------------------------------------------------------- flash attention --

@@ -5,8 +5,11 @@ mask, and the neg-distance scores that `jax.lax.top_k` ranks — one pass.
 Unfused (`retrieve_chunk` / `_retrieve_replicated` before PR 5), the
 candidate block paid three elementwise sweeps over the (C,) candidate axis
 with the (C, d) gather re-read in between. Here each program loads one
-(bc, d) candidate tile into VMEM, contracts against the (1, d) center on the
-MXU, and emits both the distance and the masked -dist score from registers.
+(bc, d) candidate tile into VMEM, reduces the direct per-row
+sum((v - c)^2) against the broadcast (1, d) center on the VPU (the
+single-center degenerate matmul expansion benchmarked slower — see
+_roi_kernel), and emits both the distance and the masked -dist score from
+registers.
 
 Masking rule: `valid` carries every SHAPE-side condition the caller already
 knows (real hit, active, not a support member); the kernel adds the
@@ -27,11 +30,13 @@ from jax.experimental import pallas as pl
 def _roi_kernel(r_ref, cen_ref, v_ref, m_ref, dist_ref, neg_ref):
     v = v_ref[...].astype(jnp.float32)            # (bc, d)
     cen = cen_ref[...].astype(jnp.float32)        # (1, d)
-    v2 = jnp.sum(v * v, axis=-1, keepdims=True)               # (bc, 1)
-    c2 = jnp.sum(cen * cen, axis=-1, keepdims=True)           # (1, 1)
-    d2 = v2 + c2 - 2.0 * jax.lax.dot_general(
-        v, cen, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    dist = jnp.sqrt(jnp.maximum(d2, 0.0))                     # (bc, 1)
+    # direct per-row reduction, matching ref.roi_filter_ref bit-for-bit:
+    # with ONE center the |v|^2 + |c|^2 - 2vc MXU expansion is strictly more
+    # arithmetic (degenerate (bc, d)x(d, 1) matmul + a separate |v|^2
+    # sweep) and benchmarked slower than the pre-fusion composition; the
+    # subtract-square-reduce runs on the VPU in the same single tile pass
+    diff = v - cen                                # (bc, d)
+    dist = jnp.sqrt(jnp.sum(diff * diff, axis=-1, keepdims=True))  # (bc, 1)
     ok = (m_ref[...] != 0) & (dist <= r_ref[0, 0])
     dist_ref[...] = dist
     neg_ref[...] = jnp.where(ok, -dist, -jnp.inf)

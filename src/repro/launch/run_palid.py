@@ -39,7 +39,8 @@ def engine_spec(engine: str, devices: int, shards: int, chunk_size: int,
                 prefetch_depth: int = (
                     EngineSpec._field_defaults["prefetch_depth"]),
                 scratch_dir: str = "",
-                backend: str = "auto") -> EngineSpec:
+                backend: str = "auto",
+                dtype: str = "float32") -> EngineSpec:
     """Resolve --engine (+ legacy --devices/--shards) into an EngineSpec.
 
     The pipeline knobs only matter for engine="streamed": `cache_bytes`
@@ -47,7 +48,8 @@ def engine_spec(engine: str, devices: int, shards: int, chunk_size: int,
     background reader's slot ring (0 = synchronous double-buffer), and
     `scratch_dir` places the build-time scratch memmap ("" = system temp
     dir, "none" disables persistence). `backend` is the kernel backend for
-    every hot-path op (repro.kernels.ops)."""
+    every hot-path op (repro.kernels.ops); `dtype` the point storage dtype
+    (mixed precision: bf16 storage, f32 accumulators)."""
     scratch: str | None = None if scratch_dir == "none" else scratch_dir
     if engine == "auto":
         if devices > 1:
@@ -60,19 +62,21 @@ def engine_spec(engine: str, devices: int, shards: int, chunk_size: int,
         mesh = jax.make_mesh((max(devices, 1),), ("data",))
         ctx = MeshContext(mesh=mesh, data_axes=("data",), model_axis="data")
         return EngineSpec(engine="mesh", n_shards=shards, mesh_ctx=ctx,
-                          chunk_size=chunk_size, backend=backend)
+                          chunk_size=chunk_size, backend=backend,
+                          dtype=dtype)
     if engine == "streamed":
         # 0 lets StreamedEngine apply its own default (8) — forcing 1 here
         # would stream the whole dataset as a single O(n·d) bundle
         return EngineSpec(engine="streamed", n_shards=shards,
                           chunk_size=chunk_size, cache_bytes=cache_bytes,
                           prefetch_depth=prefetch_depth, scratch_dir=scratch,
-                          backend=backend)
+                          backend=backend, dtype=dtype)
     if engine == "sharded":
         return EngineSpec(engine="sharded", n_shards=max(1, shards),
-                          chunk_size=chunk_size, backend=backend)
+                          chunk_size=chunk_size, backend=backend,
+                          dtype=dtype)
     return EngineSpec(engine="replicated", chunk_size=chunk_size,
-                      backend=backend)
+                      backend=backend, dtype=dtype)
 
 
 def main():
@@ -100,6 +104,12 @@ def main():
                          "oracles, 'pallas' = compiled TPU kernels, "
                          "'interpret' = Pallas kernels emulated as jax ops "
                          "(CI parity smoke)")
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="point STORAGE dtype (EngineSpec.dtype): bfloat16 "
+                         "halves store/HBM bytes while every distance, "
+                         "affinity and LID accumulator stays f32 (mixed "
+                         "precision; support sets typically match f32)")
     ap.add_argument("--quick", action="store_true",
                     help="small-n smoke preset (n=600 d=8, few rounds) — "
                          "used by CI for the --backend interpret smoke")
@@ -205,7 +215,7 @@ def main():
                      spec=engine_spec(args.engine, args.devices, args.shards,
                                       args.chunk_size, args.cache_bytes,
                                       args.prefetch_depth, args.scratch_dir,
-                                      args.backend))
+                                      args.backend, args.dtype))
     # build the engine here (instead of letting fit do it) so --profile can
     # read its stage counters after the run; we own close() in exchange
     engine = make_engine(cfg.spec)
@@ -218,7 +228,7 @@ def main():
         dt = time.time() - t0
         n_members = int((res.labels >= 0).sum())
         line = (f"[palid] n={n} d={d} engine={cfg.spec.engine} "
-                f"backend={cfg.spec.backend} "
+                f"backend={cfg.spec.backend} dtype={cfg.spec.dtype} "
                 f"devices={max(args.devices, 1)} shards={args.shards} "
                 f"time={dt:.2f}s clusters={res.n_clusters} "
                 f"members={n_members}")

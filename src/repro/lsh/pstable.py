@@ -105,7 +105,10 @@ def hash_points(v: jax.Array, proj: jax.Array, bias: jax.Array,
 def build_lsh(v: jax.Array, params: LSHParams, rng: jax.Array,
               backend: str = "auto") -> LSHTables:
     n, d = v.shape
-    proj, bias = make_projections(rng, params, d, v.dtype)
+    # projections are pinned f32 regardless of point storage dtype: bf16
+    # random normals would be DIFFERENT values, silently breaking the
+    # cross-engine key-identity argument for mixed-precision stores
+    proj, bias = make_projections(rng, params, d, jnp.float32)
     keys = hash_points(v, proj, bias, params.seg_len, backend)  # (L, n)
     order = jnp.argsort(keys, axis=1).astype(jnp.int32)          # (L, n)
     sorted_keys = jnp.take_along_axis(keys, order.astype(jnp.int32), axis=1)
@@ -309,7 +312,7 @@ def build_lsh_sharded(shard_points: jax.Array, valid: jax.Array,
     than an approximation.
     """
     s, cap, d = shard_points.shape
-    proj, bias = make_projections(rng, params, d, shard_points.dtype)
+    proj, bias = make_projections(rng, params, d, jnp.float32)  # see build_lsh
     keys = jax.vmap(
         lambda v: hash_points(v, proj, bias, params.seg_len, backend))(
         shard_points)                                         # (S, L, cap)

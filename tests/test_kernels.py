@@ -55,8 +55,10 @@ def test_affinity_matvec_kernel(m, n, d):
 
 
 def test_affinity_matvec_matches_unfused_refresh():
-    """The fused op must equal the historical unfused composition (affinity
-    block -> diag zero -> mask -> matvec) with masks folded into w/rows."""
+    """The fused op must equal the unfused composition (affinity block ->
+    diag zero -> mask -> order-pinned matvec) with masks folded into w/rows.
+    The contraction in both arms is `ref.tree_matvec` — the op's defined
+    reduction order — so this asserts the mask folding is exact, bitwise."""
     rng = np.random.default_rng(11)
     cap, d = 48, 12
     v = jnp.asarray(rng.normal(size=(cap, d)), jnp.float32)
@@ -69,7 +71,7 @@ def test_affinity_matvec_matches_unfused_refresh():
     a = ref.affinity_ref(v, v, k)
     a = jnp.where(idx[:, None] == idx[None, :], 0.0, a)
     a = a * (mask[:, None] & mask[None, :])
-    want = a @ w
+    want = ref.tree_matvec(a, w)
 
     got = ref.affinity_matvec_ref(v, idx, v, idx, w, k)
     got = jnp.where(mask, got, 0.0)
